@@ -1,0 +1,53 @@
+"""Shared benchmark utilities: timing, HLO-derived cycle model, CSV output."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+# v5e-class hardware model (same constants as analysis/hlo.py)
+from repro.analysis.hlo import HBM_BW, ICI_BW, PEAK_FLOPS, analyze_module
+
+TPU_CLOCK_HZ = 940e6  # v5e nominal clock: converts seconds -> "cycles"
+
+
+def wall_time(fn, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall seconds per call of a jitted fn (blocks on result)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def hlo_cost_model(fn, *abstract_args, f32_as_bf16: bool = False) -> dict:
+    """Lower+compile fn, run the trip-count-aware analyzer, add time terms.
+
+    Returns flops, hbm_bytes, t_compute, t_memory, est seconds (max of terms)
+    and est cycles at the v5e clock — the structural stand-in for the paper's
+    cycle counts (no TPU present; see EXPERIMENTS.md §Cycles).
+    """
+    compiled = jax.jit(fn).lower(*abstract_args).compile()
+    costs = analyze_module(compiled.as_text(), 1, f32_as_bf16=f32_as_bf16)
+    tc = costs.flops / PEAK_FLOPS
+    tm = costs.hbm_bytes / HBM_BW
+    t = max(tc, tm)
+    return {
+        "flops": costs.flops,
+        "hbm_bytes": costs.hbm_bytes,
+        "t_compute": tc,
+        "t_memory": tm,
+        "t_est": t,
+        "cycles_est": t * TPU_CLOCK_HZ,
+        "bound": "compute" if tc >= tm else "memory",
+    }
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    """One CSV row in the harness-required format."""
+    print(f"{name},{us_per_call:.3f},{derived}")

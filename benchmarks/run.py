@@ -1,0 +1,74 @@
+"""Benchmark aggregator — one suite per paper table.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV rows (stdout), one suite at a time:
+
+    profile    paper Tables 1-2 (forward-pass + per-ODE-step shares)
+    cycles     paper Table 8    (LTC -> GRU -> fused -> banked kernel)
+    stagemap   paper Table 7    (kernel resource-mapping sweep)
+    accuracy   paper Table 6    (MERINDA vs EMILY vs PINN+SR vs SINDy)
+    platform   paper Table 5    (workload runtime/memory/error on AID)
+    roofline   §Roofline        (40-cell dry-run table, markdown to stderr)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale budgets")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (
+        bench_accuracy,
+        bench_cycles,
+        bench_platform,
+        bench_profile,
+        bench_stagemap,
+    )
+
+    suites = {
+        "profile": lambda: bench_profile.main(),
+        "cycles": lambda: bench_cycles.main(),
+        "stagemap": lambda: bench_stagemap.main(),
+        "accuracy": lambda: bench_accuracy.main(fast=not args.full),
+        "platform": lambda: bench_platform.main(fast=not args.full),
+    }
+    failures = []
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        print(f"# suite: {name}", flush=True)
+        try:
+            fn()
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+        print(f"# suite {name} done in {time.time() - t0:.1f}s", flush=True)
+
+    if args.only in (None, "roofline"):
+        try:
+            from benchmarks import roofline
+
+            print("# suite: roofline (markdown)", flush=True)
+            roofline.main()
+        except Exception:
+            failures.append("roofline")
+            traceback.print_exc()
+
+    if failures:
+        print(f"# FAILED suites: {failures}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,30 @@
+"""Batched serving example: continuous batching over a request queue.
+
+    PYTHONPATH=src python examples/serve_lm.py
+
+Drives launch/serve.py (slot-based continuous batching: one compiled prefill
++ one compiled decode program; finished slots are refilled from the queue —
+the "one setup, then continuous streaming" execution the paper targets).
+"""
+
+import sys
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    argv = [
+        "serve_lm",
+        "--arch", "qwen2.5-3b",
+        "--requests", "16",
+        "--slots", "4",
+        "--prompt-len", "32",
+        "--max-new", "24",
+        "--cache-len", "128",
+    ] + sys.argv[1:]
+    sys.argv = argv
+    return serve_main()
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,8 @@
+"""MERINDA-X: Model Recovery + LM framework in JAX for TPU.
+
+Reproduction (and beyond-paper optimization) of
+"Hardware Software Optimizations for Fast Model Recovery on Reconfigurable
+Architectures" (MERINDA), adapted from FPGA dataflow to TPU (Pallas/XLA).
+"""
+
+__version__ = "0.1.0"

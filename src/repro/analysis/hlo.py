@@ -1,0 +1,505 @@
+"""Post-SPMD HLO analysis: trip-count-aware FLOPs / bytes / collective parse.
+
+Why not just ``compiled.cost_analysis()``: XLA counts every ``while`` body
+(lax.scan — our layer stacks, KV-chunk loops, CE chunking) exactly ONCE,
+under-reporting FLOPs/bytes/collectives of an L-layer scanned model by ~L x.
+This module parses the optimized HLO text into its computation graph,
+recovers each while loop's trip count from its condition's comparison
+constant, and accumulates costs with the correct multipliers:
+
+  flops        dot/convolution ops: 2 * prod(result_dims) * prod(contracted)
+               (dots inside fusions are still counted; >99% of model FLOPs)
+  hbm bytes    TPU-fusion simulation: the CPU backend materializes many small
+               kLoop fusions that Mosaic/XLA:TPU would fuse through. A value
+               is MATERIALIZED iff its producer is a heavy op (dot / conv /
+               collective / copy / concat / scatter / DUS / sort / param), it
+               has != 1 consumer, or its single consumer needs materialized
+               operands (dot/conv lhs+rhs). Traffic = one write per
+               materialized value + one read per consuming op.
+  collectives  operand bytes per kind, with ring wire-byte factors:
+                 all-reduce         2 * B * (n-1)/n
+                 all-gather         B_operand * (n-1)
+                 reduce-scatter     B_operand * (n-1)/n
+                 all-to-all         B * (n-1)/n
+                 collective-permute B
+
+bf16 normalization: XLA:CPU float-normalizes bf16 compute to f32 and the
+algebraic simplifier then cancels the bf16 round-trips, so activations that
+are bf16 on TPU appear as f32 end-to-end in CPU HLO. With f32_as_bf16=True
+(set when the model's dtype is bfloat16) every f32 tensor is counted at
+2 bytes/element. This slightly under-counts intentionally-f32 buffers
+(softmax statistics, CE logsumexp, optimizer moments) — a few GB against
+multi-TB totals, uniform across perf variants.
+
+reduce-scatter recognition: the CPU SPMD pipeline lacks the
+ReduceScatterCreator pass, so a partial-sum dot feeding a sharded consumer
+lowers as all-reduce + dynamic-slice(1/n). The TPU pipeline emits a true
+reduce-scatter for the same program, so an all-reduce whose every consumer
+slices out <= 1/group of the result is counted as a reduce-scatter (wire
+B*(n-1)/n instead of 2B*(n-1)/n, and only the sliced shard materializes).
+
+Hardware model (v5e-class, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+
+# heavy ops: results always materialize to memory (MXU outputs, data movers,
+# collectives); their tensor operands must also be materialized
+_HEAVY_OPS = {
+    "dot", "convolution", "copy", "concatenate", "scatter", "gather",
+    "dynamic-slice", "dynamic-update-slice", "sort", "reduce-window",
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "custom-call", "rng", "pad", "reverse",
+    "cholesky", "triangular-solve", "fft",
+}
+# structural ops: no traffic of their own; values flow through
+_SKIP_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "token", "while", "call", "conditional", "domain",
+    "partition-id", "replica-id", "bitcast-convert", "optimization-barrier",
+    "get-dimension-size", "rng-get-and-update-state",
+    "all-reduce-done", "all-gather-done", "async-done", "async-start",
+    "copy-start", "copy-done", "send", "recv", "send-done", "recv-done",
+    "iota", "constant",
+}
+
+
+def _shape_info(type_str: str, f32_as_bf16: bool = False) -> tuple[int, list[int]]:
+    """'bf16[16,4096,512]' -> (bytes, dims). Tuples: summed bytes, first dims."""
+    total, first_dims = 0, None
+    for dt, dims_s in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in dims_s.split(",") if d]
+        n = 1
+        for d in dims:
+            n *= d
+        nbytes = _DTYPE_BYTES[dt]
+        if f32_as_bf16 and dt == "f32":
+            nbytes = 2  # CPU float-normalization artifact (see module doc)
+        total += n * nbytes
+        if first_dims is None:
+            first_dims = dims
+    return total, (first_dims or [])
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    kind: str
+    result_type: str
+    operands: list[str]
+    line: str
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    ops: list[_Op]
+    is_fusion_interior: bool = False
+
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_OP_RE = re.compile(
+    # result type is either a tuple "(...)" (no nested parens in HLO types;
+    # may contain /*index=k*/ comments) or a plain shape token
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^()]*\)|[\w\[\],{}.]+)\s+([\w\-]+)\((.*)$"
+)
+
+
+def parse_hlo(text: str) -> tuple[dict[str, _Computation], str]:
+    """Returns (computations, entry_name)."""
+    comps: dict[str, _Computation] = {}
+    cur: _Computation | None = None
+    entry = ""
+    for raw in text.splitlines():
+        line = raw.strip()
+        if not line:
+            continue
+        if line == "}":
+            cur = None
+            continue
+        if cur is None and line.endswith("{"):
+            hdr = _COMP_HDR.match(line)
+            if hdr:
+                cur = _Computation(hdr.group(2), [])
+                comps[cur.name] = cur
+                if hdr.group(1):
+                    entry = cur.name
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, result_type, kind, rest = m.groups()
+        # operands: % names before the closing paren of the call (attrs after
+        # the call may reference computations, handled separately via _called)
+        operands = re.findall(r"%([\w.\-]+)", rest)
+        cur.ops.append(_Op(name, kind, result_type, operands, line))
+    return comps, entry
+
+
+def _called(op: _Op, attr: str) -> list[str]:
+    out = []
+    for m in re.finditer(rf"{attr}=%?([\w.\-_]+)", op.line):
+        out.append(m.group(1))
+    m = re.search(rf"{attr}=\{{([^}}]*)\}}", op.line)
+    if m:
+        out.extend(re.findall(r"%?([\w.\-_]+)", m.group(1)))
+    return out
+
+
+def _trip_count(op: _Op, comps: dict[str, _Computation]) -> int:
+    """Recover a while loop's trip count.
+
+    Primary: XLA's own loop analysis, serialized on the while op as
+    backend_config={"known_trip_count":{"n":"8"},...}. Fallback: the largest
+    integer constant in the condition computation (lax.scan lowers to
+    `compare(i, constant(N)), direction=LT`). Unknown -> 1 (conservative).
+    """
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', op.line)
+    if m:
+        return int(m.group(1))
+    best = 1
+    for cname in _called(op, "condition"):
+        cond = comps.get(cname)
+        if cond is None:
+            continue
+        consts: dict[str, int] = {}
+        for o in cond.ops:
+            if o.kind == "constant":
+                mm = re.search(r"constant\((-?\d+)\)", o.line)
+                if mm:
+                    consts[o.name] = int(mm.group(1))
+            elif o.kind == "fusion":  # compare may be wrapped in a tiny fusion
+                for f in _called(o, "calls"):
+                    inner = comps.get(f)
+                    if inner:
+                        for io in inner.ops:
+                            if io.kind == "compare":
+                                for opn in o.operands:
+                                    if opn in consts and consts[opn] > best:
+                                        best = consts[opn]
+        for o in cond.ops:
+            if o.kind == "compare":
+                for opn in o.operands:
+                    if opn in consts and consts[opn] > best:
+                        best = consts[opn]
+    return best
+
+
+def _dot_flops(op: _Op, name_type: dict[str, str]) -> float:
+    """2 * prod(result dims) * prod(contracting dims of lhs)."""
+    rbytes, rdims = _shape_info(op.result_type)
+    n_res = 1
+    for d in rdims:
+        n_res *= d
+    contract = 1
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    if m and op.operands:
+        lhs_t = name_type.get(op.operands[0], "")
+        _, ldims = _shape_info(lhs_t)
+        for i in m.group(1).split(","):
+            if i and int(i) < len(ldims):
+                contract *= ldims[int(i)]
+    return 2.0 * n_res * contract
+
+
+def _conv_flops(op: _Op, name_type: dict[str, str]) -> float:
+    rbytes, rdims = _shape_info(op.result_type)
+    n_res = 1
+    for d in rdims:
+        n_res *= d
+    # kernel spatial*input-feature product
+    k = 1
+    if len(op.operands) > 1:
+        _, kdims = _shape_info(name_type.get(op.operands[1], ""))
+        for d in kdims:
+            k *= d
+        _, odims = _shape_info(name_type.get(op.operands[1], ""))
+    return 2.0 * n_res * max(k, 1) / max(rdims[-1] if rdims else 1, 1)
+
+
+def _group_size(line: str, default: int) -> int:
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_ops: dict = dataclasses.field(default_factory=dict)
+    collective_operand_bytes: dict = dataclasses.field(default_factory=dict)
+    collective_wire_bytes: float = 0.0
+
+    def add_collective(self, kind: str, count: float, obytes: float, wire: float):
+        self.collective_ops[kind] = self.collective_ops.get(kind, 0) + count
+        self.collective_operand_bytes[kind] = (
+            self.collective_operand_bytes.get(kind, 0.0) + obytes
+        )
+        self.collective_wire_bytes += wire
+
+
+def analyze_module(text: str, n_devices: int, f32_as_bf16: bool = False) -> HloCosts:
+    """Trip-count-aware cost accumulation over the optimized HLO module."""
+    comps, entry = parse_hlo(text)
+
+    # global op-name -> result type (operand shapes for dot flops / op bytes)
+    name_type: dict[str, str] = {}
+    for c in comps.values():
+        for op in c.ops:
+            name_type[op.name] = op.result_type
+
+    if not entry:  # fallback: computation not called by anyone
+        called_all: set[str] = set()
+        for c in comps.values():
+            for op in c.ops:
+                for attr in ("calls", "to_apply", "body", "condition",
+                             "branch_computations", "true_computation",
+                             "false_computation"):
+                    called_all.update(_called(op, attr))
+        cands = [n for n in comps if n not in called_all]
+        entry = cands[-1] if cands else next(iter(comps), "")
+
+    costs = HloCosts()
+    visiting: set[str] = set()
+
+    def sb(type_str: str) -> int:
+        return _shape_info(type_str, f32_as_bf16)[0]
+
+    def comp_flops_only(name: str, mult: float):
+        """Count dot flops inside fusion-interior computations."""
+        c = comps.get(name)
+        if c is None:
+            return
+        for op in c.ops:
+            if op.kind == "dot":
+                costs.flops += mult * _dot_flops(op, name_type)
+            elif op.kind == "convolution":
+                costs.flops += mult * _conv_flops(op, name_type)
+
+    def walk(name: str, mult: float):
+        c = comps.get(name)
+        if c is None or name in visiting:
+            return
+        visiting.add(name)
+
+        # ---- materialization pass (TPU-fusion simulation, see module doc) --
+        local = {op.name: op for op in c.ops}
+        n_consumers: dict[str, int] = defaultdict(int)
+        consumer_kind: dict[str, str] = {}
+        consumers: dict[str, list[_Op]] = defaultdict(list)
+        for op in c.ops:
+            for o in set(op.operands):
+                if o in local:
+                    n_consumers[o] += 1
+                    consumer_kind[o] = op.kind
+                    consumers[o].append(op)
+        root = c.ops[-1].name if c.ops else ""
+
+        def ar_is_reduce_scatter(op: _Op, n: int) -> bool:
+            """AR whose consumers all slice <= 1/n of it == TPU reduce-scatter.
+
+            Tuple all-reduces are followed through their get-tuple-elements
+            (each component must itself be fully sliced down by 1/n).
+            """
+
+            def sliced_down(src_bytes: int, cons: list[_Op]) -> bool:
+                if not cons:
+                    return False
+                for cop in cons:
+                    if cop.kind == "get-tuple-element":
+                        if not sliced_down(sb(cop.result_type), consumers.get(cop.name, [])):
+                            return False
+                        continue
+                    if sb(cop.result_type) * max(n, 1) > src_bytes + 1:
+                        return False
+                    if not ("slice" in cop.kind or "slice" in cop.line or cop.kind == "fusion"):
+                        return False
+                return True
+
+            return sliced_down(sb(op.result_type), consumers.get(op.name, []))
+
+        def materialized(op: _Op) -> bool:
+            if op.kind in _SKIP_OPS:
+                return False
+            if op.kind in _HEAVY_OPS or op.kind == "while":
+                return True
+            if op.name == root:
+                return True  # computation outputs land in memory
+            nc = n_consumers.get(op.name, 0)
+            if nc != 1:
+                return True  # multi-read (or dead: conservative)
+            # single consumer: fused through unless consumer needs real operands
+            return consumer_kind.get(op.name) in _HEAVY_OPS
+
+        is_mat = {op.name: materialized(op) for op in c.ops}
+        override_bytes: dict[str, int] = {}  # RS-reclassified ARs: 1/n size
+
+        for op in c.ops:
+            kind = op.kind
+            if kind == "while":
+                trips = _trip_count(op, comps)
+                for b in _called(op, "body"):
+                    walk(b, mult * trips)
+                continue
+            if kind in ("call", "custom-call"):
+                for f in _called(op, "to_apply"):
+                    walk(f, mult)
+                if kind == "call":
+                    continue
+            if kind == "conditional":
+                for attr in ("branch_computations", "true_computation", "false_computation"):
+                    for f in _called(op, attr):
+                        walk(f, mult)  # upper bound: all branches
+                continue
+            if kind == "fusion":
+                for f in _called(op, "calls"):
+                    comp_flops_only(f, mult)
+            if kind == "dot":
+                costs.flops += mult * _dot_flops(op, name_type)
+            elif kind == "convolution":
+                costs.flops += mult * _conv_flops(op, name_type)
+
+            # collectives
+            ckind = None
+            for cc in _COLLECTIVES:
+                if kind in (cc, cc + "-start"):
+                    ckind = cc
+                    break
+            if ckind is not None:
+                ob = 0
+                for o in op.operands:
+                    if o in name_type:
+                        ob += sb(name_type[o])
+                if ob == 0:
+                    ob = sb(op.result_type)
+                    if ckind == "all-gather":  # result = operand * n
+                        ob = ob // max(_group_size(op.line, n_devices), 1)
+                n = _group_size(op.line, n_devices)
+                if ckind == "all-reduce" and ar_is_reduce_scatter(op, n):
+                    ckind = "reduce-scatter"  # what the TPU pipeline emits
+                    override_bytes[op.name] = sb(op.result_type) // max(n, 1)
+                if ckind == "all-reduce":
+                    wire = 2 * ob * (n - 1) / max(n, 1)
+                elif ckind == "all-gather":
+                    wire = ob * (n - 1)
+                elif ckind in ("reduce-scatter", "all-to-all"):
+                    wire = ob * (n - 1) / max(n, 1)
+                else:
+                    wire = ob
+                if n > 1:
+                    costs.add_collective(ckind, mult, mult * ob, mult * wire)
+
+            # hbm traffic: write if this value materializes; read each
+            # materialized operand once (fused-through operands are free —
+            # their producer's reads were already charged)
+            if kind in _SKIP_OPS:
+                continue
+            if is_mat.get(op.name, True):
+                rw = override_bytes.get(op.name, sb(op.result_type))
+            else:
+                rw = 0
+            rd = 0
+            for o in set(op.operands):
+                if o in local and not is_mat.get(o, True):
+                    continue  # fused through
+                if o in name_type:
+                    rd += override_bytes.get(o, sb(name_type[o]))
+            costs.hbm_bytes += mult * (rw + rd)
+        visiting.discard(name)
+
+    if entry:
+        walk(entry, 1.0)
+    return costs
+
+
+# ---------------------------------------------------------------------------
+# legacy surface (kept for tests / callers): collective_stats + roofline_terms
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class CollectiveStats:
+    ops: dict
+    operand_bytes: dict
+    wire_bytes: float
+
+    def total_operand_bytes(self) -> int:
+        return sum(self.operand_bytes.values())
+
+
+def collective_stats(hlo_text: str, n_devices: int) -> CollectiveStats:
+    c = analyze_module(hlo_text, n_devices)
+    return CollectiveStats(
+        ops={k: int(v) for k, v in c.collective_ops.items()},
+        operand_bytes=c.collective_operand_bytes,
+        wire_bytes=c.collective_wire_bytes,
+    )
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_dev: float
+    hbm_bytes_per_dev: float
+    coll_wire_bytes_per_dev: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float = 0.0  # 6*N*D (train) / 2*N*D (serve)
+    useful_ratio: float = 0.0
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline_terms(
+    flops_per_dev: float,
+    hbm_bytes_per_dev: float,
+    coll_wire_bytes_per_dev: float,
+    model_flops_global: float = 0.0,
+    n_devices: int = 1,
+) -> Roofline:
+    tc = flops_per_dev / PEAK_FLOPS
+    tm = hbm_bytes_per_dev / HBM_BW
+    tl = coll_wire_bytes_per_dev / ICI_BW
+    terms = {"compute": tc, "memory": tm, "collective": tl}
+    bottleneck = max(terms, key=terms.get)
+    useful = 0.0
+    if model_flops_global and flops_per_dev:
+        useful = model_flops_global / (flops_per_dev * n_devices)
+    return Roofline(
+        flops_per_dev=flops_per_dev,
+        hbm_bytes_per_dev=hbm_bytes_per_dev,
+        coll_wire_bytes_per_dev=coll_wire_bytes_per_dev,
+        t_compute=tc,
+        t_memory=tm,
+        t_collective=tl,
+        bottleneck=bottleneck,
+        model_flops=model_flops_global,
+        useful_ratio=useful,
+    )

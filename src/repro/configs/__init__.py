@@ -1,0 +1,12 @@
+from repro.configs.base import (  # noqa: F401
+    AttentionConfig,
+    ModelConfig,
+    MoEConfig,
+    ShapeConfig,
+    SSMConfig,
+    SHAPES,
+    get_config,
+    get_shape,
+    list_archs,
+    shape_applicable,
+)

@@ -1,0 +1,151 @@
+"""Config schema + registry for architectures and input shapes.
+
+Every assigned architecture ships as src/repro/configs/<id>.py exposing
+``CONFIG`` (exact published dims) and ``SMOKE`` (reduced same-family config
+for CPU smoke tests). ``get_config(name)`` resolves either.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    window: Optional[int] = None  # sliding-window size (SWA); None = full
+    rope_theta: float = 1e6
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    group_size: int = 512  # tokens per dispatch group (bounds dispatch memory)
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int  # N
+    head_dim: int = 64  # P
+    num_heads: int = 0  # H (0 -> derived: expand*d_model/head_dim)
+    num_groups: int = 1  # G (B/C groups)
+    conv_width: int = 4
+    expand: int = 2
+    chunk: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio | gru
+    num_layers: int
+    d_model: int
+    d_ff: int
+    vocab_size: int
+    attn: Optional[AttentionConfig] = None
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # family extras
+    encoder_layers: int = 0  # audio (enc-dec): encoder depth
+    attn_period: int = 0  # hybrid: shared attn block after every k ssm layers
+    num_patches: int = 0  # vlm: image patch embeddings prepended
+    frontend_dim: int = 0  # audio: fbank feature dim (stub projects to d_model)
+    gru_hidden: int = 0  # gru family: mixer hidden size (0 -> d_model)
+    # common
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    remat: str = "full"  # full | dots | none
+    scan_layers: bool = True
+    attn_chunk: int = 1024  # XLA blockwise-attention kv chunk
+    logit_chunk: int = 0  # 0 = unchunked cross-entropy
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab rounded up to a multiple of 256 for even model-axis sharding."""
+        return ((self.vocab_size + 255) // 256) * 256
+
+    @property
+    def ssm_heads(self) -> int:
+        assert self.ssm is not None
+        if self.ssm.num_heads:
+            return self.ssm.num_heads
+        return self.ssm.expand * self.d_model // self.ssm.head_dim
+
+    @property
+    def d_inner(self) -> int:
+        assert self.ssm is not None
+        return self.ssm_heads * self.ssm.head_dim
+
+    def n_params(self) -> int:
+        """Analytic parameter count (embedding included, fp-agnostic)."""
+        from repro.models.params import count_params  # lazy: avoid cycle
+
+        return count_params(self)
+
+    def n_active_params(self) -> int:
+        from repro.models.params import count_params
+
+        return count_params(self, active_only=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+# sub-quadratic-capable archs (SSM state decode or sliding-window cache)
+_LONG_OK = {"mamba2-130m", "zamba2-1.2b", "mixtral-8x22b"}
+
+ARCH_IDS = [
+    "minitron-8b",
+    "internlm2-20b",
+    "qwen2.5-3b",
+    "yi-6b",
+    "mixtral-8x22b",
+    "moonshot-v1-16b-a3b",
+    "phi-3-vision-4.2b",
+    "zamba2-1.2b",
+    "seamless-m4t-medium",
+    "mamba2-130m",
+    # paper's own models (not part of the 40-cell grid)
+    "merinda-gru",
+]
+
+
+def shape_applicable(arch: str, shape: str) -> tuple[bool, str]:
+    """(runnable, reason-if-skipped). See DESIGN.md §long_500k applicability."""
+    if shape == "long_500k" and arch not in _LONG_OK:
+        return False, "full quadratic attention — no sub-quadratic decode path (DESIGN.md)"
+    return True, ""
+
+
+def list_archs() -> list[str]:
+    return list(ARCH_IDS)
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    mod_name = name.replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.SMOKE if smoke else mod.CONFIG

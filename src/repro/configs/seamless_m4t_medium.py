@@ -1,0 +1,30 @@
+"""seamless-m4t-medium — encoder-decoder multimodal transformer
+[arXiv:2308.11596; hf]. "12L" realized as 12 encoder + 12 decoder layers;
+vocab 256206 pads to 256256 for even model-axis sharding (DESIGN.md). The
+audio frontend is a stub: input_specs() provides precomputed 80-d fbank
+frames, projected to d_model by a single learned matrix."""
+
+from repro.configs.base import AttentionConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    family="audio",
+    num_layers=12,
+    encoder_layers=12,
+    d_model=1024,
+    d_ff=4096,
+    vocab_size=256206,
+    attn=AttentionConfig(num_heads=16, num_kv_heads=16, head_dim=64),
+)
+
+SMOKE = ModelConfig(
+    name="seamless-m4t-medium-smoke",
+    family="audio",
+    num_layers=2,
+    encoder_layers=2,
+    d_model=64,
+    d_ff=128,
+    vocab_size=512,
+    attn=AttentionConfig(num_heads=4, num_kv_heads=4, head_dim=16),
+    attn_chunk=32,
+)

@@ -1,0 +1,12 @@
+"""MR core: the paper's contribution.
+
+- ode:          fixed-step ODE solvers (Euler/Heun/RK4) as lax.scan loops
+- library:      polynomial candidate-function library for sparse regression
+- sindy:        STLSQ (sequential thresholded least squares) SINDY baseline
+- ltc:          Liquid Time-Constant cell with iterative fused ODE solver (paper baseline)
+- neural_flow:  GRU-based neural flow cell (the paper's high-level substitution)
+- merinda:      full MERINDA MR model (GRU -> dense sparse head -> ODE loss)
+- node_mr:      NODE-based MR (EMILY/PiNODE-style baseline)
+- pinn_sr:      PINN + sparse regression baseline
+- quant:        fixed-point emulation + piecewise-linear (LUT-analogue) activations
+"""

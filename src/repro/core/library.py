@@ -1,0 +1,159 @@
+"""Polynomial candidate-function library for sparse model recovery.
+
+An n-dimensional model with M-th order nonlinearity draws from
+C(M+n, n) monomial terms (paper §3.1 "Sparsity"). The library maps a state
+(optionally augmented with exogenous inputs) to the monomial feature vector;
+sparse regression then selects p << C(M+n, n) of them.
+
+The exponent table is built *statically* (Python ints) so the jnp evaluation
+is a single vectorized power/product — no data-dependent control flow, which
+keeps it fuseable and TPU-friendly.
+"""
+
+from __future__ import annotations
+
+import itertools
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def n_library_terms(n_vars: int, order: int) -> int:
+    """C(M+n, n): number of monomials of total degree <= order in n_vars."""
+    return math.comb(order + n_vars, n_vars)
+
+
+def exponent_table(n_vars: int, order: int) -> np.ndarray:
+    """[n_terms, n_vars] integer exponents, graded-lex order (constant first)."""
+    rows = []
+    for total in range(order + 1):
+        # all exponent tuples with sum == total, lexicographic
+        for combo in itertools.combinations_with_replacement(range(n_vars), total):
+            e = [0] * n_vars
+            for idx in combo:
+                e[idx] += 1
+            rows.append(e)
+    table = np.asarray(rows, dtype=np.int32)
+    assert table.shape[0] == n_library_terms(n_vars, order)
+    return table
+
+
+def term_names(n_vars: int, order: int, var_names: list[str] | None = None) -> list[str]:
+    names = var_names or [f"x{i}" for i in range(n_vars)]
+    out = []
+    for row in exponent_table(n_vars, order):
+        if not row.any():
+            out.append("1")
+            continue
+        parts = []
+        for name, e in zip(names, row):
+            if e == 1:
+                parts.append(name)
+            elif e > 1:
+                parts.append(f"{name}^{e}")
+        out.append("*".join(parts))
+    return out
+
+
+@partial(jax.jit, static_argnames=("n_vars", "order"))
+def polynomial_features(x: jnp.ndarray, n_vars: int, order: int) -> jnp.ndarray:
+    """Evaluate the monomial library.
+
+    x: [..., n_vars] -> [..., n_terms]. Computed as prod(x**e) over the static
+    exponent table; exact for integer exponents (no log/exp tricks).
+    """
+    table = jnp.asarray(exponent_table(n_vars, order)).astype(x.dtype)  # [n_terms, n_vars]
+    xb = x[..., None, :]
+    # grad-safe x**e: d/dx x**0 = 0 * x**-1 is NaN at x == 0, and jnp.where
+    # alone doesn't block NaN cotangents — the standard double-where guard
+    is_zero = table == 0
+    x_safe = jnp.where(is_zero, jnp.ones_like(xb), xb)
+    powered = jnp.where(is_zero, jnp.ones_like(xb), x_safe**table)
+    return jnp.prod(powered, axis=-1)
+
+
+def normalization_transform(
+    mean: np.ndarray, scale: np.ndarray, n_vars: int, order: int
+) -> np.ndarray:
+    """Basis-change matrix T for z-scored coordinates: phi(z) = T @ phi(y).
+
+    z_j = (y_j - mean_j) / scale_j. Each normalized monomial expands
+    binomially into raw monomials of equal-or-lower degree, so a model
+    recovered on normalized windows maps EXACTLY back to physical units:
+
+        dz/dt = Theta_z . phi(z)
+        dy_i/dt = scale_i * (T^T Theta_z)[., i]     (see denormalize_theta)
+
+    Returns T [n_terms, n_terms] with phi_k(z) = sum_m T[k, m] phi_m(y).
+    """
+    table = exponent_table(n_vars, order)
+    index = {tuple(row): i for i, row in enumerate(table)}
+    n_terms = table.shape[0]
+    T = np.zeros((n_terms, n_terms))
+    for k, row in enumerate(table):
+        # expand prod_j ((y_j - mu_j)/s_j)^e_j term by term
+        acc: dict[tuple, float] = {tuple([0] * n_vars): 1.0}
+        for j, e in enumerate(row):
+            if e == 0:
+                continue
+            # ((y_j - mu)/s)^e = s^-e * sum_r C(e,r) y^r (-mu)^(e-r)
+            expand = {
+                r: math.comb(e, r) * ((-mean[j]) ** (e - r)) / (scale[j] ** e)
+                for r in range(e + 1)
+            }
+            new_acc: dict[tuple, float] = {}
+            for exps, c in acc.items():
+                for r, cr in expand.items():
+                    e2 = list(exps)
+                    e2[j] += r
+                    key = tuple(e2)
+                    new_acc[key] = new_acc.get(key, 0.0) + c * cr
+            acc = new_acc
+        for exps, c in acc.items():
+            T[k, index[exps]] += c
+    return T
+
+
+def denormalize_theta(
+    theta_z: np.ndarray,  # [n_terms, n_state] coefficients in z coordinates
+    mean: np.ndarray,
+    scale: np.ndarray,
+    n_vars: int,
+    order: int,
+    n_state: int | None = None,
+) -> np.ndarray:
+    """Map coefficients recovered on normalized windows to physical units.
+
+    n_vars covers state (+ any unnormalized inputs appended: pass mean=0,
+    scale=1 entries for those dims). Only the first n_state outputs are
+    state derivatives (scaled by their own scale_i).
+    """
+    n_state = n_state if n_state is not None else theta_z.shape[1]
+    mean = np.asarray(mean, float)
+    scale = np.asarray(scale, float)
+    if mean.shape[0] < n_vars:  # inputs appended unnormalized
+        mean = np.concatenate([mean, np.zeros(n_vars - mean.shape[0])])
+        scale = np.concatenate([scale, np.ones(n_vars - scale.shape[0])])
+    T = normalization_transform(mean, scale, n_vars, order)
+    theta_y = T.T @ np.asarray(theta_z, float)  # [n_terms, n_state]
+    return theta_y * scale[None, :n_state]
+
+
+class PolynomialLibrary:
+    """Stateful convenience wrapper (static metadata + jitted evaluation)."""
+
+    def __init__(self, n_vars: int, order: int, var_names: list[str] | None = None):
+        self.n_vars = n_vars
+        self.order = order
+        self.n_terms = n_library_terms(n_vars, order)
+        self.names = term_names(n_vars, order, var_names)
+        self.exponents = exponent_table(n_vars, order)
+
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        return polynomial_features(x, self.n_vars, self.order)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"PolynomialLibrary(n={self.n_vars}, M={self.order}, terms={self.n_terms})"

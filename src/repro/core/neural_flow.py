@@ -1,0 +1,127 @@
+"""GRU neural-flow cell — the paper's high-level substitution (Fig. 1 right).
+
+Following neural-flow theory (Bilos et al. [11]) the NODE layer's solution
+operator F(t, u) is approximated by a *single* gated update per time step,
+subject to the flow conditions (paper Eq. 4):
+
+    F(0, u) = Z(0, u)    (identity at t=0)  and  F invertible.
+
+We implement two cells:
+
+1. ``gru_cell``      — the standard GRU used by the hardware pipeline
+                       (paper Eqs. 12-15); this is what the Pallas kernel
+                       (kernels/gru_scan) accelerates.
+2. ``gru_flow_cell`` — the flow-corrected variant: the update is scaled by a
+                       time gate phi(dt) with phi(0) = 0 (so F(0) = identity)
+                       and contracted by alpha < 1/2 (Lipschitz < 1 =>
+                       h + alpha*g(h) is invertible, Bilos Prop. 2). The dense
+                       layer that approximates F^{-1} lives in merinda.py.
+
+Both share one parameter layout so kernels and reference paths interchange.
+The three gate affines are stored *fused* ([D+H, 3H]) — the TPU analogue of
+the paper's banked-BRAM layout: one wide GEMM per step feeds all MAC lanes.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+INV_LIPSCHITZ_ALPHA = 0.4  # 2/5, Bilos et al. — keeps the flow invertible
+
+
+class GRUParams(NamedTuple):
+    # fused gate weights: columns ordered [reset | update | candidate]
+    w: jnp.ndarray  # [d_in + hidden, 3*hidden]
+    b: jnp.ndarray  # [3*hidden]
+    time_scale: jnp.ndarray  # [hidden] log-scale of the time gate phi
+
+    @property
+    def hidden(self) -> int:
+        return self.w.shape[1] // 3
+
+    @property
+    def d_in(self) -> int:
+        return self.w.shape[0] - self.hidden
+
+
+def init_gru(key: jax.Array, d_in: int, hidden: int, dtype=jnp.float32) -> GRUParams:
+    k1, k2 = jax.random.split(key)
+    scale = 1.0 / jnp.sqrt(d_in + hidden)
+    w = (jax.random.normal(k1, (d_in + hidden, 3 * hidden)) * scale).astype(dtype)
+    return GRUParams(
+        w=w,
+        b=jnp.zeros((3 * hidden,), dtype),
+        time_scale=jnp.zeros((hidden,), dtype),  # phi(dt) = tanh(softplus(ts)*dt)
+    )
+
+
+def _gates(params: GRUParams, x: jnp.ndarray, h: jnp.ndarray):
+    """Fused gate computation: one wide GEMM + one candidate GEMM.
+
+    Returns (r, z, c). The candidate requires r (x) h, so the fused weight
+    matrix is consumed in two MXU passes: [x,h]@W[:, :2H] then [x, r*h]@W[:, 2H:].
+    """
+    hidden = params.hidden
+    xh = jnp.concatenate([x, h], axis=-1)
+    rz = xh @ params.w[:, : 2 * hidden] + params.b[: 2 * hidden]
+    r = jax.nn.sigmoid(rz[..., :hidden])
+    z = jax.nn.sigmoid(rz[..., hidden:])
+    xrh = jnp.concatenate([x, r * h], axis=-1)
+    c = jnp.tanh(xrh @ params.w[:, 2 * hidden :] + params.b[2 * hidden :])
+    return r, z, c
+
+
+def gru_cell(params: GRUParams, x: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """Standard GRU step (paper Eq. 15): h' = (1-z) (x) c + z (x) h."""
+    _, z, c = _gates(params, x, h)
+    return (1.0 - z) * c + z * h
+
+
+def gru_flow_cell(
+    params: GRUParams, x: jnp.ndarray, h: jnp.ndarray, dt: jnp.ndarray | float
+) -> jnp.ndarray:
+    """Flow step: h' = h + phi(dt) * alpha * (1-z) (x) (c - h).
+
+    phi(dt) = tanh(softplus(time_scale) * dt) satisfies phi(0)=0 elementwise,
+    so F(0) = identity; |phi*alpha*(1-z)| < 1/2 keeps the residual map a
+    contraction => invertible flow (initial condition + invertibility, Eq. 4).
+    This is exactly paper Eq. 11 rearranged, with the time gate inserted.
+    """
+    _, z, c = _gates(params, x, h)
+    dt = jnp.asarray(dt, dtype=h.dtype)
+    phi = jnp.tanh(jax.nn.softplus(params.time_scale) * dt)
+    return h + phi * INV_LIPSCHITZ_ALPHA * (1.0 - z) * (c - h)
+
+
+def gru_scan_ref(
+    params: GRUParams,
+    xs: jnp.ndarray,
+    h0: jnp.ndarray,
+    dts: jnp.ndarray | None = None,
+    flow: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Reference sequence scan (pure lax.scan). xs: [B, T, D] -> (h_T, hs [B,T,H]).
+
+    This is the oracle the Pallas kernel (kernels/gru_scan) is tested against.
+    """
+    T = xs.shape[1]
+    if dts is None:
+        dts = jnp.ones((T,), dtype=xs.dtype)
+
+    def body(h, inp):
+        x_t, dt_t = inp
+        h = gru_flow_cell(params, x_t, h, dt_t) if flow else gru_cell(params, x_t, h)
+        return h, h
+
+    h_final, hs = jax.lax.scan(body, h0, (jnp.swapaxes(xs, 0, 1), dts))
+    return h_final, jnp.swapaxes(hs, 0, 1)
+
+
+def gru_op_counts(d_in: int, hidden: int, batch: int = 1) -> dict:
+    """Per-time-step op counts — compare with ltc.ltc_op_counts: no sub-steps."""
+    macs = batch * (d_in + hidden) * 3 * hidden
+    elementwise = batch * hidden * 10
+    return {"macs": macs, "elementwise": elementwise, "sequential_depth": 1}

@@ -1,0 +1,111 @@
+"""Fixed-step ODE solvers as jax.lax control flow.
+
+These are the iterative solvers whose cost the paper eliminates (high-level
+optimization) and also the SOLVE() used inside the MERINDA loss (Fig. 4):
+``Y_est = SOLVE(Y(0), theta_est, U)``.
+
+All solvers integrate ``dy/dt = f(y, u, t, args)`` over a uniform grid and are
+differentiable (pure lax.scan, no custom VJP needed at these sizes).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Dynamics = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray, Any], jnp.ndarray]
+# f(y, u, t, args) -> dy/dt
+
+
+def _euler_step(f: Dynamics, y, u, t, dt, args):
+    return y + dt * f(y, u, t, args)
+
+
+def _heun_step(f: Dynamics, y, u, t, dt, args):
+    k1 = f(y, u, t, args)
+    k2 = f(y + dt * k1, u, t + dt, args)
+    return y + 0.5 * dt * (k1 + k2)
+
+
+def _rk4_step(f: Dynamics, y, u, t, dt, args):
+    k1 = f(y, u, t, args)
+    k2 = f(y + 0.5 * dt * k1, u, t + 0.5 * dt, args)
+    k3 = f(y + 0.5 * dt * k2, u, t + 0.5 * dt, args)
+    k4 = f(y + dt * k3, u, t + dt, args)
+    return y + (dt / 6.0) * (k1 + 2 * k2 + 2 * k3 + k4)
+
+
+_STEPPERS = {"euler": _euler_step, "heun": _heun_step, "rk4": _rk4_step}
+
+
+def odeint(
+    f: Dynamics,
+    y0: jnp.ndarray,
+    ts: jnp.ndarray,
+    us: jnp.ndarray | None = None,
+    args: Any = None,
+    method: str = "rk4",
+) -> jnp.ndarray:
+    """Integrate f over the time grid ``ts`` (shape [T]).
+
+    us: optional exogenous inputs sampled on the same grid, shape [T, m]
+        (zero-order hold within a step).
+    Returns the trajectory, shape [T, *y0.shape]; trajectory[0] == y0.
+    """
+    step = _STEPPERS[method]
+    if us is None:
+        us = jnp.zeros((ts.shape[0], 0), dtype=y0.dtype)
+
+    def body(y, inp):
+        t, dt, u = inp
+        y_next = step(f, y, u, t, dt, args)
+        return y_next, y_next
+
+    dts = jnp.diff(ts)
+    _, ys = jax.lax.scan(body, y0, (ts[:-1], dts, us[:-1]))
+    return jnp.concatenate([y0[None], ys], axis=0)
+
+
+def solve_ivp_fixed(
+    f: Dynamics,
+    y0: jnp.ndarray,
+    t0: float,
+    t1: float,
+    n_steps: int,
+    us: jnp.ndarray | None = None,
+    args: Any = None,
+    method: str = "rk4",
+) -> jnp.ndarray:
+    """Uniform-grid convenience wrapper; returns [n_steps+1, ...] trajectory."""
+    ts = jnp.linspace(t0, t1, n_steps + 1)
+    return odeint(f, y0, ts, us=us, args=args, method=method)
+
+
+@partial(jax.jit, static_argnames=("f", "method", "n_substeps"))
+def multi_step_solver_cell(
+    f: Dynamics,
+    y: jnp.ndarray,
+    u: jnp.ndarray,
+    dt: jnp.ndarray,
+    args: Any = None,
+    method: str = "euler",
+    n_substeps: int = 6,
+) -> jnp.ndarray:
+    """One *NODE-style cell forward pass*: N sequential solver sub-steps.
+
+    This is the primitive whose cost the paper profiles (Table 1: 87.7% of
+    forward latency; 6 sub-steps) and then removes. Each sub-step depends on
+    the previous -> inherently sequential (lax.scan, cannot parallelize).
+    """
+    step = _STEPPERS[method]
+    sub_dt = dt / n_substeps
+
+    def body(y, i):
+        y = step(f, y, u, i.astype(y.dtype) * sub_dt, sub_dt, args)
+        return y, None
+
+    y, _ = jax.lax.scan(body, y, jnp.arange(n_substeps))
+    return y

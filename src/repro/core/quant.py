@@ -1,0 +1,141 @@
+"""Fixed-point emulation + piecewise-linear activations (LUT analogue).
+
+The paper's FPGA design uses ap_fixed arithmetic (8-16 b activations,
+12-16 b weights/accumulators) and single-cycle LUT/ROM tables for sigmoid and
+tanh. On TPU we adapt, not port:
+
+- fixed-point Qm.n  ->  symmetric integer fake-quant with a straight-through
+  estimator (training) and true int8 weight storage + per-channel scales for
+  the serving kernel path (kernels/gru_scan int8 variant);
+- LUT activation    ->  piecewise-linear table evaluated as gather + FMA on
+  the VPU. ``pwl_table`` precomputes the segment slopes/intercepts exactly the
+  way the FPGA ROM would be initialized, and ``pwl_apply`` is branch-free.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# fixed-point fake quantization
+# ---------------------------------------------------------------------------
+def quantize_fixed(x: jnp.ndarray, int_bits: int, frac_bits: int) -> jnp.ndarray:
+    """Round to Q(int_bits).(frac_bits) two's-complement grid (saturating)."""
+    scale = jnp.asarray(2.0**frac_bits, x.dtype)
+    lo = -(2.0 ** (int_bits + frac_bits - 1))
+    hi = 2.0 ** (int_bits + frac_bits - 1) - 1
+    q = jnp.clip(jnp.round(x * scale), lo, hi)
+    return q / scale
+
+
+def fake_quant_ste(x: jnp.ndarray, int_bits: int, frac_bits: int) -> jnp.ndarray:
+    """Fake-quant with straight-through gradient (for quantization-aware MR)."""
+    q = quantize_fixed(x, int_bits, frac_bits)
+    return x + jax.lax.stop_gradient(q - x)
+
+
+class Int8Quantized(NamedTuple):
+    values: jnp.ndarray  # int8
+    scale: jnp.ndarray  # per-channel (last dim) float scale
+
+
+def quantize_int8(w: jnp.ndarray, axis: int = -1) -> Int8Quantized:
+    """Symmetric per-channel int8 — the weight format of the serving kernel."""
+    amax = jnp.max(jnp.abs(w), axis=tuple(d for d in range(w.ndim) if d != axis % w.ndim), keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+    return Int8Quantized(values=q, scale=scale.astype(jnp.float32))
+
+
+def dequantize_int8(q: Int8Quantized, dtype=jnp.float32) -> jnp.ndarray:
+    return q.values.astype(dtype) * q.scale.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# piecewise-linear activation tables (the LUT/ROM analogue)
+# ---------------------------------------------------------------------------
+class PWLTable(NamedTuple):
+    x_min: float
+    x_max: float
+    slopes: jnp.ndarray  # [n_segments]
+    intercepts: jnp.ndarray  # [n_segments]
+    left: float  # saturation value below x_min
+    right: float  # saturation value above x_max
+
+
+def pwl_table(
+    fn: Callable[[np.ndarray], np.ndarray],
+    x_min: float,
+    x_max: float,
+    n_segments: int = 64,
+) -> PWLTable:
+    """Build the PWL ROM contents for an elementwise function.
+
+    Segments are uniform (address = high bits of the fixed-point input, as in
+    the FPGA LUT); slope/intercept per segment interpolate fn exactly at the
+    knots, so max error is the second-order remainder within a segment.
+    """
+    knots = np.linspace(x_min, x_max, n_segments + 1)
+    y = fn(knots)
+    slopes = (y[1:] - y[:-1]) / (knots[1:] - knots[:-1])
+    intercepts = y[:-1] - slopes * knots[:-1]
+    return PWLTable(
+        x_min=float(x_min),
+        x_max=float(x_max),
+        slopes=jnp.asarray(slopes, jnp.float32),
+        intercepts=jnp.asarray(intercepts, jnp.float32),
+        left=float(y[0]),
+        right=float(y[-1]),
+    )
+
+
+def pwl_apply(table: PWLTable, x: jnp.ndarray) -> jnp.ndarray:
+    """Branch-free PWL evaluation: segment gather + one FMA (VPU-friendly)."""
+    n = table.slopes.shape[0]
+    width = (table.x_max - table.x_min) / n
+    idx = jnp.clip(((x - table.x_min) / width).astype(jnp.int32), 0, n - 1)
+    y = table.slopes[idx] * x + table.intercepts[idx]
+    y = jnp.where(x < table.x_min, table.left, y)
+    y = jnp.where(x > table.x_max, table.right, y)
+    return y.astype(x.dtype)
+
+
+def _np_sigmoid(x: np.ndarray) -> np.ndarray:
+    return 1.0 / (1.0 + np.exp(-x))
+
+
+def make_sigmoid_table(n_segments: int = 64) -> PWLTable:
+    return pwl_table(_np_sigmoid, -8.0, 8.0, n_segments)
+
+
+def make_tanh_table(n_segments: int = 64) -> PWLTable:
+    return pwl_table(np.tanh, -4.0, 4.0, n_segments)
+
+
+def pwl_max_error(table: PWLTable, fn: Callable[[np.ndarray], np.ndarray], n_probe: int = 20001) -> float:
+    xs = np.linspace(table.x_min, table.x_max, n_probe)
+    approx = np.asarray(pwl_apply(table, jnp.asarray(xs, jnp.float32)))
+    return float(np.max(np.abs(approx - fn(xs))))
+
+
+class QuantConfig(NamedTuple):
+    """Accuracy-budgeted widths (paper: 8-16b act, 12-16b weight/accum)."""
+
+    act_int_bits: int = 3
+    act_frac_bits: int = 13  # 16-bit activations
+    weight_int_bits: int = 2
+    weight_frac_bits: int = 12  # 14-bit weights
+    pwl_segments: int = 64
+
+    @property
+    def act_bits(self) -> int:
+        return self.act_int_bits + self.act_frac_bits
+
+    @property
+    def weight_bits(self) -> int:
+        return self.weight_int_bits + self.weight_frac_bits

@@ -1,0 +1,7 @@
+from repro.data.dynamics import (  # noqa: F401
+    SYSTEMS,
+    SystemSpec,
+    generate_trajectory,
+    get_system,
+)
+from repro.data.windows import make_windows  # noqa: F401

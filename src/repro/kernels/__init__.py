@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+- gru_scan:        fused GRU(-flow) sequence scan — the MERINDA core kernel.
+                   TPU analogue of the paper's DSP/LUT/BRAM-banked FPGA dataflow.
+- ssd_scan:        Mamba2 SSD chunked recurrence (same locality methodology).
+- flash_attention: blockwise causal/sliding-window attention for prefill.
+
+Each kernel package ships kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jit'd public wrapper with interpret/XLA fallbacks) and ref.py (pure-jnp
+oracle used by the allclose test sweeps).
+"""

@@ -1,0 +1,69 @@
+"""Public wrapper: Pallas flash attention on TPU, jnp reference elsewhere.
+
+Differentiability: custom_vjp — fused kernel forward, backward recomputes
+attention through the jnp oracle (flash-style: residuals are q/k/v only;
+the O(S^2) score matrix is never materialized on the forward pass).
+Tests pass interpret=True to execute the kernel body on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as _k
+from repro.kernels.flash_attention import ref as _ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _fa_kernel_cvjp(q, k, v, causal, window, q_offset, block_q, block_k):
+    return _k.flash_attention_pallas(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        block_q=block_q, block_k=block_k,
+        interpret=jax.default_backend() != "tpu",
+    )
+
+
+def _fa_fwd(q, k, v, causal, window, q_offset, block_q, block_k):
+    return _fa_kernel_cvjp(q, k, v, causal, window, q_offset, block_q, block_k), (q, k, v)
+
+
+def _fa_bwd(causal, window, q_offset, block_q, block_k, res, ct):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q, k, v: _ref.attention_reference(
+            q, k, v, causal=causal, window=window, q_offset=q_offset
+        ),
+        q, k, v,
+    )
+    return vjp(ct)
+
+
+_fa_kernel_cvjp.defvjp(_fa_fwd, _fa_bwd)
+
+
+def flash_attention(
+    q: jnp.ndarray,  # [B, S, QH, Dh] — model layout
+    k: jnp.ndarray,  # [B, S, KH, Dh]
+    v: jnp.ndarray,  # [B, S, KH, Dh]
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    force_reference: bool = False,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Public API takes the model layout [B, S, H, D]; the kernel and its
+    oracle work head-major [B, H, S, D] (grid = batch x head x blocks)."""
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    use_kernel = (jax.default_backend() == "tpu") or bool(interpret)
+    if force_reference or not use_kernel:
+        out = _ref.attention_reference(qt, kt, vt, causal=causal, window=window, q_offset=q_offset)
+    else:
+        out = _fa_kernel_cvjp(qt, kt, vt, causal, window, q_offset, block_q, block_k)
+    return jnp.swapaxes(out, 1, 2)

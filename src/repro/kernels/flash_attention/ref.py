@@ -1,0 +1,34 @@
+"""Dense-softmax oracle for the flash attention kernel (GQA, causal, SWA)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_reference(
+    q: jnp.ndarray,  # [B, QH, Sq, Dh]
+    k: jnp.ndarray,  # [B, KH, Sk, Dh]
+    v: jnp.ndarray,  # [B, KH, Sk, Dh]
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """q_offset: absolute position of q[0] (for decode/chunked prefill)."""
+    B, QH, Sq, Dh = q.shape
+    KH, Sk = k.shape[1], k.shape[2]
+    group = QH // KH
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    scale = 1.0 / jnp.sqrt(Dh).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v).astype(q.dtype)

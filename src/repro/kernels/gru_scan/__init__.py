@@ -1,0 +1,1 @@
+from repro.kernels.gru_scan.ops import gru_scan  # noqa: F401

@@ -1,0 +1,127 @@
+"""Public jit'd wrapper for the fused GRU scan.
+
+Dispatch:  TPU backend -> Pallas kernel;  anywhere else -> interpret mode
+(kernel body executed in Python, semantics-identical) unless
+``force_reference`` picks the lax.scan oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.neural_flow import GRUParams
+from repro.core.quant import make_sigmoid_table, make_tanh_table, quantize_int8
+from repro.kernels.gru_scan import kernel as _k
+from repro.kernels.gru_scan import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+import functools as _functools
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8))
+def _gru_kernel_cvjp(xs, h0, wx, wh, b, time_scale, dts, flow, block_b):
+    return _k.gru_scan_pallas(
+        xs, h0, wx, wh, b, time_scale, dts,
+        flow=flow, block_b=block_b, interpret=not _on_tpu(),
+    )
+
+
+def _gru_fwd(xs, h0, wx, wh, b, time_scale, dts, flow, block_b):
+    out = _gru_kernel_cvjp(xs, h0, wx, wh, b, time_scale, dts, flow, block_b)
+    return out, (xs, h0, wx, wh, b, time_scale, dts)
+
+
+def _gru_bwd(flow, block_b, res, ct):
+    xs, h0, wx, wh, b, time_scale, dts = res
+    _, vjp = jax.vjp(
+        lambda *a: _ref.gru_scan_reference(*a, flow=flow), xs, h0, wx, wh, b, time_scale, dts
+    )
+    return vjp(ct)
+
+
+_gru_kernel_cvjp.defvjp(_gru_fwd, _gru_bwd)
+
+
+def gru_scan(
+    params: GRUParams,
+    xs: jnp.ndarray,  # [B, T, D]
+    h0: jnp.ndarray,  # [B, H]
+    dts: jnp.ndarray | None = None,
+    flow: bool = True,
+    block_b: int | None = None,
+    force_reference: bool = False,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused GRU(-flow) scan. Returns (h_final [B,H], hs [B,T,H]).
+
+    Dispatch: Pallas kernel on TPU; lax.scan reference elsewhere. Tests pass
+    interpret=True to execute the kernel body on CPU."""
+    B, T, D = xs.shape
+    H = params.hidden
+    if dts is None:
+        dts = jnp.ones((T,), xs.dtype)
+    use_kernel = _on_tpu() or bool(interpret)
+    if force_reference or not use_kernel:
+        hs = _ref.gru_scan_reference(
+            xs, h0, params.w[:D], params.w[D:], params.b, params.time_scale, dts, flow=flow
+        )
+    else:
+        hs = _gru_kernel_cvjp(
+            xs, h0, params.w[:D], params.w[D:], params.b, params.time_scale, dts,
+            flow, block_b,
+        )
+    return hs[:, -1, :], hs
+
+
+def gru_scan_int8(
+    params: GRUParams,
+    xs: jnp.ndarray,
+    h0: jnp.ndarray,
+    dts: jnp.ndarray | None = None,
+    n_seg: int = 16,
+    block_b: int | None = None,
+    force_reference: bool = False,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Serving path: int8 weights + PWL activations (standard GRU).
+
+    Quantizes on the fly from float params — production would cache the
+    quantized weights; the kernel signature takes them pre-quantized.
+    """
+    B, T, D = xs.shape
+    if dts is None:
+        dts = jnp.ones((T,), jnp.float32)
+    wxq = quantize_int8(params.w[:D], axis=-1)
+    whq = quantize_int8(params.w[D:], axis=-1)
+    sig_t = make_sigmoid_table(n_seg)
+    tanh_t = make_tanh_table(n_seg)
+    sig_tab = jnp.stack([sig_t.slopes, sig_t.intercepts])
+    tanh_tab = jnp.stack([tanh_t.slopes, tanh_t.intercepts])
+    if not (_on_tpu() or bool(interpret)):
+        force_reference = True
+    if force_reference:
+        hs = _ref.gru_scan_int8_reference(
+            xs, h0, wxq.values, whq.values, wxq.scale, whq.scale, params.b, dts, sig_t, tanh_t
+        )
+    else:
+        hs = _k.gru_scan_pallas_int8(
+            xs,
+            h0,
+            wxq.values,
+            whq.values,
+            wxq.scale.reshape(-1),
+            whq.scale.reshape(-1),
+            params.b,
+            dts,
+            sig_tab,
+            tanh_tab,
+            block_b=block_b,
+            interpret=not _on_tpu(),
+            n_seg=n_seg,
+        )
+    return hs[:, -1, :], hs

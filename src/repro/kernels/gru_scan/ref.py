@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for the fused GRU scan kernel.
+
+Delegates to core.neural_flow.gru_scan_ref (single source of truth for the
+step math) and adds the int8/PWL reference path.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.neural_flow import GRUParams, gru_scan_ref
+from repro.core.quant import PWLTable, pwl_apply
+
+
+def gru_scan_reference(
+    xs: jnp.ndarray,  # [B, T, D]
+    h0: jnp.ndarray,  # [B, H]
+    wx: jnp.ndarray,  # [D, 3H]
+    wh: jnp.ndarray,  # [H, 3H]
+    b: jnp.ndarray,  # [3H]
+    time_scale: jnp.ndarray,  # [H]
+    dts: jnp.ndarray,  # [T]
+    flow: bool = True,
+) -> jnp.ndarray:
+    params = GRUParams(w=jnp.concatenate([wx, wh], axis=0), b=b, time_scale=time_scale)
+    _, hs = gru_scan_ref(params, xs, h0, dts=dts, flow=flow)
+    return hs
+
+
+def gru_scan_int8_reference(
+    xs, h0, wxq, whq, wx_scale, wh_scale, b, dts, sig_table: PWLTable, tanh_table: PWLTable
+) -> jnp.ndarray:
+    """Int8-dequant + PWL-activation oracle (standard GRU, float32 math)."""
+    import jax
+
+    f32 = jnp.float32
+    wx = wxq.astype(f32) * wx_scale
+    wh = whq.astype(f32) * wh_scale
+    H = h0.shape[-1]
+
+    def cell(h, x):
+        gx = x.astype(f32) @ wx
+        gh = h @ wh[:, : 2 * H]
+        r = pwl_apply(sig_table, gx[:, :H] + gh[:, :H] + b[:H])
+        z = pwl_apply(sig_table, gx[:, H : 2 * H] + gh[:, H:] + b[H : 2 * H])
+        c = pwl_apply(tanh_table, gx[:, 2 * H :] + (r * h) @ wh[:, 2 * H :] + b[2 * H :])
+        h = (1.0 - z) * c + z * h
+        return h, h
+
+    _, hs = jax.lax.scan(cell, h0.astype(f32), jnp.swapaxes(xs, 0, 1))
+    return jnp.swapaxes(hs, 0, 1)

@@ -1,0 +1,77 @@
+"""Public wrapper for the SSD scan: Pallas on TPU, interpret elsewhere,
+chunked-jnp reference on demand (also the XLA model path).
+
+Differentiability: pallas_call has no JVP rule, so the kernel path carries a
+custom_vjp — fused kernel on the forward pass, backward by recomputation
+through the chunked-jnp oracle (the flash-attention pattern: residuals are
+the small primal inputs, never the O(T) intermediate states)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan import kernel as _k
+from repro.kernels.ssd_scan import ref as _ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
+def _ssd_kernel_cvjp(x, dt, A, bm, cm, D, chunk):
+    return _k.ssd_scan_pallas(
+        x, dt, A, bm, cm, D, chunk=chunk, interpret=jax.default_backend() != "tpu"
+    )
+
+
+def _ssd_fwd(x, dt, A, bm, cm, D, chunk):
+    out = _ssd_kernel_cvjp(x, dt, A, bm, cm, D, chunk)
+    return out, (x, dt, A, bm, cm, D)
+
+
+def _ssd_bwd(chunk, res, cts):
+    x, dt, A, bm, cm, D = res
+    _, vjp = jax.vjp(lambda *a: _ref.ssd_chunked(*a, chunk=chunk), x, dt, A, bm, cm, D)
+    return vjp(cts)
+
+
+_ssd_kernel_cvjp.defvjp(_ssd_fwd, _ssd_bwd)
+
+
+def ssd_scan(
+    x: jnp.ndarray,  # [B, T, H, P]
+    dt: jnp.ndarray,  # [B, T, H]
+    A: jnp.ndarray,  # [H]
+    bm: jnp.ndarray,  # [B, T, G, N]
+    cm: jnp.ndarray,  # [B, T, G, N]
+    D: jnp.ndarray,  # [H]
+    chunk: int = 128,
+    force_reference: bool = False,
+    initial_state: jnp.ndarray | None = None,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y [B,T,H,P], final_state [B,H,N,P]).
+
+    Dispatch: Pallas kernel on TPU; chunked-jnp reference elsewhere (same
+    algorithm — the dry-run HLO then reflects the real chunked dataflow, not
+    the interpret-mode emulation). Tests pass interpret=True to execute the
+    kernel body on CPU for correctness sweeps."""
+    T = x.shape[1]
+    pad = (-T) % chunk
+    if pad:
+        # zero-pad to a chunk multiple. Padded steps use dt=0 so the decay is
+        # exp(0)=1 and the injection is 0 — the carried state is exact.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bm = jnp.pad(bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cm = jnp.pad(cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    if interpret is None:
+        interpret = False  # auto: kernel only where it lowers natively
+    use_kernel = (jax.default_backend() == "tpu") or interpret
+    if force_reference or initial_state is not None or not use_kernel:
+        # the kernel currently always starts from S=0; prefills with a carried
+        # state (rare) use the jnp path
+        y, s = _ref.ssd_chunked(x, dt, A, bm, cm, D, chunk=chunk, initial_state=initial_state)
+    else:
+        y, s = _ssd_kernel_cvjp(x, dt, A, bm, cm, D, chunk)
+    return (y[:, :T] if pad else y), s

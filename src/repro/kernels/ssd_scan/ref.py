@@ -1,0 +1,140 @@
+"""Pure-jnp oracles for the Mamba2 SSD scan.
+
+Two formulations:
+- ``ssd_recurrent``: the literal per-step recurrence (ground truth; O(T) scan)
+- ``ssd_chunked``:   the chunked/state-passing formulation (identical math,
+                     the layout the Pallas kernel implements; also the XLA
+                     model path used by models/mamba2.py)
+
+Semantics (SSD, Dao & Gu 2024):
+    S_t = exp(dt_t * A_h) * S_{t-1} + dt_t * B_t (outer) x_t
+    y_t = C_t @ S_t + D_h * x_t
+with multi-head x (heads H, head dim P) and grouped B/C (groups G, state N).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _expand_groups(bm: jnp.ndarray, H: int) -> jnp.ndarray:
+    """[B,T,G,N] -> [B,T,H,N] by repeating each group over its heads."""
+    G = bm.shape[2]
+    return jnp.repeat(bm, H // G, axis=2)
+
+
+def ssd_recurrent(
+    x: jnp.ndarray,  # [B, T, H, P]
+    dt: jnp.ndarray,  # [B, T, H] (positive)
+    A: jnp.ndarray,  # [H] (negative)
+    bm: jnp.ndarray,  # [B, T, G, N]
+    cm: jnp.ndarray,  # [B, T, G, N]
+    D: jnp.ndarray,  # [H]
+    initial_state: jnp.ndarray | None = None,  # [B, H, N, P]
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y [B,T,H,P], final_state [B,H,N,P])."""
+    B, T, H, P = x.shape
+    N = bm.shape[-1]
+    bm_h = _expand_groups(bm, H)
+    cm_h = _expand_groups(cm, H)
+    S0 = initial_state if initial_state is not None else jnp.zeros((B, H, N, P), jnp.float32)
+
+    def step(S, inp):
+        x_t, dt_t, b_t, c_t = inp  # [B,H,P], [B,H], [B,H,N], [B,H,N]
+        decay = jnp.exp(dt_t * A)[..., None, None]  # [B,H,1,1]
+        inject = (dt_t[..., None, None] * b_t[..., :, None]) * x_t[..., None, :]  # [B,H,N,P]
+        S = decay * S + inject
+        y_t = jnp.einsum("bhn,bhnp->bhp", c_t, S)
+        return S, y_t
+
+    xs = (
+        jnp.moveaxis(x, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(bm_h, 1, 0),
+        jnp.moveaxis(cm_h, 1, 0),
+    )
+    S_final, ys = jax.lax.scan(step, S0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + D[None, None, :, None] * x
+    return y.astype(x.dtype), S_final
+
+
+def ssd_chunked(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    A: jnp.ndarray,
+    bm: jnp.ndarray,
+    cm: jnp.ndarray,
+    D: jnp.ndarray,
+    chunk: int = 128,
+    initial_state: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD: intra-chunk (quadratic in chunk) + sequential state pass."""
+    B, T, H, P = x.shape
+    N = bm.shape[-1]
+    assert T % chunk == 0, f"T={T} not divisible by chunk={chunk}"
+    nc = T // chunk
+    bm_h = _expand_groups(bm, H)
+    cm_h = _expand_groups(cm, H)
+
+    # [B, nc, L, H, ...] views
+    xc = x.reshape(B, nc, chunk, H, P)
+    dtc = dt.reshape(B, nc, chunk, H)
+    bc = bm_h.reshape(B, nc, chunk, H, N)
+    cc = cm_h.reshape(B, nc, chunk, H, N)
+
+    a = dtc * A[None, None, None, :]  # [B,nc,L,H] (negative)
+    cum = jnp.cumsum(a, axis=2)  # inclusive cumsum within chunk
+    total = cum[:, :, -1:, :]  # [B,nc,1,H]
+
+    # intra-chunk: scores[i,j] = (c_i . b_j) * exp(cum_i - cum_j) * dt_j, j <= i
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,nc,L,L,H]
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
+    decay_mat = jnp.where(causal, jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bclhn,bcmhn->bclmh", cc, bc) * decay_mat * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bclmh,bcmhp->bclhp", scores, xc)
+
+    # state contribution of each chunk: S_c = sum_j exp(total - cum_j) dt_j b_j (x) x_j
+    w = jnp.exp(total - cum) * dtc  # [B,nc,L,H]
+    S_chunk = jnp.einsum("bclh,bclhn,bclhp->bchnp", w, bc, xc)  # [B,nc,H,N,P]
+    chunk_decay = jnp.exp(total[:, :, 0, :])  # [B,nc,H]
+
+    # sequential pass of states across chunks
+    S0 = initial_state if initial_state is not None else jnp.zeros((B, H, N, P), jnp.float32)
+
+    def pass_state(S, inp):
+        s_c, dec = inp  # [B,H,N,P], [B,H]
+        S_in = S  # state entering this chunk
+        S = dec[..., None, None] * S + s_c
+        return S, S_in
+
+    S_final, S_enter = jax.lax.scan(
+        pass_state, S0, (jnp.moveaxis(S_chunk, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    )
+    S_enter = jnp.moveaxis(S_enter, 0, 1)  # [B,nc,H,N,P]
+
+    # inter-chunk: y_i += exp(cum_i) * (c_i @ S_enter)
+    y_inter = jnp.einsum("bclhn,bchnp->bclhp", cc * jnp.exp(cum)[..., None], S_enter)
+
+    y = (y_intra + y_inter).reshape(B, T, H, P) + D[None, None, :, None] * x
+    return y.astype(x.dtype), S_final
+
+
+def ssd_decode_step(
+    x: jnp.ndarray,  # [B, H, P] one token
+    dt: jnp.ndarray,  # [B, H]
+    A: jnp.ndarray,  # [H]
+    b: jnp.ndarray,  # [B, G, N]
+    c: jnp.ndarray,  # [B, G, N]
+    D: jnp.ndarray,  # [H]
+    state: jnp.ndarray,  # [B, H, N, P]
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-token state update for serving. Returns (y [B,H,P], new state)."""
+    H = x.shape[1]
+    G = b.shape[1]
+    b_h = jnp.repeat(b, H // G, axis=1)
+    c_h = jnp.repeat(c, H // G, axis=1)
+    decay = jnp.exp(dt * A)[..., None, None]
+    state = decay * state + (dt[..., None, None] * b_h[..., :, None]) * x[..., None, :]
+    y = jnp.einsum("bhn,bhnp->bhp", c_h, state) + D[None, :, None] * x
+    return y.astype(x.dtype), state

@@ -1,0 +1,1 @@
+"""LM-family model zoo: parameter-spec system + family implementations."""

@@ -1,0 +1,241 @@
+"""GQA attention: blockwise (flash-style) XLA path, decode caches, cross-attn.
+
+The train/prefill path is a lax.scan over KV chunks with an online softmax —
+the same algorithm as kernels/flash_attention (which is the TPU fast path),
+expressed in pure jnp so it compiles on any backend and keeps the memory term
+O(S * chunk) instead of O(S^2).
+
+Decode supports two cache layouts:
+- standard:  cache length = seq_len, append at `pos`
+- rolling:   cache length = window (SWA) with modular writes — this is what
+             makes mixtral's long_500k cell sub-quadratic (DESIGN.md)
+Keys are stored post-RoPE (rotated at their global position).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionConfig
+from repro.models.params import ParamSpec
+from repro.models.rope import apply_rope
+from repro.parallel.rules import constraint, sp_gather
+
+NEG_INF = -1e30
+
+
+def attn_specs(a: AttentionConfig, d: int, dtype: str) -> dict:
+    s = 1.0 / (d**0.5)
+    so = 1.0 / ((a.num_heads * a.head_dim) ** 0.5)
+    specs = {
+        "wq": ParamSpec((d, a.num_heads, a.head_dim), ("embed", "heads", "head_dim"), dtype=dtype, scale=s),
+        "wk": ParamSpec((d, a.num_kv_heads, a.head_dim), ("embed", "kv_heads", "head_dim"), dtype=dtype, scale=s),
+        "wv": ParamSpec((d, a.num_kv_heads, a.head_dim), ("embed", "kv_heads", "head_dim"), dtype=dtype, scale=s),
+        "wo": ParamSpec((a.num_heads, a.head_dim, d), ("heads", "head_dim", "embed"), dtype=dtype, scale=so),
+    }
+    if a.qkv_bias:
+        specs["bq"] = ParamSpec((a.num_heads, a.head_dim), ("heads", "head_dim"), dtype=dtype, init="zeros")
+        specs["bk"] = ParamSpec((a.num_kv_heads, a.head_dim), ("kv_heads", "head_dim"), dtype=dtype, init="zeros")
+        specs["bv"] = ParamSpec((a.num_kv_heads, a.head_dim), ("kv_heads", "head_dim"), dtype=dtype, init="zeros")
+    return specs
+
+
+def _qkv(params, x, a: AttentionConfig, positions, rope: bool = True):
+    # explicit SP boundary: gather the residual's seq shards HERE (fwd), with
+    # the cotangent reduce-scattered back to seq shards (bwd) — see
+    # rules.sp_gather. Without it GSPMD all-reduces the full residual per
+    # layer in the backward pass (~2x n/(n-1) more wire than RS).
+    x = sp_gather(x)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if a.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    if rope:
+        q = apply_rope(q, positions, a.rope_theta)
+        k = apply_rope(k, positions, a.rope_theta)
+    q = constraint(q, ("batch", "seq", "act_heads", None))
+    k = constraint(k, ("batch", "seq", "act_heads", None))
+    return q, k, v
+
+
+def _blockwise_attn(
+    q: jnp.ndarray,  # [B, Sq, QH, Dh]
+    k: jnp.ndarray,  # [B, Sk, KH, Dh]
+    v: jnp.ndarray,  # [B, Sk, KH, Dh]
+    causal: bool,
+    window: int | None,
+    q_offset: int,
+    chunk: int,
+) -> jnp.ndarray:
+    """Online-softmax over KV chunks, f32 accumulators.
+
+    GQA layout note: we repeat KV up to the FULL query-head dim rather than
+    grouping q as [KH, G, ...] — QH (e.g. 32) divides the model axis while KH
+    (e.g. 8) does not, so this keeps every attention activation TP-shardable
+    and avoids GSPMD's involuntary full-rematerialization fallback. The repeat
+    is a local slice of the (replicated) KV heads, not extra wire traffic.
+    """
+    B, Sq, QH, Dh = q.shape
+    Sk, KH = k.shape[1], k.shape[2]
+    G = QH // KH
+    scale = 1.0 / (Dh**0.5)
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    k = constraint(k, ("batch", None, "act_heads", None))
+    v = constraint(v, ("batch", None, "act_heads", None))
+    qg = q.astype(jnp.float32) * scale
+
+    chunk = min(chunk, Sk)
+    if Sk % chunk:
+        pad = chunk - Sk % chunk  # pad kv to a chunk multiple; padded = masked
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Sk_p = Sk + pad
+    else:
+        Sk_p = Sk
+    nk = Sk_p // chunk
+    kc = jnp.moveaxis(k.reshape(B, nk, chunk, QH, Dh), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nk, chunk, QH, Dh), 1, 0)
+
+    qpos = (jnp.arange(Sq) + q_offset)[:, None]  # [Sq, 1]
+
+    def body(carry, inp):
+        m, l, acc = carry
+        j, k_j, v_j = inp
+        s = jnp.einsum("bqhd,bchd->bhqc", qg, k_j.astype(jnp.float32))
+        kpos = (j * chunk + jnp.arange(chunk))[None, :]
+        mask = kpos < Sk
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window is not None:
+            mask = mask & (kpos > qpos - window)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhqc,bchd->bhqd", p, v_j.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        carry = (
+            constraint(m_new, ("batch", "act_heads", None)),
+            constraint(l_new, ("batch", "act_heads", None)),
+            constraint(acc_new, ("batch", "act_heads", None, None)),
+        )
+        return carry, None
+
+    m0 = jnp.full((B, QH, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, QH, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, QH, Sq, Dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (jnp.arange(nk), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 1, 2)  # b h q d -> b q h d
+    return out.astype(q.dtype)
+
+
+def attention(
+    params,
+    x: jnp.ndarray,  # [B, S, D]
+    positions: jnp.ndarray,  # [S] or [B, S]
+    a: AttentionConfig,
+    causal: bool = True,
+    chunk: int = 1024,
+) -> jnp.ndarray:
+    """Full-sequence attention (train / prefill), blockwise."""
+    q, k, v = _qkv(params, x, a, positions)
+    out = _blockwise_attn(q, k, v, causal=causal, window=a.window, q_offset=0, chunk=chunk)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def cache_shape(a: AttentionConfig, batch: int, seq_len: int) -> tuple[int, ...]:
+    eff = min(seq_len, a.window) if a.window else seq_len
+    return (batch, eff, a.num_kv_heads, a.head_dim)
+
+
+def prefill_attention(
+    params,
+    x: jnp.ndarray,  # [B, S, D]
+    positions: jnp.ndarray,
+    a: AttentionConfig,
+    cache_len: int,
+    chunk: int = 1024,
+) -> tuple[jnp.ndarray, dict]:
+    """Attention + cache construction. Returns (out, {"k","v"} sized cache_len)."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(params, x, a, positions)
+    out = _blockwise_attn(q, k, v, causal=True, window=a.window, q_offset=0, chunk=chunk)
+    eff = min(cache_len, a.window) if a.window else cache_len
+    if a.window and S >= eff:
+        # rolling cache: keep the last `eff` keys, laid out so slot i holds
+        # the key whose global position == i (mod eff)
+        last_k, last_v = k[:, S - eff :], v[:, S - eff :]
+        roll = (S - eff) % eff
+        ck = jnp.roll(last_k, shift=roll, axis=1)
+        cv = jnp.roll(last_v, shift=roll, axis=1)
+    else:
+        pad = eff - S
+        assert pad >= 0, f"cache_len {eff} < prefill len {S}"
+        ck = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    ck = constraint(ck, ("batch", "cache_seq", "act_heads", None))
+    cv = constraint(cv, ("batch", "cache_seq", "act_heads", None))
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), {"k": ck, "v": cv}
+
+
+def decode_attention(
+    params,
+    x: jnp.ndarray,  # [B, 1, D]
+    pos: jnp.ndarray,  # scalar int32 — position of this token
+    cache: dict,  # {"k","v"}: [B, C, KH, Dh]
+    a: AttentionConfig,
+) -> tuple[jnp.ndarray, dict]:
+    """Single-token decode against the cache (standard or rolling)."""
+    B = x.shape[0]
+    C = cache["k"].shape[1]
+    q, k_new, v_new = _qkv(params, x, a, jnp.full((B, 1), pos), rope=True)
+
+    slot = pos % C if a.window else pos
+    ck = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+    ck = constraint(ck, ("batch", "cache_seq", "act_heads", None))
+    cv = constraint(cv, ("batch", "cache_seq", "act_heads", None))
+
+    KH, Dh = a.num_kv_heads, a.head_dim
+    G = a.num_heads // KH
+    qg = q.reshape(B, KH, G, Dh).astype(jnp.float32) / (Dh**0.5)
+    s = jnp.einsum("bhgd,bchd->bhgc", qg, ck.astype(jnp.float32))
+
+    idx = jnp.arange(C)
+    if a.window:
+        # slot i holds global position p_i = pos - ((pos - i) mod C); valid if p_i >= 0
+        p_i = pos - jnp.mod(pos - idx, C)
+        valid = p_i >= 0
+    else:
+        valid = idx <= pos
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgc,bchd->bhgd", p, cv.astype(jnp.float32))
+    out = out.reshape(B, 1, a.num_heads, Dh).astype(x.dtype)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), {"k": ck, "v": cv}
+
+
+# --- cross-attention (encoder-decoder) --------------------------------------
+def cross_attn_specs(a: AttentionConfig, d: int, dtype: str) -> dict:
+    return attn_specs(a, d, dtype)
+
+
+def cross_kv(params, enc_out: jnp.ndarray, a: AttentionConfig) -> dict:
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, params["wv"])
+    return {"k": k, "v": v}
+
+
+def cross_attention(params, x: jnp.ndarray, kv: dict, a: AttentionConfig, chunk: int = 1024):
+    """Decoder-side cross attention (no mask, no RoPE on cross path)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    if a.qkv_bias:
+        q = q + params["bq"]
+    out = _blockwise_attn(q, kv["k"], kv["v"], causal=False, window=None, q_offset=0, chunk=chunk)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])

@@ -1,0 +1,91 @@
+"""Shared building blocks: RMSNorm, embedding, SwiGLU MLP, cross-entropy."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec
+from repro.parallel.rules import constraint, sp_gather
+
+
+# --- RMSNorm ----------------------------------------------------------------
+def rmsnorm_specs(d: int, dtype: str):
+    return {"scale": ParamSpec((d,), (None,), dtype=dtype, init="ones")}
+
+
+def rmsnorm(params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# --- Embedding / LM head -----------------------------------------------------
+def embed_specs(vocab_padded: int, d: int, dtype: str):
+    return {"tokens": ParamSpec((vocab_padded, d), ("vocab", "embed"), dtype=dtype, scale=0.02)}
+
+
+def embed(params, tokens: jnp.ndarray) -> jnp.ndarray:
+    x = params["tokens"][tokens]  # gather over sharded vocab
+    return constraint(x, ("batch", "seq", "act_embed"))
+
+
+def lm_head_specs(d: int, vocab_padded: int, dtype: str):
+    return {"w": ParamSpec((d, vocab_padded), ("embed", "vocab"), dtype=dtype, scale=0.02)}
+
+
+def lm_head(params, x: jnp.ndarray) -> jnp.ndarray:
+    logits = x @ params["w"]
+    return constraint(logits, ("batch", "seq", "act_vocab"))
+
+
+def cross_entropy(
+    logits: jnp.ndarray,  # [B, S, Vp]
+    labels: jnp.ndarray,  # [B, S] int32; -1 = ignore
+    vocab_size: int,
+    chunk: int = 0,
+) -> jnp.ndarray:
+    """Mean CE over valid positions; padded vocab tail masked out.
+
+    chunk > 0 computes the loss in seq chunks via lax.map (bounds the fp32
+    logsumexp working set for long sequences — a §Perf memory-term knob).
+    """
+
+    def ce(lg, lb):
+        lg = lg.astype(jnp.float32)
+        vp = lg.shape[-1]
+        if vp > vocab_size:
+            mask = jnp.arange(vp) < vocab_size
+            lg = jnp.where(mask, lg, -1e30)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, jnp.maximum(lb, 0)[..., None], axis=-1)[..., 0]
+        valid = (lb >= 0).astype(jnp.float32)
+        return ((lse - gold) * valid).sum(), valid.sum()
+
+    if chunk and logits.shape[1] > chunk and logits.shape[1] % chunk == 0:
+        nseg = logits.shape[1] // chunk
+        lg = logits.reshape(logits.shape[0], nseg, chunk, -1).swapaxes(0, 1)
+        lb = labels.reshape(labels.shape[0], nseg, chunk).swapaxes(0, 1)
+        tot, cnt = jax.lax.map(lambda args: ce(*args), (lg, lb))
+        return tot.sum() / jnp.maximum(cnt.sum(), 1.0)
+    tot, cnt = ce(logits, labels)
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# --- SwiGLU MLP ---------------------------------------------------------------
+def mlp_specs(d: int, f: int, dtype: str):
+    si, sf = 1.0 / (d**0.5), 1.0 / (f**0.5)
+    return {
+        "w_gate": ParamSpec((d, f), ("embed", "mlp"), dtype=dtype, scale=si),
+        "w_up": ParamSpec((d, f), ("embed", "mlp"), dtype=dtype, scale=si),
+        "w_down": ParamSpec((f, d), ("mlp", "embed"), dtype=dtype, scale=sf),
+    }
+
+
+def mlp(params, x: jnp.ndarray) -> jnp.ndarray:
+    # SP boundary: seq all-gather fwd / reduce-scatter bwd (rules.sp_gather)
+    x = sp_gather(x)
+    h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    h = constraint(h, ("batch", "seq", "act_mlp"))
+    return h @ params["w_down"]

@@ -1,0 +1,119 @@
+"""Mamba2 (SSD) layer: projections + depthwise conv + chunked SSD scan.
+
+The scan itself is the paper-methodology kernel (kernels/ssd_scan) on TPU and
+its chunked-jnp oracle elsewhere. Decode keeps (conv window, SSD state) as the
+constant-size cache — this is why the ssm/hybrid archs run long_500k.
+
+Simplification vs the reference CUDA implementation (noted in DESIGN.md): the
+short causal conv is applied to the x stream only (not B/C), and z-gating uses
+silu; both preserve the layer's compute/memory shape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamSpec
+from repro.parallel.rules import constraint
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_decode_step
+
+
+def mamba_specs(cfg: ModelConfig, dtype: str) -> dict:
+    s = cfg.ssm
+    d, H, P, G, N = cfg.d_model, cfg.ssm_heads, s.head_dim, s.num_groups, s.state_dim
+    si = 1.0 / (d**0.5)
+    return {
+        "wz": ParamSpec((d, H, P), ("embed", "ssm_heads", "head_dim"), dtype=dtype, scale=si),
+        "wx": ParamSpec((d, H, P), ("embed", "ssm_heads", "head_dim"), dtype=dtype, scale=si),
+        "wb": ParamSpec((d, G, N), ("embed", "ssm_groups", "ssm_state"), dtype=dtype, scale=si),
+        "wc": ParamSpec((d, G, N), ("embed", "ssm_groups", "ssm_state"), dtype=dtype, scale=si),
+        "wdt": ParamSpec((d, H), ("embed", "ssm_heads"), dtype=dtype, scale=si),
+        "dt_bias": ParamSpec((H,), ("ssm_heads",), dtype="float32", init="const", scale=-2.0),
+        "a_log": ParamSpec((H,), ("ssm_heads",), dtype="float32", init="zeros"),
+        "d_skip": ParamSpec((H,), ("ssm_heads",), dtype="float32", init="ones"),
+        "conv": ParamSpec((s.conv_width, H, P), ("conv", "ssm_heads", "head_dim"), dtype=dtype, scale=0.5),
+        "norm": ParamSpec((H, P), ("ssm_heads", "head_dim"), dtype=dtype, init="ones"),
+        "out": ParamSpec((H, P, d), ("ssm_heads", "head_dim", "embed"), dtype=dtype, scale=si),
+    }
+
+
+def _proj(params, x):
+    z = jnp.einsum("bsd,dhp->bshp", x, params["wz"])
+    xin = jnp.einsum("bsd,dhp->bshp", x, params["wx"])
+    bm = jnp.einsum("bsd,dgn->bsgn", x, params["wb"])
+    cm = jnp.einsum("bsd,dgn->bsgn", x, params["wc"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, params["wdt"]).astype(jnp.float32) + params["dt_bias"]
+    )
+    return z, xin, bm, cm, dt
+
+
+def _causal_conv(xin: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over seq. xin: [B,S,H,P], w: [cw,H,P]."""
+    cw = w.shape[0]
+    pad = jnp.pad(xin, ((0, 0), (cw - 1, 0), (0, 0), (0, 0)))
+    out = jnp.zeros_like(xin, dtype=jnp.float32)
+    for i in range(cw):  # static unroll, cw=4
+        out = out + pad[:, i : i + xin.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out).astype(xin.dtype)
+
+
+def _gated_norm(y: jnp.ndarray, z: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    y = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    return (y * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(z.dtype)
+
+
+def mamba_forward(params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Full-sequence SSD mixer. x: [B, S, D] -> [B, S, D]."""
+    s = cfg.ssm
+    z, xin, bm, cm, dt = _proj(params, x)
+    xin = _causal_conv(xin, params["conv"])
+    xin = constraint(xin, ("batch", "seq", "ssm_heads", None))
+    A = -jnp.exp(params["a_log"])
+    y, _ = ssd_scan(xin, dt, A, bm, cm, params["d_skip"], chunk=s.chunk)
+    y = _gated_norm(y, z, params["norm"], cfg.norm_eps)
+    return jnp.einsum("bshp,hpd->bsd", y, params["out"])
+
+
+def mamba_prefill(params, x: jnp.ndarray, cfg: ModelConfig) -> tuple[jnp.ndarray, dict]:
+    """Forward + cache {conv: [B,cw-1,H,P] (pre-activation tail), state: [B,H,N,P]}."""
+    s = cfg.ssm
+    z, xin, bm, cm, dt = _proj(params, x)
+    conv_tail = xin[:, -(s.conv_width - 1) :]  # raw (pre-conv) inputs
+    xc = _causal_conv(xin, params["conv"])
+    A = -jnp.exp(params["a_log"])
+    y, state = ssd_scan(xc, dt, A, bm, cm, params["d_skip"], chunk=s.chunk)
+    y = _gated_norm(y, z, params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bshp,hpd->bsd", y, params["out"])
+    return out, {"conv": conv_tail, "state": state.astype(jnp.float32)}
+
+
+def mamba_decode(params, x: jnp.ndarray, cache: dict, cfg: ModelConfig) -> tuple[jnp.ndarray, dict]:
+    """Single-token step. x: [B, 1, D]."""
+    s = cfg.ssm
+    z, xin, bm, cm, dt = _proj(params, x)  # seq dim = 1
+    hist = jnp.concatenate([cache["conv"], xin], axis=1)  # [B, cw, H, P]
+    w = params["conv"]
+    xc = jax.nn.silu(
+        sum(hist[:, i].astype(jnp.float32) * w[i].astype(jnp.float32) for i in range(s.conv_width))
+    ).astype(x.dtype)
+    A = -jnp.exp(params["a_log"])
+    y, state = ssd_decode_step(
+        xc, dt[:, 0], A, bm[:, 0], cm[:, 0], params["d_skip"], cache["state"]
+    )
+    y = _gated_norm(y[:, None], z, params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bshp,hpd->bsd", y, params["out"])
+    return out, {"conv": hist[:, 1:], "state": state}
+
+
+def mamba_cache_shapes(cfg: ModelConfig, batch: int) -> dict:
+    s = cfg.ssm
+    H, P, N = cfg.ssm_heads, s.head_dim, s.state_dim
+    return {
+        "conv": ((batch, s.conv_width - 1, H, P), cfg.dtype, ("batch", None, "ssm_heads", None)),
+        "state": ((batch, H, N, P), "float32", ("batch", "ssm_heads", None, None)),
+    }

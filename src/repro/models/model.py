@@ -1,0 +1,592 @@
+"""Model zoo public API.
+
+Families: dense | moe | vlm | ssm | hybrid | audio | gru
+
+Entry points (all functional, params = pytree of arrays):
+    param_specs(cfg)                  -> pytree[ParamSpec]      (no allocation)
+    init_params(key, cfg)             -> pytree[Array]
+    train_loss(params, batch, cfg)    -> (loss, metrics)
+    prefill(params, batch, cfg, cache_len) -> (logits_last [B,Vp], cache)
+    decode_step(params, cache, tokens, pos, cfg) -> (logits [B,Vp], cache)
+    input_specs(cfg, shape)           -> dict[str, ParamSpec]   (dry-run inputs)
+    cache_specs(cfg, batch, cache_len)-> pytree[ParamSpec]
+
+Layer stacks are scanned (one traced layer body, stacked params) with
+configurable remat — required to keep 56-layer compiles tractable and the
+backward memory bounded. The residual stream is sequence-sharded between
+layers (Megatron-style SP) when cfg allows; see parallel/rules.py.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import attention as attn_mod
+from repro.models import mamba2 as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models.layers import (
+    cross_entropy,
+    embed,
+    embed_specs,
+    lm_head,
+    lm_head_specs,
+    mlp,
+    mlp_specs,
+    rmsnorm,
+    rmsnorm_specs,
+)
+from repro.models.params import ParamSpec, materialize, stack_layer, tree_map_specs
+from repro.parallel.rules import constraint
+
+AUDIO_SRC_LEN = 4096  # encoder frame count for the audio enc-dec family
+AUDIO_FEAT = 80  # fbank feature dim supplied by the (stub) frontend
+
+
+# ===========================================================================
+# parameter specs
+# ===========================================================================
+def _decoder_layer_specs(cfg: ModelConfig) -> dict:
+    d, dt = cfg.d_model, cfg.dtype
+    specs: dict[str, Any] = {
+        "ln1": rmsnorm_specs(d, dt),
+        "ln2": rmsnorm_specs(d, dt),
+        "attn": attn_mod.attn_specs(cfg.attn, d, dt),
+    }
+    if cfg.family == "moe":
+        specs["moe"] = moe_mod.moe_specs(cfg.moe, d, cfg.d_ff, dt)
+    else:
+        specs["mlp"] = mlp_specs(d, cfg.d_ff, dt)
+    return specs
+
+
+def _gru_layer_specs(cfg: ModelConfig) -> dict:
+    d, dt = cfg.d_model, cfg.dtype
+    h = cfg.gru_hidden or d
+    s = 1.0 / ((d + h) ** 0.5)
+    return {
+        "ln1": rmsnorm_specs(d, dt),
+        "ln2": rmsnorm_specs(d, dt),
+        "gru": {
+            "w": ParamSpec((d + h, 3 * h), ("embed", "mlp"), dtype=dt, scale=s),
+            "b": ParamSpec((3 * h,), (None,), dtype="float32", init="zeros"),
+            "time_scale": ParamSpec((h,), (None,), dtype="float32", init="zeros"),
+            "out": ParamSpec((h, d), ("mlp", "embed"), dtype=dt, scale=1.0 / (h**0.5)),
+        },
+        "mlp": mlp_specs(d, cfg.d_ff, dt),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    d, dt = cfg.d_model, cfg.dtype
+    specs: dict[str, Any] = {
+        "embed": embed_specs(cfg.vocab_padded, d, dt),
+        "final_norm": rmsnorm_specs(d, dt),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = lm_head_specs(d, cfg.vocab_padded, dt)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        layer = _decoder_layer_specs(cfg)
+        specs["layers"] = tree_map_specs(lambda s: stack_layer(s, cfg.num_layers), layer)
+    elif cfg.family == "ssm":
+        layer = {"ln": rmsnorm_specs(d, dt), "mamba": mamba_mod.mamba_specs(cfg, dt)}
+        specs["layers"] = tree_map_specs(lambda s: stack_layer(s, cfg.num_layers), layer)
+    elif cfg.family == "hybrid":
+        layer = {"ln": rmsnorm_specs(d, dt), "mamba": mamba_mod.mamba_specs(cfg, dt)}
+        specs["layers"] = tree_map_specs(lambda s: stack_layer(s, cfg.num_layers), layer)
+        specs["shared_attn"] = {  # ONE weight-shared transformer block (zamba2)
+            "ln1": rmsnorm_specs(d, dt),
+            "ln2": rmsnorm_specs(d, dt),
+            "attn": attn_mod.attn_specs(cfg.attn, d, dt),
+            "mlp": mlp_specs(d, cfg.d_ff, dt),
+        }
+    elif cfg.family == "audio":
+        specs["frontend"] = {
+            "w": ParamSpec((AUDIO_FEAT, d), ("frontend", "embed"), dtype=dt, scale=AUDIO_FEAT**-0.5)
+        }
+        enc_layer = {
+            "ln1": rmsnorm_specs(d, dt),
+            "ln2": rmsnorm_specs(d, dt),
+            "attn": attn_mod.attn_specs(cfg.attn, d, dt),
+            "mlp": mlp_specs(d, cfg.d_ff, dt),
+        }
+        specs["enc_layers"] = tree_map_specs(lambda s: stack_layer(s, cfg.encoder_layers), enc_layer)
+        specs["enc_norm"] = rmsnorm_specs(d, dt)
+        dec_layer = {
+            "ln1": rmsnorm_specs(d, dt),
+            "ln2": rmsnorm_specs(d, dt),
+            "ln3": rmsnorm_specs(d, dt),
+            "attn": attn_mod.attn_specs(cfg.attn, d, dt),
+            "cross": attn_mod.cross_attn_specs(cfg.attn, d, dt),
+            "mlp": mlp_specs(d, cfg.d_ff, dt),
+        }
+        specs["layers"] = tree_map_specs(lambda s: stack_layer(s, cfg.num_layers), dec_layer)
+    elif cfg.family == "gru":
+        layer = _gru_layer_specs(cfg)
+        specs["layers"] = tree_map_specs(lambda s: stack_layer(s, cfg.num_layers), layer)
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+    return specs
+
+
+def init_params(key: jax.Array, cfg: ModelConfig):
+    return materialize(key, param_specs(cfg))
+
+
+# ===========================================================================
+# layer forwards (full-sequence)
+# ===========================================================================
+def _residual_constraint(x, cfg: ModelConfig):
+    return constraint(x, ("batch", "seq_sharded", "act_embed"))
+
+
+def _dense_layer_fwd(lp, x, positions, cfg: ModelConfig):
+    h = attn_mod.attention(lp["attn"], rmsnorm(lp["ln1"], x, cfg.norm_eps), positions, cfg.attn, chunk=cfg.attn_chunk)
+    x = _residual_constraint(x + h, cfg)
+    if cfg.family == "moe":
+        h, aux = moe_mod.moe_ffn(lp["moe"], rmsnorm(lp["ln2"], x, cfg.norm_eps), cfg.moe)
+    else:
+        h, aux = mlp(lp["mlp"], rmsnorm(lp["ln2"], x, cfg.norm_eps)), jnp.zeros((), jnp.float32)
+    x = _residual_constraint(x + h, cfg)
+    return x, aux
+
+
+def _ssm_layer_fwd(lp, x, cfg: ModelConfig):
+    h = mamba_mod.mamba_forward(lp["mamba"], rmsnorm(lp["ln"], x, cfg.norm_eps), cfg)
+    return _residual_constraint(x + h, cfg)
+
+
+def _shared_block_fwd(sp, x, positions, cfg: ModelConfig):
+    h = attn_mod.attention(sp["attn"], rmsnorm(sp["ln1"], x, cfg.norm_eps), positions, cfg.attn, chunk=cfg.attn_chunk)
+    x = _residual_constraint(x + h, cfg)
+    h = mlp(sp["mlp"], rmsnorm(sp["ln2"], x, cfg.norm_eps))
+    return _residual_constraint(x + h, cfg)
+
+
+def _gru_layer_fwd(lp, x, cfg: ModelConfig):
+    from repro.core.neural_flow import GRUParams, gru_scan_ref
+
+    g = lp["gru"]
+    gp = GRUParams(w=g["w"].astype(jnp.float32), b=g["b"], time_scale=g["time_scale"])
+    xin = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    h0 = jnp.zeros((x.shape[0], g["time_scale"].shape[0]), jnp.float32)
+    _, hs = gru_scan_ref(gp, xin.astype(jnp.float32), h0, flow=True)
+    x = _residual_constraint(x + (hs.astype(x.dtype) @ g["out"]), cfg)
+    h = mlp(lp["mlp"], rmsnorm(lp["ln2"], x, cfg.norm_eps))
+    return _residual_constraint(x + h, cfg)
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)  # full
+
+
+def _scan_stack(stacked, x, body, cfg: ModelConfig):
+    """Run x through stacked layer params; body(lp, x) -> (x, aux_scalar)."""
+
+    def step(carry, lp):
+        x = carry
+        x, aux = body(lp, x)
+        return x, aux
+
+    step = _remat(step, cfg)
+    if cfg.scan_layers:
+        x, auxs = jax.lax.scan(step, x, stacked)
+        return x, jnp.sum(auxs)
+    n = jax.tree.leaves(stacked)[0].shape[0]
+    total = jnp.zeros((), jnp.float32)
+    for i in range(n):
+        lp = jax.tree.map(lambda a: a[i], stacked)
+        x, aux = step(x, lp)
+        total = total + aux
+    return x, total
+
+
+def _segment_bounds(cfg: ModelConfig) -> list[tuple[int, int, bool]]:
+    """Hybrid (zamba2) scheduling: [(lo, hi, shared_attn_after), ...]."""
+    k = cfg.attn_period
+    out = []
+    lo = 0
+    while lo < cfg.num_layers:
+        hi = min(lo + k, cfg.num_layers)
+        out.append((lo, hi, hi - lo == k))
+        lo = hi
+    return out
+
+
+def _tree_slice(tree, lo, hi):
+    return jax.tree.map(lambda a: a[lo:hi], tree)
+
+
+# ===========================================================================
+# forward (training) per family
+# ===========================================================================
+def _backbone(params, x, positions, cfg: ModelConfig):
+    """Token/frame embeddings -> final hidden states. Returns (x, moe_aux)."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        body = lambda lp, x: _dense_layer_fwd(lp, x, positions, cfg)
+        return _scan_stack(params["layers"], x, body, cfg)
+    if cfg.family == "ssm":
+        body = lambda lp, x: (_ssm_layer_fwd(lp, x, cfg), jnp.zeros((), jnp.float32))
+        return _scan_stack(params["layers"], x, body, cfg)
+    if cfg.family == "hybrid":
+        body = lambda lp, x: (_ssm_layer_fwd(lp, x, cfg), jnp.zeros((), jnp.float32))
+        for lo, hi, with_attn in _segment_bounds(cfg):
+            x, _ = _scan_stack(_tree_slice(params["layers"], lo, hi), x, body, cfg)
+            if with_attn:
+                x = _shared_block_fwd(params["shared_attn"], x, positions, cfg)
+        return x, jnp.zeros((), jnp.float32)
+    if cfg.family == "gru":
+        body = lambda lp, x: (_gru_layer_fwd(lp, x, cfg), jnp.zeros((), jnp.float32))
+        return _scan_stack(params["layers"], x, body, cfg)
+    raise ValueError(cfg.family)
+
+
+def _encode_audio(params, frames, cfg: ModelConfig):
+    x = frames.astype(jnp.dtype(cfg.dtype)) @ params["frontend"]["w"]
+    positions = jnp.arange(frames.shape[1])
+
+    def body(lp, x):
+        h = attn_mod.attention(
+            lp["attn"], rmsnorm(lp["ln1"], x, cfg.norm_eps), positions, cfg.attn,
+            causal=False, chunk=cfg.attn_chunk,
+        )
+        x = _residual_constraint(x + h, cfg)
+        h = mlp(lp["mlp"], rmsnorm(lp["ln2"], x, cfg.norm_eps))
+        return _residual_constraint(x + h, cfg), jnp.zeros((), jnp.float32)
+
+    x, _ = _scan_stack(params["enc_layers"], x, body, cfg)
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _decoder_audio(params, x, enc_out, positions, cfg: ModelConfig):
+    def body(lp, x):
+        h = attn_mod.attention(lp["attn"], rmsnorm(lp["ln1"], x, cfg.norm_eps), positions, cfg.attn, chunk=cfg.attn_chunk)
+        x = _residual_constraint(x + h, cfg)
+        kv = attn_mod.cross_kv(lp["cross"], enc_out, cfg.attn)
+        h = attn_mod.cross_attention(lp["cross"], rmsnorm(lp["ln2"], x, cfg.norm_eps), kv, cfg.attn, chunk=cfg.attn_chunk)
+        x = _residual_constraint(x + h, cfg)
+        h = mlp(lp["mlp"], rmsnorm(lp["ln3"], x, cfg.norm_eps))
+        return _residual_constraint(x + h, cfg), jnp.zeros((), jnp.float32)
+
+    x, _ = _scan_stack(params["layers"], x, body, cfg)
+    return x
+
+
+def _assemble_inputs(params, batch, cfg: ModelConfig):
+    """Family-specific input embedding. Returns (x [B,S,D], positions [S])."""
+    if cfg.family == "vlm":
+        tok_x = embed(params["embed"], batch["tokens"])
+        x = jnp.concatenate([batch["patches"].astype(tok_x.dtype), tok_x], axis=1)
+    elif cfg.family == "audio":
+        x = embed(params["embed"], batch["tokens"])
+    else:
+        x = embed(params["embed"], batch["tokens"])
+    positions = jnp.arange(x.shape[1])
+    return x, positions
+
+
+def _logits(params, x, cfg: ModelConfig):
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return constraint(x @ params["embed"]["tokens"].T, ("batch", "seq", "act_vocab"))
+    return lm_head(params["lm_head"], x)
+
+
+def train_loss(params, batch, cfg: ModelConfig):
+    """Teacher-forced CE (+ MoE load-balance aux). batch: tokens/labels (+extras)."""
+    x, positions = _assemble_inputs(params, batch, cfg)
+    if cfg.family == "audio":
+        enc_out = _encode_audio(params, batch["frames"], cfg)
+        x = _decoder_audio(params, x, enc_out, positions, cfg)
+        moe_aux = jnp.zeros((), jnp.float32)
+    else:
+        x, moe_aux = _backbone(params, x, positions, cfg)
+    logits = _logits(params, x, cfg)
+    labels = batch["labels"]
+    if cfg.family == "vlm":  # patch positions carry no labels
+        pad = jnp.full((labels.shape[0], cfg.num_patches), -1, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    ce = cross_entropy(logits, labels, cfg.vocab_size, chunk=cfg.logit_chunk)
+    loss = ce + 0.01 * moe_aux
+    return loss, {"ce": ce, "moe_aux": moe_aux}
+
+
+# ===========================================================================
+# serving: prefill + decode
+# ===========================================================================
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
+    """Abstract cache tree (ParamSpec leaves) for decode dry-runs."""
+    L = cfg.num_layers
+    specs: dict[str, Any] = {}
+    if cfg.family in ("dense", "moe", "vlm"):
+        shape = attn_mod.cache_shape(cfg.attn, batch, cache_len)
+        axes = ("layers", "batch", "cache_seq", "kv_heads", None)
+        kv = ParamSpec((L, *shape), axes, dtype=cfg.dtype, init="zeros")
+        specs["layers"] = {"k": kv, "v": kv}
+    elif cfg.family in ("ssm", "hybrid"):
+        sh = mamba_mod.mamba_cache_shapes(cfg, batch)
+        specs["layers"] = {
+            name: ParamSpec((L, *shape), ("layers", *axes), dtype=dt, init="zeros")
+            for name, (shape, dt, axes) in sh.items()
+        }
+        if cfg.family == "hybrid":
+            n_app = sum(1 for *_, w in _segment_bounds(cfg) if w)
+            shape = attn_mod.cache_shape(cfg.attn, batch, cache_len)
+            axes = ("layers", "batch", "cache_seq", "kv_heads", None)
+            kv = ParamSpec((n_app, *shape), axes, dtype=cfg.dtype, init="zeros")
+            specs["shared_attn"] = {"k": kv, "v": kv}
+    elif cfg.family == "audio":
+        shape = attn_mod.cache_shape(cfg.attn, batch, cache_len)
+        axes = ("layers", "batch", "cache_seq", "kv_heads", None)
+        kv = ParamSpec((L, *shape), axes, dtype=cfg.dtype, init="zeros")
+        cross_shape = (L, batch, AUDIO_SRC_LEN, cfg.attn.num_kv_heads, cfg.attn.head_dim)
+        ckv = ParamSpec(cross_shape, axes, dtype=cfg.dtype, init="zeros")
+        specs["layers"] = {"k": kv, "v": kv, "cross_k": ckv, "cross_v": ckv}
+    elif cfg.family == "gru":
+        h = cfg.gru_hidden or cfg.d_model
+        specs["layers"] = {
+            "state": ParamSpec((L, batch, h), ("layers", "batch", None), dtype="float32", init="zeros")
+        }
+    else:
+        raise ValueError(cfg.family)
+    return specs
+
+
+def prefill(params, batch, cfg: ModelConfig, cache_len: int):
+    """Process the prompt; returns (last-token logits [B, Vp], cache)."""
+    x, positions = _assemble_inputs(params, batch, cfg)
+    caches: dict[str, Any] = {}
+
+    if cfg.family in ("dense", "moe", "vlm"):
+
+        def body(carry, lp):
+            x = carry
+            h, kv = attn_mod.prefill_attention(
+                lp["attn"], rmsnorm(lp["ln1"], x, cfg.norm_eps), positions, cfg.attn,
+                cache_len, chunk=cfg.attn_chunk,
+            )
+            x = _residual_constraint(x + h, cfg)
+            if cfg.family == "moe":
+                h, _ = moe_mod.moe_ffn(lp["moe"], rmsnorm(lp["ln2"], x, cfg.norm_eps), cfg.moe)
+            else:
+                h = mlp(lp["mlp"], rmsnorm(lp["ln2"], x, cfg.norm_eps))
+            x = _residual_constraint(x + h, cfg)
+            return x, kv
+
+        x, kvs = jax.lax.scan(body, x, params["layers"])
+        caches["layers"] = kvs
+    elif cfg.family in ("ssm", "hybrid"):
+
+        def body(carry, lp):
+            x = carry
+            h, cache = mamba_mod.mamba_prefill(lp["mamba"], rmsnorm(lp["ln"], x, cfg.norm_eps), cfg)
+            return _residual_constraint(x + h, cfg), cache
+
+        if cfg.family == "ssm":
+            x, caches["layers"] = jax.lax.scan(body, x, params["layers"])
+        else:
+            segs, attn_caches = _segment_bounds(cfg), []
+            layer_caches = []
+            for lo, hi, with_attn in segs:
+                x, c = jax.lax.scan(body, x, _tree_slice(params["layers"], lo, hi))
+                layer_caches.append(c)
+                if with_attn:
+                    sp = params["shared_attn"]
+                    h, kv = attn_mod.prefill_attention(
+                        sp["attn"], rmsnorm(sp["ln1"], x, cfg.norm_eps), positions, cfg.attn,
+                        cache_len, chunk=cfg.attn_chunk,
+                    )
+                    x = _residual_constraint(x + h, cfg)
+                    h = mlp(sp["mlp"], rmsnorm(sp["ln2"], x, cfg.norm_eps))
+                    x = _residual_constraint(x + h, cfg)
+                    attn_caches.append(kv)
+            caches["layers"] = jax.tree.map(lambda *a: jnp.concatenate(a, 0), *layer_caches)
+            caches["shared_attn"] = jax.tree.map(lambda *a: jnp.stack(a, 0), *attn_caches)
+    elif cfg.family == "audio":
+        enc_out = _encode_audio(params, batch["frames"], cfg)
+
+        def body(carry, lp):
+            x = carry
+            h, kv = attn_mod.prefill_attention(
+                lp["attn"], rmsnorm(lp["ln1"], x, cfg.norm_eps), positions, cfg.attn,
+                cache_len, chunk=cfg.attn_chunk,
+            )
+            x = _residual_constraint(x + h, cfg)
+            ckv = attn_mod.cross_kv(lp["cross"], enc_out, cfg.attn)
+            h = attn_mod.cross_attention(lp["cross"], rmsnorm(lp["ln2"], x, cfg.norm_eps), ckv, cfg.attn, chunk=cfg.attn_chunk)
+            x = _residual_constraint(x + h, cfg)
+            h = mlp(lp["mlp"], rmsnorm(lp["ln3"], x, cfg.norm_eps))
+            x = _residual_constraint(x + h, cfg)
+            return x, {"k": kv["k"], "v": kv["v"], "cross_k": ckv["k"], "cross_v": ckv["v"]}
+
+        x, caches["layers"] = jax.lax.scan(body, x, params["layers"])
+    elif cfg.family == "gru":
+        from repro.core.neural_flow import GRUParams, gru_scan_ref
+
+        def body(carry, lp):
+            x = carry
+            g = lp["gru"]
+            gp = GRUParams(w=g["w"].astype(jnp.float32), b=g["b"], time_scale=g["time_scale"])
+            xin = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+            h0 = jnp.zeros((x.shape[0], g["time_scale"].shape[0]), jnp.float32)
+            h_T, hs = gru_scan_ref(gp, xin.astype(jnp.float32), h0, flow=True)
+            x = _residual_constraint(x + (hs.astype(x.dtype) @ g["out"]), cfg)
+            h = mlp(lp["mlp"], rmsnorm(lp["ln2"], x, cfg.norm_eps))
+            x = _residual_constraint(x + h, cfg)
+            return x, {"state": h_T}
+
+        x, caches["layers"] = jax.lax.scan(body, x, params["layers"])
+    else:
+        raise ValueError(cfg.family)
+
+    logits = _logits(params, x[:, -1:, :], cfg)
+    return logits[:, 0], caches
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
+    """One token through the stack with caches. tokens: [B,1]; pos: scalar."""
+    x = embed(params["embed"], tokens)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+
+        def body(carry, scan_in):
+            x = carry
+            lp, kv = scan_in
+            h, kv = attn_mod.decode_attention(lp["attn"], rmsnorm(lp["ln1"], x, cfg.norm_eps), pos, kv, cfg.attn)
+            x = x + h
+            if cfg.family == "moe":
+                h, _ = moe_mod.moe_ffn(lp["moe"], rmsnorm(lp["ln2"], x, cfg.norm_eps), cfg.moe)
+            else:
+                h = mlp(lp["mlp"], rmsnorm(lp["ln2"], x, cfg.norm_eps))
+            return x + h, kv
+
+        x, kvs = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+        cache = dict(cache, layers=kvs)
+    elif cfg.family in ("ssm", "hybrid"):
+
+        def body(carry, scan_in):
+            x = carry
+            lp, c = scan_in
+            h, c = mamba_mod.mamba_decode(lp["mamba"], rmsnorm(lp["ln"], x, cfg.norm_eps), c, cfg)
+            return x + h, c
+
+        if cfg.family == "ssm":
+            x, new_c = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+            cache = dict(cache, layers=new_c)
+        else:
+            segs = _segment_bounds(cfg)
+            new_layer_caches, new_attn_caches = [], []
+            app = 0
+            for lo, hi, with_attn in segs:
+                x, c = jax.lax.scan(
+                    body, x, (_tree_slice(params["layers"], lo, hi), _tree_slice(cache["layers"], lo, hi))
+                )
+                new_layer_caches.append(c)
+                if with_attn:
+                    sp = params["shared_attn"]
+                    kv = jax.tree.map(lambda a: a[app], cache["shared_attn"])
+                    h, kv = attn_mod.decode_attention(
+                        sp["attn"], rmsnorm(sp["ln1"], x, cfg.norm_eps), pos, kv, cfg.attn
+                    )
+                    x = x + h
+                    x = x + mlp(sp["mlp"], rmsnorm(sp["ln2"], x, cfg.norm_eps))
+                    new_attn_caches.append(kv)
+                    app += 1
+            cache = dict(
+                cache,
+                layers=jax.tree.map(lambda *a: jnp.concatenate(a, 0), *new_layer_caches),
+                shared_attn=jax.tree.map(lambda *a: jnp.stack(a, 0), *new_attn_caches),
+            )
+    elif cfg.family == "audio":
+
+        def body(carry, scan_in):
+            x = carry
+            lp, c = scan_in
+            h, kv = attn_mod.decode_attention(
+                lp["attn"], rmsnorm(lp["ln1"], x, cfg.norm_eps), pos, {"k": c["k"], "v": c["v"]}, cfg.attn
+            )
+            x = x + h
+            ckv = {"k": c["cross_k"], "v": c["cross_v"]}
+            h = attn_mod.cross_attention(lp["cross"], rmsnorm(lp["ln2"], x, cfg.norm_eps), ckv, cfg.attn, chunk=cfg.attn_chunk)
+            x = x + h
+            x = x + mlp(lp["mlp"], rmsnorm(lp["ln3"], x, cfg.norm_eps))
+            return x, dict(c, k=kv["k"], v=kv["v"])
+
+        x, new_c = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+        cache = dict(cache, layers=new_c)
+    elif cfg.family == "gru":
+        from repro.core.neural_flow import GRUParams, gru_flow_cell
+
+        def body(carry, scan_in):
+            x = carry
+            lp, c = scan_in
+            g = lp["gru"]
+            gp = GRUParams(w=g["w"].astype(jnp.float32), b=g["b"], time_scale=g["time_scale"])
+            xin = rmsnorm(lp["ln1"], x, cfg.norm_eps)[:, 0].astype(jnp.float32)
+            h = gru_flow_cell(gp, xin, c["state"], 1.0)
+            x = x + (h.astype(x.dtype) @ g["out"])[:, None]
+            x = x + mlp(lp["mlp"], rmsnorm(lp["ln2"], x, cfg.norm_eps))
+            return x, {"state": h}
+
+        x, new_c = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+        cache = dict(cache, layers=new_c)
+    else:
+        raise ValueError(cfg.family)
+
+    logits = _logits(params, x, cfg)
+    return logits[:, 0], cache
+
+
+# ===========================================================================
+# dry-run input specs
+# ===========================================================================
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins (as ParamSpec) for every model input."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = lambda b, s: ParamSpec((b, s), ("batch", "seq"), dtype="int32", init="zeros")
+    specs: dict[str, Any] = {}
+    if shape.mode == "train":
+        if cfg.family == "vlm":
+            text = S - cfg.num_patches
+            specs["tokens"] = tok(B, text)
+            specs["labels"] = tok(B, text)
+            specs["patches"] = ParamSpec(
+                (B, cfg.num_patches, cfg.d_model), ("batch", None, "act_embed"), dtype=cfg.dtype
+            )
+        elif cfg.family == "audio":
+            specs["tokens"] = tok(B, S)
+            specs["labels"] = tok(B, S)
+            specs["frames"] = ParamSpec(
+                (B, AUDIO_SRC_LEN, AUDIO_FEAT), ("batch", None, None), dtype="float32"
+            )
+        else:
+            specs["tokens"] = tok(B, S)
+            specs["labels"] = tok(B, S)
+    elif shape.mode == "prefill":
+        if cfg.family == "vlm":
+            specs["tokens"] = tok(B, S - cfg.num_patches)
+            specs["patches"] = ParamSpec(
+                (B, cfg.num_patches, cfg.d_model), ("batch", None, "act_embed"), dtype=cfg.dtype
+            )
+        elif cfg.family == "audio":
+            specs["tokens"] = tok(B, S)
+            specs["frames"] = ParamSpec(
+                (B, AUDIO_SRC_LEN, AUDIO_FEAT), ("batch", None, None), dtype="float32"
+            )
+        else:
+            specs["tokens"] = tok(B, S)
+    else:  # decode
+        specs["tokens"] = tok(B, 1)
+        specs["pos"] = ParamSpec((), (), dtype="int32", init="zeros")
+        specs["cache"] = cache_specs(cfg, B, S)
+    return specs

@@ -1,0 +1,102 @@
+"""Mixture-of-Experts FFN: top-k router + capacity-bounded einsum dispatch.
+
+Dropped-token dispatch in the Mesh-TF/MaxText style, with one refinement that
+bounds dispatch memory independently of expert count: tokens are dispatched in
+groups of ``group_size``, so the one-hot dispatch tensor is
+[groups, group_size, E, C] with C = ceil(group_size * top_k * cf / E) —
+total size O(tokens * group_size * top_k * cf), independent of E.
+
+Sharding: expert dim -> model axis when divisible (moonshot 64e), else the
+per-expert ffn dim -> model axis (mixtral 8e on a 16-way axis) — resolved
+automatically by the rules table (parallel/rules.py).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.params import ParamSpec
+from repro.parallel.rules import constraint, sp_gather
+
+
+def moe_specs(m: MoEConfig, d: int, f: int, dtype: str) -> dict:
+    si, sf = 1.0 / (d**0.5), 1.0 / (f**0.5)
+    return {
+        "router": ParamSpec((d, m.num_experts), ("embed", "expert"), dtype="float32", scale=si),
+        "w_gate": ParamSpec((m.num_experts, d, f), ("expert", "embed", "mlp"), dtype=dtype, scale=si),
+        "w_up": ParamSpec((m.num_experts, d, f), ("expert", "embed", "mlp"), dtype=dtype, scale=si),
+        "w_down": ParamSpec((m.num_experts, f, d), ("expert", "mlp", "embed"), dtype=dtype, scale=sf),
+    }
+
+
+def expert_capacity(m: MoEConfig, group_size: int) -> int:
+    c = math.ceil(group_size * m.top_k * m.capacity_factor / m.num_experts)
+    return max(4, min(c, group_size))
+
+
+def moe_ffn(params, x: jnp.ndarray, m: MoEConfig) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, S, D] -> (out [B, S, D], aux_loss scalar).
+
+    aux_loss is the standard load-balancing loss (mean expert fraction x mean
+    router prob, scaled by E).
+    """
+    # SP boundary: seq all-gather fwd / reduce-scatter bwd (rules.sp_gather)
+    x = sp_gather(x)
+    B, S, D = x.shape
+    E, K = m.num_experts, m.top_k
+    g = min(m.group_size, B * S)
+    tokens = x.reshape(-1, D)
+    n_tok = tokens.shape[0]
+    pad = (-n_tok) % g  # pad to a group multiple; padded rows sliced off below
+    if pad:
+        tokens = jnp.pad(tokens, ((0, pad), (0, 0)))
+    ng = tokens.shape[0] // g
+    C = expert_capacity(m, g)
+
+    xt = tokens.reshape(ng, g, D)
+    logits = (xt.astype(jnp.float32) @ params["router"]).astype(jnp.float32)  # [ng, g, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)  # [ng, g, K]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) within its expert queue
+    onehot = jax.nn.one_hot(top_e, E, dtype=jnp.float32)  # [ng, g, K, E]
+    flat = onehot.reshape(ng, g * K, E)
+    pos = jnp.cumsum(flat, axis=1) - 1.0  # [ng, g*K, E]
+    pos = (pos * flat).reshape(ng, g, K, E).sum(-1)  # [ng, g, K] queue slot
+    expert_of = top_e
+    keep = pos < C
+
+    # dispatch/combine tensors: [ng, g, E, C]
+    pos_oh = jax.nn.one_hot(pos, C, dtype=jnp.float32) * keep[..., None]
+    disp = jnp.einsum("ngke,ngkc->ngec", onehot, pos_oh)  # {0,1}
+    comb = jnp.einsum("ngk,ngke,ngkc->ngec", top_p, onehot, pos_oh)
+    del expert_of
+
+    # Sharding: the group (token) dim carries the batch sharding — without it
+    # every dispatch tensor replicates whenever E < model (mixtral 8e on a
+    # 16-way axis) and expert_in alone is O(tokens*D) per DEVICE. The expert
+    # dim takes `model` when divisible (moonshot 64e); otherwise the per-
+    # expert ffn dim does (rules fallback), so one of the two always shards.
+    disp = constraint(disp.astype(x.dtype), ("batch", None, "act_expert", None))
+    expert_in = jnp.einsum("ngec,ngd->necd", disp, xt.astype(x.dtype))  # [ng,E,C,D]
+    expert_in = constraint(expert_in, ("batch", "act_expert", None, "act_embed"))
+    h = jax.nn.silu(jnp.einsum("necd,edf->necf", expert_in, params["w_gate"]))
+    h = h * jnp.einsum("necd,edf->necf", expert_in, params["w_up"])
+    h = constraint(h, ("batch", "act_expert", None, "act_mlp"))
+    expert_out = jnp.einsum("necf,efd->necd", h, params["w_down"])  # [ng,E,C,D]
+    expert_out = constraint(expert_out, ("batch", "act_expert", None, "act_embed"))
+    out = jnp.einsum("ngec,necd->ngd", comb.astype(x.dtype), expert_out)
+    out = constraint(out, ("batch", None, "act_embed"))
+    out = out.reshape(-1, D)[:n_tok]
+
+    # load-balance auxiliary loss
+    frac_tokens = jnp.mean(onehot.sum(2), axis=1)  # [ng, E] fraction routed
+    frac_prob = jnp.mean(probs, axis=1)  # [ng, E]
+    aux = E * jnp.mean(jnp.sum(frac_tokens * frac_prob, axis=-1))
+
+    return out.reshape(B, S, D), aux.astype(jnp.float32)

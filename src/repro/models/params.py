@@ -1,0 +1,111 @@
+"""Parameter-spec system: abstract shapes + logical axes, no framework deps.
+
+Every model exposes ``param_specs(cfg) -> pytree[ParamSpec]``. From the spec
+tree we derive, without ever allocating a full-size model:
+
+- ``abstract(tree)``            ShapeDtypeStructs for the dry-run
+- ``shardings(tree, mesh)``     NamedShardings from the logical axes
+- ``materialize(key, tree)``    real arrays for smoke tests / real training
+- ``count_params(cfg)``         analytic parameter counts (MoE: active subset)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.rules import named_sharding
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]
+    dtype: str = "bfloat16"
+    init: str = "normal"  # normal | zeros | ones | const
+    scale: float = 1.0  # std for normal, value for const
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn, tree):
+    return jax.tree.map(fn, tree, is_leaf=is_spec)
+
+
+def abstract(tree):
+    return tree_map_specs(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype)), tree)
+
+
+def shardings(tree, mesh, rules=None):
+    return tree_map_specs(lambda s: named_sharding(mesh, s.shape, s.axes, rules), tree)
+
+
+def partition_specs(tree, mesh, rules=None):
+    from repro.parallel.rules import partition_spec
+
+    return tree_map_specs(lambda s: partition_spec(s.shape, s.axes, mesh, rules), tree)
+
+
+def _init_one(key, spec: ParamSpec):
+    dt = jnp.dtype(spec.dtype)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dt)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dt)
+    if spec.init == "const":
+        return jnp.full(spec.shape, spec.scale, dt)
+    return (jax.random.normal(key, spec.shape, jnp.float32) * spec.scale).astype(dt)
+
+
+def materialize(key, tree):
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    return treedef.unflatten([_init_one(k, s) for k, s in zip(keys, leaves)])
+
+
+def stack_layer(spec: ParamSpec, n_layers: int) -> ParamSpec:
+    """Add the leading stacked-layers dim (scanned over at apply time)."""
+    return ParamSpec(
+        shape=(n_layers, *spec.shape),
+        axes=("layers", *spec.axes),
+        dtype=spec.dtype,
+        init=spec.init,
+        scale=spec.scale,
+    )
+
+
+def spec_bytes(tree) -> int:
+    total = 0
+    for s in jax.tree.leaves(tree, is_leaf=is_spec):
+        total += math.prod(s.shape) * jnp.dtype(s.dtype).itemsize
+    return total
+
+
+def spec_count(tree) -> int:
+    return sum(math.prod(s.shape) for s in jax.tree.leaves(tree, is_leaf=is_spec))
+
+
+def count_params(cfg, active_only: bool = False) -> int:
+    """Analytic param count from the spec tree. active_only: MoE top-k share."""
+    from repro.models.model import param_specs  # lazy to avoid cycle
+
+    tree = param_specs(cfg)
+    if not active_only or cfg.moe is None:
+        return spec_count(tree)
+    total = 0
+    for path, s in jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_spec)[0]:
+        n = math.prod(s.shape)
+        if "expert" in s.axes:  # routed expert weights: only top_k/E active
+            n = n * cfg.moe.top_k // cfg.moe.num_experts
+        total += n
+    return total

@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update  # noqa: F401
+from repro.optim.schedules import cosine_schedule, linear_warmup_cosine  # noqa: F401
+from repro.optim.clip import clip_by_global_norm, global_norm  # noqa: F401

@@ -1,0 +1,70 @@
+"""AdamW implemented from scratch (no optax in this environment).
+
+Design notes for scale:
+- m/v are fp32 regardless of param dtype (mixed-precision training keeps
+  params in bf16 with fp32 master copies handled by the trainer).
+- The state is a pytree mirroring params, so the sharding rules that shard a
+  parameter shard its optimizer moments identically (ZeRO-1 falls out of the
+  FSDP param sharding — see parallel/rules.py).
+- Update math follows Loshchilov & Hutter: decoupled weight decay applied to
+  the parameter, not the gradient moment.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray  # scalar int32
+    m: Any  # pytree like params (fp32)
+    v: Any  # pytree like params (fp32)
+
+
+def adamw_init(params: Any) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def adamw_update(
+    grads: Any,
+    state: AdamWState,
+    params: Any,
+    lr: float | jnp.ndarray,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> tuple[Any, AdamWState]:
+    """Returns (new_params, new_state). Params keep their dtype."""
+    step = state.step + 1
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1.0 - b1) * g32
+        v = b2 * v + (1.0 - b2) * jnp.square(g32)
+        m_hat = m / bc1
+        v_hat = v / bc2
+        delta = m_hat / (jnp.sqrt(v_hat) + eps)
+        p32 = p.astype(jnp.float32)
+        new_p = p32 - lr * (delta + weight_decay * p32)
+        return new_p.astype(p.dtype), m, v
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, m=new_m, v=new_v)

@@ -1,0 +1,63 @@
+"""Int8 error-feedback gradient compression for the cross-pod reduction.
+
+At 1000-node scale the cross-pod (DCN/ICI-bridge) links are the scarce
+resource; we compress the pod-level gradient exchange 4x:
+
+    e      <- error buffer (fp32, sharded like the gradient)
+    g'     = g + e
+    q      = int8 per-tensor symmetric quantization of g'
+    g_hat  = mean over pods of dequant(all_gather(q))     <- int8 on the wire
+    e'     = g' - dequant(q)                              <- local error feedback
+
+Expressed with shard_map over the `pod` axis only (data/model stay `auto`,
+i.e. GSPMD-partitioned as usual), so the int8 all_gather is visible in the
+compiled HLO — the dry-run's collective-bytes accounting sees the compressed
+wire format.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize(g: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    amax = jnp.max(jnp.abs(g))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_reduce_grads(grads: Any, errors: Any, axis_name: str = "pod"):
+    """Inside shard_map: compressed mean-reduce over `axis_name`.
+
+    Returns (reduced_grads fp32-ish, new_errors). grads/errors are pytrees.
+    """
+    n = jax.lax.axis_size(axis_name)
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = _quantize(g32)
+        qs = jax.lax.all_gather(q, axis_name)  # int8 on the wire
+        scales = jax.lax.all_gather(scale, axis_name)
+        deq = (qs.astype(jnp.float32) * scales.reshape((-1,) + (1,) * g.ndim)).mean(0)
+        new_e = g32 - q.astype(jnp.float32) * scale
+        return deq.astype(g.dtype), new_e
+
+    flat_g, td = jax.tree.flatten(grads)
+    flat_e = td.flatten_up_to(errors)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return td.unflatten([o[0] for o in out]), td.unflatten([o[1] for o in out])
+
+
+def init_error_buffers(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compression_error_bound(bits: int = 8) -> float:
+    """Max relative rounding error of symmetric b-bit quantization (per step,
+    before error feedback cancels it across steps): 0.5 / (2^(b-1) - 1)."""
+    return 0.5 / (2 ** (bits - 1) - 1)

@@ -1,0 +1,7 @@
+from repro.parallel.rules import (  # noqa: F401
+    DEFAULT_RULES,
+    constraint,
+    named_sharding,
+    partition_spec,
+    use_mesh_rules,
+)

@@ -1,0 +1,12 @@
+from repro.runtime.heartbeat import HeartbeatRegistry, StragglerDetector
+from repro.runtime.elastic import plan_mesh, shrink_plan
+from repro.runtime.supervisor import Supervisor, SimulatedFailure
+
+__all__ = [
+    "HeartbeatRegistry",
+    "StragglerDetector",
+    "plan_mesh",
+    "shrink_plan",
+    "Supervisor",
+    "SimulatedFailure",
+]

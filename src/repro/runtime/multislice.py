@@ -1,0 +1,96 @@
+"""Multi-slice training: pod-local XLA steps + compressed cross-pod sync.
+
+At real scale, cross-pod traffic rides DCN (not ICI) and is driven by the
+host runtime (multi-slice MaxText / Pathways do exactly this): each slice
+computes gradients on its own ICI-connected mesh, the host exchanges them
+across slices, and the optimizer applies the synchronized gradient.
+
+This module implements that pattern with int8 + per-tensor-scale + error-
+feedback compression on the exchange (optim/compression.py math), which is
+where compression belongs — DCN bandwidth is the scarce resource, and the
+ICI-side collectives inside each slice stay full-precision.
+
+On this host "slices" are simulated as S sequential pod-local jit calls over
+the same devices; the exchange code path (quantize -> sum -> dequantize ->
+error feedback) is identical to what a DCN transport would carry.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _quantize(g: np.ndarray) -> tuple[np.ndarray, float]:
+    amax = float(np.max(np.abs(g))) if g.size else 0.0
+    scale = max(amax, 1e-30) / 127.0
+    q = np.clip(np.rint(g / scale), -127, 127).astype(np.int8)
+    return q, scale
+
+
+def compressed_cross_slice_mean(
+    per_slice_grads: list[Any],
+    errors: list[Any] | None,
+) -> tuple[Any, list[Any]]:
+    """int8(+EF) all-reduce-mean across slices, host side.
+
+    per_slice_grads: list (len S) of grad pytrees (same structure).
+    errors: per-slice error-feedback pytrees (or None to init zeros).
+    Returns (mean_grads pytree, new per-slice errors).
+    """
+    S = len(per_slice_grads)
+    leaves = [jax.tree.leaves(g) for g in per_slice_grads]
+    treedef = jax.tree.structure(per_slice_grads[0])
+    if errors is None:
+        err_leaves = [[np.zeros(np.shape(x), np.float32) for x in leaves[0]] for _ in range(S)]
+    else:
+        err_leaves = [list(map(np.asarray, jax.tree.leaves(e))) for e in errors]
+
+    n_leaves = len(leaves[0])
+    mean_leaves = []
+    for i in range(n_leaves):
+        acc = None
+        for s in range(S):
+            g = np.asarray(leaves[s][i], np.float32) + err_leaves[s][i]
+            q, scale = _quantize(g)  # <- the DCN payload: int8 + one scale
+            deq = q.astype(np.float32) * scale
+            err_leaves[s][i] = g - deq  # error feedback
+            acc = deq if acc is None else acc + deq
+        mean_leaves.append(acc / S)
+    mean = jax.tree.unflatten(treedef, mean_leaves)
+    new_errors = [jax.tree.unflatten(treedef, e) for e in err_leaves]
+    return mean, new_errors
+
+
+class MultiSliceTrainer:
+    """S simulated slices: grad per slice -> compressed exchange -> update.
+
+    grad_fn(params, batch) -> (loss, grads)   pod-local jitted program
+    update_fn(params, opt_state, grads) -> (params, opt_state)
+    """
+
+    def __init__(self, grad_fn: Callable, update_fn: Callable, n_slices: int = 2,
+                 compress: bool = True):
+        self.grad_fn = grad_fn
+        self.update_fn = update_fn
+        self.n_slices = n_slices
+        self.compress = compress
+        self._errors: list[Any] | None = None
+
+    def step(self, params, opt_state, slice_batches: list[Any]):
+        assert len(slice_batches) == self.n_slices
+        losses, grads = [], []
+        for b in slice_batches:  # one jit call per slice (DCN boundary)
+            l, g = self.grad_fn(params, b)
+            losses.append(float(l))
+            grads.append(g)
+        if self.compress:
+            mean, self._errors = compressed_cross_slice_mean(grads, self._errors)
+            mean = jax.tree.map(jnp.asarray, mean)
+        else:
+            mean = jax.tree.map(lambda *xs: sum(xs) / len(xs), *grads)
+        params, opt_state = self.update_fn(params, opt_state, mean)
+        return params, opt_state, float(np.mean(losses))

@@ -1,0 +1,55 @@
+"""Shared test helpers.
+
+NOTE: tests run with the REAL device count (1 CPU device). Multi-device
+sharding behaviour is tested via subprocesses that set
+XLA_FLAGS=--xla_force_host_platform_device_count BEFORE jax imports — never
+set that flag here (it would leak into every test).
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_devices(snippet: str, n_devices: int = 8, timeout: int = 560) -> str:
+    """Run a python snippet in a fresh interpreter with N host devices.
+
+    The snippet must print PASS on success; returns captured stdout.
+    """
+    prog = (
+        "import os\n"
+        f'os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n_devices}"\n'
+        + textwrap.dedent(snippet)
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    p = subprocess.run(
+        [sys.executable, "-c", prog],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=timeout,
+        cwd=REPO,
+    )
+    if p.returncode != 0 or "PASS" not in p.stdout:
+        raise AssertionError(
+            f"subprocess failed (rc={p.returncode})\nstdout:\n{p.stdout[-3000:]}\n"
+            f"stderr:\n{p.stderr[-3000:]}"
+        )
+    return p.stdout
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    import jax
+
+    return jax.random.key(0)

@@ -1,0 +1,68 @@
+"""Assigned-architecture configs must match the published dims exactly."""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.configs.base import get_config
+
+# (arch, layers, d_model, heads, kv_heads, d_ff, vocab) from the assignment
+PUBLISHED = {
+    "minitron-8b": (32, 4096, 32, 8, 16384, 256000),
+    "internlm2-20b": (48, 6144, 48, 8, 16384, 92544),
+    "qwen2.5-3b": (36, 2048, 16, 2, 11008, 151936),
+    "yi-6b": (32, 4096, 32, 4, 11008, 64000),
+    "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768),
+    "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+    "phi-3-vision-4.2b": (32, 3072, 32, 32, 8192, 32064),
+    "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+    "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(PUBLISHED))
+def test_published_dims(arch):
+    L, d, H, KV, ff, V = PUBLISHED[arch]
+    cfg = get_config(arch)
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == V
+    if cfg.attn is not None:
+        assert cfg.attn.num_heads == H
+        assert cfg.attn.num_kv_heads == KV
+
+
+def test_mamba2_130m_dims():
+    cfg = get_config("mamba2-130m")
+    assert cfg.num_layers == 24
+    assert cfg.d_model == 768
+    assert cfg.vocab_size == 50280
+    assert cfg.attn is None  # attention-free
+    assert cfg.ssm.state_dim == 128
+
+
+def test_moe_structure():
+    mix = get_config("mixtral-8x22b")
+    assert mix.moe.num_experts == 8 and mix.moe.top_k == 2
+    assert mix.attn.window is not None  # SWA -> long_500k runnable
+    moon = get_config("moonshot-v1-16b-a3b")
+    assert moon.moe.num_experts == 64 and moon.moe.top_k == 6
+
+
+def test_hybrid_and_ssm_extras():
+    z = get_config("zamba2-1.2b")
+    assert z.family == "hybrid" and z.ssm.state_dim == 64 and z.attn_period > 0
+    s = get_config("seamless-m4t-medium")
+    assert s.family == "audio" and s.encoder_layers == 12
+    p = get_config("phi-3-vision-4.2b")
+    assert p.family == "vlm" and p.num_patches > 0
+
+
+@pytest.mark.parametrize("arch", sorted(PUBLISHED) + ["mamba2-130m", "merinda-gru"])
+def test_smoke_config_is_same_family_but_small(arch):
+    full, smoke = get_config(arch), get_config(arch, smoke=True)
+    assert smoke.family == full.family
+    assert smoke.n_params() < full.n_params() / 50
+    if full.moe is not None:
+        assert smoke.moe is not None and smoke.moe.top_k <= full.moe.top_k

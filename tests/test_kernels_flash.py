@@ -1,0 +1,80 @@
+"""flash_attention kernel vs jnp oracle: masks, GQA, windows, grads."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+
+CASES = [
+    # B, S, QH, KH, Dh, causal, window
+    (1, 128, 1, 1, 32, True, None),
+    (2, 256, 4, 2, 64, True, None),
+    (2, 256, 8, 1, 64, True, None),     # MQA
+    (1, 256, 4, 4, 128, False, None),   # bidirectional (encoder)
+    (2, 256, 4, 2, 64, True, 128),      # sliding window
+    (1, 384, 2, 2, 64, True, 64),       # window smaller than block
+]
+
+
+@pytest.mark.parametrize("B,S,QH,KH,Dh,causal,window", CASES)
+def test_flash_matches_reference(B, S, QH, KH, Dh, causal, window):
+    key = jax.random.key(S + QH)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, S, QH, Dh))
+    k = jax.random.normal(kk, (B, S, KH, Dh))
+    v = jax.random.normal(kv, (B, S, KH, Dh))
+    o_k = flash_attention(q, k, v, causal=causal, window=window, interpret=True)
+    o_r = flash_attention(q, k, v, causal=causal, window=window, force_reference=True)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_q_offset_decode_tail():
+    """q_offset: a 1-token suffix query equals the tail of the full result."""
+    key = jax.random.key(9)
+    B, S, H, Dh = 1, 256, 2, 64
+    q = jax.random.normal(key, (B, S, H, Dh))
+    k = jax.random.normal(jax.random.key(1), (B, S, H, Dh))
+    v = jax.random.normal(jax.random.key(2), (B, S, H, Dh))
+    full = flash_attention(q, k, v, causal=True, interpret=True)
+    tail = flash_attention(q[:, -128:], k, v, causal=True, q_offset=S - 128, interpret=True)
+    np.testing.assert_allclose(np.asarray(tail), np.asarray(full[:, -128:]), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("block_q,block_k", [(64, 64), (128, 256)])
+def test_flash_block_shape_invariance(block_q, block_k):
+    """BlockSpec tiling must not change results (VMEM-tiling analogue)."""
+    key = jax.random.key(4)
+    q = jax.random.normal(key, (1, 256, 2, 64))
+    k = jax.random.normal(jax.random.key(5), (1, 256, 2, 64))
+    v = jax.random.normal(jax.random.key(6), (1, 256, 2, 64))
+    a = flash_attention(q, k, v, block_q=block_q, block_k=block_k, interpret=True)
+    b = flash_attention(q, k, v, force_reference=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_grads_match_reference():
+    key = jax.random.key(8)
+    q = jax.random.normal(key, (1, 128, 2, 32))
+    k = jax.random.normal(jax.random.key(1), (1, 128, 1, 32))
+    v = jax.random.normal(jax.random.key(2), (1, 128, 1, 32))
+
+    gk = jax.grad(lambda q, k, v: jnp.sum(flash_attention(q, k, v, interpret=True) ** 2), (0, 1, 2))(q, k, v)
+    gr = jax.grad(lambda q, k, v: jnp.sum(flash_attention(q, k, v, force_reference=True) ** 2), (0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-4, rtol=5e-4)
+
+
+def test_flash_bf16():
+    key = jax.random.key(3)
+    q = jax.random.normal(key, (1, 128, 2, 64)).astype(jnp.bfloat16)
+    k = jax.random.normal(jax.random.key(1), (1, 128, 2, 64)).astype(jnp.bfloat16)
+    v = jax.random.normal(jax.random.key(2), (1, 128, 2, 64)).astype(jnp.bfloat16)
+    o_k = flash_attention(q, k, v, interpret=True)
+    o_r = flash_attention(q, k, v, force_reference=True)
+    np.testing.assert_allclose(
+        np.asarray(o_k, np.float32), np.asarray(o_r, np.float32), atol=3e-2, rtol=3e-2
+    )

@@ -1,0 +1,124 @@
+"""gru_scan Pallas kernel vs lax.scan oracle: shape/dtype sweeps + grads."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.neural_flow import GRUParams, gru_scan_ref, init_gru
+from repro.core.quant import make_sigmoid_table, make_tanh_table, pwl_apply
+from repro.kernels.gru_scan.ops import gru_scan, gru_scan_int8
+
+SHAPES = [
+    (1, 4, 2, 8),
+    (2, 16, 8, 32),
+    (4, 33, 16, 64),   # odd T
+    (8, 7, 3, 128),    # hardware-aligned H
+    (2, 64, 128, 16),  # D > H
+]
+
+
+@pytest.mark.parametrize("B,T,D,H", SHAPES)
+@pytest.mark.parametrize("flow", [True, False])
+def test_gru_scan_matches_reference(B, T, D, H, flow):
+    key = jax.random.key(B * 1000 + T)
+    p = init_gru(key, D, H)
+    xs = jax.random.normal(key, (B, T, D), jnp.float32)
+    h0 = jax.random.normal(jax.random.key(1), (B, H), jnp.float32) * 0.1
+    hT_r, hs_r = gru_scan_ref(p, xs, h0, flow=flow)
+    hT_k, hs_k = gru_scan(p, xs, h0, flow=flow, interpret=True)
+    np.testing.assert_allclose(np.asarray(hs_k), np.asarray(hs_r), atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(hT_k), np.asarray(hT_r), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gru_scan_dtypes(dtype):
+    key = jax.random.key(7)
+    p = init_gru(key, 8, 32, jnp.float32)
+    xs = jax.random.normal(key, (2, 12, 8)).astype(dtype)
+    h0 = jnp.zeros((2, 32), dtype)
+    _, hs_k = gru_scan(p, xs, h0, interpret=True)
+    _, hs_r = gru_scan_ref(p, xs.astype(jnp.float32), h0.astype(jnp.float32))
+    tol = 5e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(hs_k, np.float32), np.asarray(hs_r), atol=tol, rtol=tol
+    )
+
+
+def test_gru_scan_variable_dt():
+    """Flow gate: dt=0 steps must leave the state unchanged (F(0)=id)."""
+    key = jax.random.key(3)
+    p = init_gru(key, 4, 16)
+    xs = jax.random.normal(key, (2, 10, 4))
+    h0 = jax.random.normal(key, (2, 16)) * 0.3
+    dts = jnp.zeros((10,))
+    hT, hs = gru_scan(p, xs, h0, dts=dts, flow=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(h0), atol=1e-6)
+
+
+def test_gru_kernel_grads_match_reference():
+    key = jax.random.key(11)
+    p = init_gru(key, 6, 24)
+    xs = jax.random.normal(key, (3, 9, 6))
+    h0 = jnp.zeros((3, 24))
+
+    def loss_k(w):
+        return jnp.sum(gru_scan(p._replace(w=w), xs, h0, interpret=True)[1] ** 2)
+
+    def loss_r(w):
+        return jnp.sum(gru_scan_ref(p._replace(w=w), xs, h0)[1] ** 2)
+
+    gk, gr = jax.grad(loss_k)(p.w), jax.grad(loss_r)(p.w)
+    np.testing.assert_allclose(np.asarray(gk), np.asarray(gr), atol=1e-4, rtol=1e-4)
+
+
+def test_gru_batch_blocking_invariance():
+    """block_b tiling must not change results (BRAM-banking analogue)."""
+    key = jax.random.key(5)
+    p = init_gru(key, 8, 32)
+    xs = jax.random.normal(key, (8, 12, 8))
+    h0 = jnp.zeros((8, 32))
+    _, hs_full = gru_scan(p, xs, h0, interpret=True)
+    _, hs_tiled = gru_scan(p, xs, h0, block_b=2, interpret=True)
+    np.testing.assert_allclose(np.asarray(hs_full), np.asarray(hs_tiled), atol=1e-6)
+
+
+def test_gru_int8_kernel_matches_int8_reference():
+    key = jax.random.key(9)
+    p = init_gru(key, 8, 32)
+    xs = jax.random.normal(key, (4, 20, 8))
+    h0 = jnp.zeros((4, 32))
+    _, hs_k = gru_scan_int8(p, xs, h0, interpret=True)
+    _, hs_r = gru_scan_int8(p, xs, h0, force_reference=True)
+    np.testing.assert_allclose(np.asarray(hs_k), np.asarray(hs_r), atol=1e-6)
+
+
+def test_gru_int8_accuracy_budget():
+    """Paper's fixed-point claim: quantized path stays close to float."""
+    key = jax.random.key(13)
+    p = init_gru(key, 8, 32)
+    xs = jax.random.normal(key, (4, 30, 8))
+    h0 = jnp.zeros((4, 32))
+    _, hs_f = gru_scan_ref(p, xs, h0, flow=False)
+    _, hs_q = gru_scan_int8(p, xs, h0, force_reference=True)
+    err = float(jnp.max(jnp.abs(hs_f - hs_q)))
+    assert err < 0.15, f"int8+PWL drifted too far from float: {err}"
+
+
+def test_pwl_tables_error_bound():
+    """Error shrinks ~quadratically with segment count (PWL convergence)."""
+    xs = jnp.linspace(-10, 10, 4001)
+    errs = {}
+    for n in (16, 32, 64):
+        sig = pwl_apply(make_sigmoid_table(n), xs)
+        tnh = pwl_apply(make_tanh_table(n), xs)
+        errs[n] = (
+            float(jnp.max(jnp.abs(sig - jax.nn.sigmoid(xs)))),
+            float(jnp.max(jnp.abs(tnh - jnp.tanh(xs)))),
+        )
+    assert errs[16][0] < 2e-2 and errs[16][1] < 3e-2
+    assert errs[64][0] < 1e-3 and errs[64][1] < 2e-3
+    assert errs[64][0] < errs[16][0] / 8  # ~O(1/n^2)
+    assert errs[64][1] < errs[16][1] / 8

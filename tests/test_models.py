@@ -1,0 +1,155 @@
+"""Model zoo: per-arch smoke (reduced configs) + prefill/decode parity.
+
+The decisive correctness test is teacher-forcing parity: running prefill on a
+prompt then decoding token-by-token must reproduce the logits of one full
+forward pass — this exercises caches, RoPE offsets, rolling SWA windows, SSD
+state handoff and the hybrid shared-attention cache in one property.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, list_archs
+from repro.models import model as M
+
+ARCHS = [a for a in list_archs()]
+
+
+def _batch(cfg, B, S, with_labels=True):
+    out = {}
+    key = jax.random.key(0)
+    if cfg.family == "vlm":
+        T = S - cfg.num_patches
+        out["tokens"] = jax.random.randint(key, (B, T), 0, cfg.vocab_size, jnp.int32)
+        if with_labels:
+            out["labels"] = jax.random.randint(key, (B, T), 0, cfg.vocab_size, jnp.int32)
+        out["patches"] = jnp.zeros((B, cfg.num_patches, cfg.d_model), jnp.bfloat16)
+    elif cfg.family == "audio":
+        out["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size, jnp.int32)
+        if with_labels:
+            out["labels"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size, jnp.int32)
+        out["frames"] = jax.random.normal(key, (B, M.AUDIO_SRC_LEN, M.AUDIO_FEAT), jnp.float32)
+    else:
+        out["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size, jnp.int32)
+        if with_labels:
+            out["labels"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size, jnp.int32)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_loss(arch):
+    cfg = get_config(arch, smoke=True)
+    params = M.init_params(jax.random.key(0), cfg)
+    batch = _batch(cfg, B=2, S=32)
+    loss, metrics = jax.jit(lambda p, b: M.train_loss(p, b, cfg))(params, batch)
+    assert jnp.isfinite(loss), (arch, float(loss))
+    assert 2.0 < float(loss) < 20.0, f"{arch}: implausible CE {float(loss)}"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_param_specs_match_materialized(arch):
+    cfg = get_config(arch, smoke=True)
+    specs = M.param_specs(cfg)
+    params = M.init_params(jax.random.key(0), cfg)
+    from repro.models.params import is_spec
+
+    flat_s = jax.tree.leaves(specs, is_leaf=is_spec)
+    flat_p = jax.tree.leaves(params)
+    assert len(flat_s) == len(flat_p)
+    for s, p in zip(flat_s, flat_p):
+        assert tuple(s.shape) == tuple(p.shape)
+        assert jnp.dtype(s.dtype) == p.dtype
+
+
+@pytest.mark.parametrize(
+    "arch", ["qwen2.5-3b", "mixtral-8x22b", "mamba2-130m", "zamba2-1.2b", "merinda-gru"]
+)
+def test_prefill_decode_parity(arch):
+    """prefill(prompt) + N decode steps == full forward logits (greedy path)."""
+    cfg = get_config(arch, smoke=True)
+    params = M.init_params(jax.random.key(0), cfg)
+    B, S_p, N_dec = 2, 16, 4
+    S = S_p + N_dec
+    full = _batch(cfg, B, S, with_labels=False)
+    toks = full["tokens"]
+
+    # reference: full-sequence prefill gives logits at every position via
+    # prefilling successively longer prompts (cache-free ground truth)
+    ref_logits = []
+    for t in range(S_p, S):
+        b_t = dict(full, tokens=toks[:, :t])
+        lg, _ = M.prefill(params, b_t, cfg, cache_len=S)
+        ref_logits.append(lg)
+
+    # cached path: one prefill + decode steps
+    b0 = dict(full, tokens=toks[:, :S_p])
+    lg, cache = M.prefill(params, b0, cfg, cache_len=S)
+    got = [lg]
+    for i, t in enumerate(range(S_p, S - 1)):
+        lg, cache = M.decode_step(params, cache, toks[:, t : t + 1], jnp.asarray(t), cfg)
+        got.append(lg)
+
+    for i, (a, b) in enumerate(zip(got, ref_logits)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            atol=0.12, rtol=0.12,  # bf16 params; logits O(10)
+        )
+
+
+def test_swa_rolling_cache_matches_full_window():
+    """Mixtral-family SWA: rolling cache decode == windowed full attention."""
+    import dataclasses
+
+    cfg = get_config("mixtral-8x22b", smoke=True)
+    assert cfg.attn.window is not None and cfg.attn.window < 64
+    params = M.init_params(jax.random.key(1), cfg)
+    B, S_p, N_dec = 1, 40, 6  # prompt longer than window (32)
+    S = S_p + N_dec
+    toks = jax.random.randint(jax.random.key(2), (B, S), 0, cfg.vocab_size, jnp.int32)
+
+    ref = []
+    for t in range(S_p, S):
+        lg, _ = M.prefill(params, {"tokens": toks[:, :t]}, cfg, cache_len=S)
+        ref.append(lg)
+    lg, cache = M.prefill(params, {"tokens": toks[:, :S_p]}, cfg, cache_len=S)
+    got = [lg]
+    for t in range(S_p, S - 1):
+        lg, cache = M.decode_step(params, cache, toks[:, t : t + 1], jnp.asarray(t), cfg)
+        got.append(lg)
+    # bf16 params: the two paths sum in different orders, so individual logits
+    # can differ by a few bf16 ulps of the O(10) activations. The rolling-cache
+    # MATH is exact (f32 unit check in the attention module); here we require
+    # near-total agreement at a bf16-realistic tolerance.
+    for a, b in zip(got, ref):
+        a = np.asarray(a, np.float32)
+        b = np.asarray(b, np.float32)
+        frac_close = np.mean(np.abs(a - b) < 0.12)
+        assert frac_close > 0.94, frac_close
+        np.testing.assert_allclose(a, b, atol=0.35, rtol=0.1)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_input_specs_cover_model_inputs(arch):
+    """input_specs must be sufficient to call the right step for each shape."""
+    from repro.configs.base import SHAPES, shape_applicable
+    from repro.models.params import abstract
+
+    cfg = get_config(arch, smoke=True)
+    for shape in SHAPES.values():
+        ok, _ = shape_applicable(arch, shape.name)
+        if not ok:
+            continue
+        specs = M.input_specs(cfg, shape)
+        tree = abstract(specs)
+        assert all(x is not None for x in jax.tree.leaves(tree))
+
+
+def test_vocab_padding_rounds_to_256():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        assert cfg.vocab_padded % 256 == 0
+        assert 0 <= cfg.vocab_padded - cfg.vocab_size < 256

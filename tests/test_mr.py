@@ -1,0 +1,175 @@
+"""Model Recovery core: MERINDA training, SINDy, baselines, quantization.
+
+These are the paper's own claims in miniature:
+- MERINDA (GRU-flow) recovers dynamics with low reconstruction error,
+- comparable to / better than the LTC path while running feed-forward,
+- SINDy recovers exact sparse coefficients on clean data,
+- the fixed-point (QAT) configuration preserves accuracy.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.merinda import (
+    MRConfig,
+    init_mr,
+    mr_forward,
+    mr_loss,
+    recover_coefficients,
+    reconstruct,
+    train_mr,
+)
+from repro.core.quant import QuantConfig
+from repro.core.sindy import fit_sindy, sindy_dynamics
+from repro.data.dynamics import SYSTEMS, generate_trajectory, get_system
+from repro.data.windows import make_windows
+
+
+@pytest.fixture(scope="module")
+def lorenz_windows():
+    ts, ys, us = generate_trajectory("lorenz")
+    yw, uw, norm = make_windows(ys, us, window=32, stride=4)
+    return jnp.asarray(yw), norm
+
+
+def _train(cfg, yw, steps=150, lr=3e-3, seed=0):
+    params, hist = train_mr(cfg, yw, None, steps=steps, lr=lr, seed=seed,
+                            batch_size=64, log_every=steps - 1)
+    return params, hist
+
+
+def test_merinda_gru_flow_learns_lorenz(lorenz_windows):
+    yw, _ = lorenz_windows
+    cfg = MRConfig(state_dim=3, order=2, hidden=32, dense_hidden=64, dt=0.01,
+                   encoder="gru_flow")
+    params, hist = _train(cfg, yw)
+    assert hist[-1]["recon_mse"] < 0.1 * hist[0]["recon_mse"], hist
+    assert hist[-1]["recon_mse"] < 0.08
+
+
+@pytest.mark.parametrize("encoder", ["gru", "ltc", "node"])
+def test_baseline_encoders_train(lorenz_windows, encoder):
+    """All comparison encoders run and reduce the loss (paper Table 5 set)."""
+    yw, _ = lorenz_windows
+    cfg = MRConfig(state_dim=3, order=2, hidden=32, dense_hidden=64, dt=0.01,
+                   encoder=encoder)
+    params, hist = _train(cfg, yw, steps=100)
+    assert np.isfinite(hist[-1]["loss"])
+    assert hist[-1]["recon_mse"] < 0.6 * hist[0]["recon_mse"], (encoder, hist)
+
+
+def test_merinda_kernel_path_equals_reference(lorenz_windows):
+    """use_kernel=True must not change the forward computation."""
+    yw, _ = lorenz_windows
+    base = dict(state_dim=3, order=2, hidden=32, dense_hidden=64, dt=0.01)
+    cfg_r = MRConfig(**base, encoder="gru_flow", use_kernel=False)
+    cfg_k = MRConfig(**base, encoder="gru_flow", use_kernel=True)
+    params = init_mr(jax.random.key(0), cfg_r)
+    th_r, _ = mr_forward(params, cfg_r, yw[:8], None)
+    th_k, _ = mr_forward(params, cfg_k, yw[:8], None)
+    np.testing.assert_allclose(np.asarray(th_r), np.asarray(th_k), atol=1e-4, rtol=1e-4)
+
+
+def test_merinda_quantized_accuracy_budget(lorenz_windows):
+    """Paper's fixed-point claim: QAT config stays close to float accuracy."""
+    yw, _ = lorenz_windows
+    q = QuantConfig(act_int_bits=4, act_frac_bits=10, weight_int_bits=2, weight_frac_bits=12)
+    cfg = MRConfig(state_dim=3, order=2, hidden=32, dense_hidden=64, dt=0.01,
+                   encoder="gru_flow", quant=q)
+    params, hist = _train(cfg, yw)
+    assert hist[-1]["recon_mse"] < 0.12, hist
+
+
+def test_sindy_exact_recovery_lorenz():
+    ts, ys, us = generate_trajectory("lorenz")
+    fit = fit_sindy(jnp.asarray(ys), dt=0.01, order=2, threshold=0.1)
+    true = get_system("lorenz").true_coef()
+    err = np.abs(np.asarray(fit.coef) - true).max()
+    assert err < 0.35, f"SINDy coefficient error {err}"
+    # sparsity structure: exactly the true terms survive
+    assert ((np.abs(true) > 0) == np.asarray(fit.mask)).all()
+
+
+@pytest.mark.parametrize("system", ["lotka_volterra", "pathogen"])
+def test_sindy_recovery_other_systems(system):
+    spec = get_system(system)
+    ts, ys, us = generate_trajectory(system)
+    fit = fit_sindy(jnp.asarray(ys), dt=spec.dt, order=2, threshold=0.02)
+    true = spec.true_coef()
+    err = np.abs(np.asarray(fit.coef) - true).max()
+    assert err < 0.15, f"{system}: coefficient error {err}"
+
+
+def test_sindy_dynamics_forward():
+    """Recovered model must reproduce the trajectory when re-integrated."""
+    from repro.core.ode import odeint
+
+    ts, ys, us = generate_trajectory("lotka_volterra")
+    fit = fit_sindy(jnp.asarray(ys), dt=0.05, order=2, threshold=0.02)
+    f = sindy_dynamics(order=2)
+    t = jnp.asarray(ts[:200])
+    y_sim = odeint(f, jnp.asarray(ys[0]), t, args=fit.coef, method="rk4")
+    rel = float(jnp.mean((y_sim - jnp.asarray(ys[:200])) ** 2) / jnp.mean(jnp.asarray(ys[:200]) ** 2))
+    assert rel < 0.05, rel
+
+
+def test_recover_coefficients_prunes_to_k(lorenz_windows):
+    yw, _ = lorenz_windows
+    cfg = MRConfig(state_dim=3, order=2, hidden=16, dense_hidden=32, dt=0.01)
+    params = init_mr(jax.random.key(0), cfg)
+    theta = recover_coefficients(params, cfg, yw[:4], None, n_active=7)
+    assert int((np.abs(np.asarray(theta)) > 0).sum()) <= 7
+
+
+def test_reconstruct_shapes(lorenz_windows):
+    yw, _ = lorenz_windows
+    cfg = MRConfig(state_dim=3, order=2, hidden=16, dense_hidden=32, dt=0.01)
+    params = init_mr(jax.random.key(0), cfg)
+    y_est, theta = reconstruct(params, cfg, yw[:4], None)
+    assert y_est.shape == yw[:4].shape
+    assert theta.shape == (4, cfg.n_terms, 3)
+    assert bool(jnp.isfinite(y_est).all())
+
+
+def test_recover_physical_coefficients_lotka():
+    """Quickstart path: physical-unit recovery identifies the true terms."""
+    import jax.numpy as jnp
+
+    from repro.core.merinda import recover_physical_coefficients
+
+    spec = get_system("lotka_volterra")
+    ts, ys, us = generate_trajectory("lotka_volterra")
+    yw, uw, norm = make_windows(ys, us, window=32, stride=4)
+    cfg = MRConfig(state_dim=2, order=2, hidden=32, dense_hidden=64, dt=spec.dt)
+    params, hist = train_mr(cfg, jnp.asarray(yw), None, steps=250, lr=3e-3,
+                            batch_size=64, log_every=249, norm=norm)
+    theta = recover_physical_coefficients(
+        params, cfg, jnp.asarray(yw), None, norm, n_active=4
+    )
+    true = spec.true_coef()
+    # the two dominant linear terms must be recovered with the right sign
+    # and within 50% magnitude (h -> dh/dt positive, l -> dl/dt negative)
+    i_h = 1, 0
+    i_l = 2, 1
+    assert theta[i_h] > 0.5 * true[i_h], (theta[i_h], true[i_h])
+    assert theta[i_l] < 0.5 * true[i_l], (theta[i_l], true[i_l])
+    assert np.abs(theta - true).max() < 0.5
+
+
+def test_all_benchmark_systems_generate():
+    for name, spec in SYSTEMS.items():
+        ts, ys, us = generate_trajectory(name, n_samples=100)
+        assert ys.shape == (101, spec.state_dim)
+        assert np.isfinite(ys).all(), name
+        if spec.true_coef is not None:
+            c = spec.true_coef()
+            from repro.core.library import n_library_terms
+
+            assert c.shape == (
+                n_library_terms(spec.state_dim + spec.input_dim, spec.order),
+                spec.state_dim,
+            )
