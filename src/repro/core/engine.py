@@ -1,0 +1,275 @@
+"""Scan-jitted streaming recovery engine (the paper's dataflow claim, host side).
+
+MERINDA's FPGA win comes from setting the pipeline up ONCE and streaming —
+no per-step launches (paper §4). The original ``train_mr`` host loop was the
+exact anti-pattern: a Python ``for`` over optimizer steps, re-entering jit,
+sampling minibatch indices and gathering windows with separate dispatches
+every iteration. This module is the host-side analogue of the kernel fix:
+
+- ``run_epoch`` compiles the WHOLE training run into one donated
+  ``jax.lax.scan`` program — minibatch sampling (counter-derived keys via
+  ``jax.random.fold_in``), LR warmup, the value_and_grad/clip/AdamW update
+  and metric accumulation all execute device-side with zero per-step Python
+  dispatch.
+- ``recover_many`` vmaps the same epoch program over a BATCH of distinct
+  dynamical systems: S models are initialized, trained and read out in one
+  compiled call (the "many concurrent model recoveries" serving scenario).
+
+The scan body calls ``merinda.mr_train_step`` directly (jit inlines under
+the scan), so per-step math is the old loop's by construction — only the
+dispatch structure differs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.merinda import (
+    MRConfig,
+    MRParams,
+    init_mr,
+    mr_train_step,
+    recover_coefficients,
+)
+from repro.optim import adamw_init
+
+WARMUP_STEPS = 50  # matches the original train_mr warmup
+
+
+def make_phys(cfg: MRConfig, norm: dict | None):
+    """(T^T, out_scale) for physical-unit sparsity penalties, or None.
+
+    norm is the stats dict from data/windows.make_windows; see mr_loss.
+    """
+    if norm is None:
+        return None
+    from repro.core.library import normalization_transform
+
+    n_vars = cfg.state_dim + cfg.input_dim
+    mean = np.concatenate([np.asarray(norm["mean"]), np.zeros(cfg.input_dim)])
+    scale = np.concatenate([np.asarray(norm["scale"]), np.ones(cfg.input_dim)])
+    T = normalization_transform(mean, scale, n_vars, cfg.order)
+    return (
+        jnp.asarray(T.T, jnp.float32),
+        jnp.asarray(scale[: cfg.state_dim], jnp.float32),
+    )
+
+
+def _epoch(
+    params: MRParams,
+    opt_state,
+    ys: jnp.ndarray,  # [N, T, n]
+    us: jnp.ndarray | None,  # [N, T, m] | None
+    key: jax.Array,
+    lr: jnp.ndarray | float,
+    phys: tuple | None,
+    *,
+    cfg: MRConfig,
+    steps: int,
+    batch_size: int | None,
+):
+    """One compiled training run: lax.scan over optimizer steps.
+
+    Returns (params, opt_state, metrics) with metrics a dict of [steps]
+    arrays (loss, recon_mse, sparsity_l1, grad_norm, lr). Pure function of
+    its inputs — vmappable across systems (see recover_many).
+    """
+    n = ys.shape[0]
+    bs = batch_size or n
+    sample = bs < n
+
+    def step_fn(carry, step):
+        params, opt_state = carry
+        if sample:
+            sub = jax.random.fold_in(key, step)
+            idx = jax.random.randint(sub, (bs,), 0, n)
+            yb = jnp.take(ys, idx, axis=0)
+            ub = None if us is None else jnp.take(us, idx, axis=0)
+        else:
+            yb, ub = ys, us
+        lr_t = lr * jnp.minimum(1.0, (step + 1.0) / WARMUP_STEPS)
+        params, opt_state, aux = mr_train_step(
+            params, opt_state, cfg, yb, ub, lr_t, phys
+        )
+        return (params, opt_state), dict(aux, lr=lr_t)
+
+    (params, opt_state), metrics = jax.lax.scan(
+        step_fn, (params, opt_state), jnp.arange(steps)
+    )
+    return params, opt_state, metrics
+
+
+# Donated entry point: params/opt_state buffers are reused in place across the
+# scan — the single-program structure XLA needs to elide per-step copies.
+run_epoch = functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "steps", "batch_size"),
+    donate_argnums=(0, 1),
+)(_epoch)
+
+
+def train_mr_scan(
+    cfg: MRConfig,
+    ys: jnp.ndarray,
+    us: jnp.ndarray | None = None,
+    steps: int = 500,
+    lr: float = 3e-3,
+    seed: int = 0,
+    batch_size: int | None = None,
+    norm: dict | None = None,
+) -> tuple[MRParams, dict]:
+    """Scan-jitted replacement for the per-step train_mr loop.
+
+    Returns (params, metrics) where metrics holds [steps]-shaped arrays.
+    ``merinda.train_mr`` wraps this and re-serializes metrics into the old
+    history-of-dicts format.
+    """
+    key = jax.random.key(seed)
+    params = init_mr(key, cfg)
+    opt_state = adamw_init(params)
+    phys = make_phys(cfg, norm)
+    params, _, metrics = run_epoch(
+        params, opt_state, ys, us, key, lr, phys,
+        cfg=cfg, steps=steps, batch_size=batch_size,
+    )
+    return params, metrics
+
+
+def history_from_metrics(metrics: dict, log_every: int) -> list[dict]:
+    """The old train_mr history format: one dict per logged step."""
+    if not log_every:
+        return []
+    host = {k: np.asarray(v) for k, v in metrics.items()}
+    steps = next(iter(host.values())).shape[0]
+    return [
+        {k: float(v[s]) for k, v in host.items()} | {"step": s}
+        for s in range(0, steps, log_every)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# multi-system recovery: one vmapped program recovers a fleet of models
+# ---------------------------------------------------------------------------
+def system_keys(seed: int, n_systems: int) -> jax.Array:
+    """Per-system PRNG keys; the sequential path derives the same ones so
+    vmapped and one-at-a-time recovery are comparable bit-for-bit."""
+    base = jax.random.key(seed)
+    return jax.vmap(lambda i: jax.random.fold_in(base, i))(jnp.arange(n_systems))
+
+
+def recover_one(
+    cfg: MRConfig,
+    ys: jnp.ndarray,  # [N, T, n]
+    us: jnp.ndarray | None,
+    key: jax.Array,
+    steps: int = 500,
+    lr: float = 3e-3,
+    batch_size: int | None = None,
+    n_active: int | None = None,
+) -> jnp.ndarray:
+    """Init -> train -> aggregate Theta for ONE system. Pure in (key, data),
+    so jax.vmap over the leading axis is the multi-system engine."""
+    params = init_mr(key, cfg)
+    opt_state = adamw_init(params)
+    params, _, _ = _epoch(
+        params, opt_state, ys, us, key, lr, None,
+        cfg=cfg, steps=steps, batch_size=batch_size,
+    )
+    return recover_coefficients(params, cfg, ys, us, n_active=n_active)
+
+
+def recover_many(
+    cfg: MRConfig,
+    ys_batch: jnp.ndarray,  # [S, N, T, n]
+    us_batch: jnp.ndarray | None = None,  # [S, N, T, m] | None
+    steps: int = 500,
+    lr: float = 3e-3,
+    seed: int = 0,
+    batch_size: int | None = None,
+    n_active: int | None = None,
+) -> jnp.ndarray:
+    """Recover coefficients for S distinct systems in ONE compiled vmapped
+    call. Returns theta_batch [S, n_terms, n_state] (normalized coords).
+
+    All systems must share (state_dim, input_dim, order) — use
+    ``stack_systems`` to zero-pad a heterogeneous set to common dims.
+    """
+    keys = system_keys(seed, ys_batch.shape[0])
+    return _recover_many_jit(
+        ys_batch, us_batch, keys, lr,
+        cfg=cfg, steps=steps, batch_size=batch_size, n_active=n_active,
+    )
+
+
+# module-level jit so repeat calls with the same static config hit the
+# compile cache (a per-call jit(lambda ...) would retrace every invocation)
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "steps", "batch_size", "n_active")
+)
+def _recover_many_jit(ys_batch, us_batch, keys, lr, *, cfg, steps, batch_size, n_active):
+    def one(ys, us, key):
+        return recover_one(
+            cfg, ys, us, key,
+            steps=steps, lr=lr, batch_size=batch_size, n_active=n_active,
+        )
+
+    if us_batch is None:
+        return jax.vmap(lambda ys, k: one(ys, None, k))(ys_batch, keys)
+    return jax.vmap(one)(ys_batch, us_batch, keys)
+
+
+def stack_systems(
+    names: Sequence[str],
+    window: int = 32,
+    stride: int = 4,
+    n_samples: int = 600,
+) -> tuple[jnp.ndarray, jnp.ndarray | None, list[dict], MRConfig]:
+    """Generate + window + zero-pad a heterogeneous system set for recover_many.
+
+    State/input dims are zero-padded up to the set's maxima (a padded state
+    channel is identically zero, so its library terms vanish and the L1
+    penalty zeroes its coefficients). Returns (ys [S,N,T,n_max],
+    us [S,N,T,m_max] or None, per-system norm stats, a ready MRConfig).
+    """
+    from repro.data.dynamics import generate_trajectory, get_system
+    from repro.data.windows import make_windows
+
+    specs = [get_system(n) for n in names]
+    dts = {s.dt for s in specs}
+    if len(dts) > 1:
+        # cfg.dt is shared across the vmapped batch; integrating a system's
+        # windows at the wrong sampling interval recovers garbage silently
+        raise ValueError(
+            f"stack_systems requires a common sampling dt, got {sorted(dts)} "
+            f"for {list(names)} — stack only systems generated on one grid"
+        )
+    n_max = max(s.state_dim for s in specs)
+    m_max = max(s.input_dim for s in specs)
+    order = max(s.order for s in specs)
+    yws, uws, norms = [], [], []
+    for spec in specs:
+        _, ys, us = generate_trajectory(spec.name, n_samples=n_samples)
+        yw, uw, norm = make_windows(ys, us, window=window, stride=stride)
+        N, T = yw.shape[:2]
+        yw = np.pad(yw, ((0, 0), (0, 0), (0, n_max - spec.state_dim)))
+        if m_max:
+            uw = (
+                np.zeros((N, T, m_max), np.float32)
+                if uw is None
+                else np.pad(uw, ((0, 0), (0, 0), (0, m_max - uw.shape[-1])))
+            )
+            uws.append(uw)
+        yws.append(yw)
+        norms.append(norm)
+    ys_batch = jnp.asarray(np.stack(yws))
+    us_batch = jnp.asarray(np.stack(uws)) if m_max else None
+    cfg = MRConfig(
+        state_dim=n_max, input_dim=m_max, order=order,
+        hidden=32, dense_hidden=64, dt=dts.pop(),
+    )
+    return ys_batch, us_batch, norms, cfg

@@ -223,43 +223,26 @@ def train_mr(
     callback: Callable[[int, dict], None] | None = None,
     norm: dict | None = None,
 ):
-    """Full training loop. ys: [N_windows, T, n]. Returns (params, history).
+    """Full training run. ys: [N_windows, T, n]. Returns (params, history).
+
+    The whole run executes as ONE compiled lax.scan program (core/engine.py):
+    minibatch sampling, LR warmup and metric accumulation are all device-side
+    — no per-step jit re-entry. ``callback`` therefore fires after the run
+    completes (one call per logged step), not interleaved with training.
 
     norm: the stats dict from data/windows.make_windows — when given, the L1
     sparsity penalty is applied to physical-unit coefficients (see mr_loss).
     """
-    key = jax.random.key(seed)
-    params = init_mr(key, cfg)
-    opt_state = adamw_init(params)
-    phys = None
-    if norm is not None:
-        import numpy as np
+    from repro.core import engine
 
-        from repro.core.library import normalization_transform
-
-        n_vars = cfg.state_dim + cfg.input_dim
-        mean = np.concatenate([np.asarray(norm["mean"]), np.zeros(cfg.input_dim)])
-        scale = np.concatenate([np.asarray(norm["scale"]), np.ones(cfg.input_dim)])
-        T = normalization_transform(mean, scale, n_vars, cfg.order)
-        phys = (jnp.asarray(T.T, jnp.float32),
-                jnp.asarray(scale[: cfg.state_dim], jnp.float32))
-    n = ys.shape[0]
-    bs = batch_size or n
-    history = []
-    for step in range(steps):
-        if bs < n:
-            key, sub = jax.random.split(key)
-            idx = jax.random.randint(sub, (bs,), 0, n)
-            yb = ys[idx]
-            ub = None if us is None else us[idx]
-        else:
-            yb, ub = ys, us
-        lr_t = lr * min(1.0, (step + 1) / 50)  # short warmup
-        params, opt_state, aux = mr_train_step(params, opt_state, cfg, yb, ub, lr_t, phys)
-        if log_every and step % log_every == 0:
-            history.append({k: float(v) for k, v in aux.items()} | {"step": step})
-            if callback:
-                callback(step, history[-1])
+    params, metrics = engine.train_mr_scan(
+        cfg, ys, us, steps=steps, lr=lr, seed=seed,
+        batch_size=batch_size, norm=norm,
+    )
+    history = engine.history_from_metrics(metrics, log_every)
+    if callback:
+        for h in history:
+            callback(h["step"], h)
     return params, history
 
 

@@ -12,6 +12,10 @@ equivalent at the reported tolerances for these smooth systems.
 - aid:            Bergman minimal model of glucose-insulin dynamics — stands
                   in for the OhioT1D dataset (not redistributable), same
                   dimensionality and 5-min CGM sampling.
+- damped_oscillator:  linear 2-state damped harmonic oscillator.
+- controlled_pendulum: small-angle pendulum with sinusoidal torque input
+                  (SINDYc-style exogenous drive) — pairs with
+                  core/engine.recover_many's multi-system batches.
 
 Each system carries its ground-truth sparse coefficient matrix in the
 polynomial library basis so recovery error is measured exactly
@@ -159,6 +163,55 @@ def _aid_coef():
     return c
 
 
+# --- damped harmonic oscillator (linear 2-state testbed) --------------------
+_OSC = (2.0, 0.3)  # omega, damping c
+
+
+def _damped_osc(y, u, t, args):
+    omega, c = _OSC
+    x, v = y[..., 0], y[..., 1]
+    return jnp.stack([v, -(omega**2) * x - c * v], axis=-1)
+
+
+def _damped_osc_coef():
+    n_terms = n_library_terms(2, 2)
+    c = np.zeros((n_terms, 2))
+    names = term_names(2, 2, ["x", "v"])
+    ix = {n: i for i, n in enumerate(names)}
+    omega, cc = _OSC
+    c[ix["v"], 0] = 1.0
+    c[ix["x"], 1], c[ix["v"], 1] = -(omega**2), -cc
+    return c
+
+
+# --- controlled pendulum (small-angle, sinusoidal torque input) -------------
+_PEND = (4.9, 0.35)  # g/l, damping
+
+
+def _pend_input(t):
+    tq = 0.6 * jnp.sin(1.1 * t)
+    return jnp.stack([tq], axis=-1) if jnp.ndim(t) else jnp.array([tq])
+
+
+def _pendulum(y, u, t, args):
+    gl, c = _PEND
+    th, w = y[..., 0], y[..., 1]
+    tq = u[..., 0] if u is not None and u.shape[-1] else 0.0
+    return jnp.stack([w, -gl * th - c * w + tq], axis=-1)
+
+
+def _pendulum_coef():
+    # library over (th, w, u), order 2
+    n_terms = n_library_terms(3, 2)
+    c = np.zeros((n_terms, 2))
+    names = term_names(3, 2, ["th", "w", "u"])
+    ix = {n: i for i, n in enumerate(names)}
+    gl, cc = _PEND
+    c[ix["w"], 0] = 1.0
+    c[ix["th"], 1], c[ix["w"], 1], c[ix["u"], 1] = -gl, -cc, 1.0
+    return c
+
+
 SYSTEMS: dict[str, SystemSpec] = {
     "lorenz": SystemSpec("lorenz", 3, 0, 2, _lorenz, (-8.0, 7.0, 27.0), 0.01, 10.0, None, _lorenz_coef),
     "f8": SystemSpec("f8", 3, 0, 3, _f8, (0.3, 0.0, 0.2), 0.01, 12.0, None, _f8_coef),
@@ -167,10 +220,20 @@ SYSTEMS: dict[str, SystemSpec] = {
     ),
     "pathogen": SystemSpec("pathogen", 2, 0, 2, _pathogen, (0.5, 0.3), 0.02, 30.0, None, _pathogen_coef),
     "aid": SystemSpec("aid", 3, 1, 2, _aid, (7.0, 0.0, 18.0), 5.0, 1000.0, _aid_input, _aid_coef),
+    "damped_oscillator": SystemSpec(
+        "damped_oscillator", 2, 0, 2, _damped_osc, (1.2, 0.0), 0.01, 20.0, None, _damped_osc_coef
+    ),
+    "controlled_pendulum": SystemSpec(
+        "controlled_pendulum", 2, 1, 2, _pendulum, (0.6, 0.0), 0.01, 20.0, _pend_input, _pendulum_coef
+    ),
 }
 
 
 def get_system(name: str) -> SystemSpec:
+    if name not in SYSTEMS:
+        raise KeyError(
+            f"unknown system {name!r}; available: {', '.join(sorted(SYSTEMS))}"
+        )
     return SYSTEMS[name]
 
 

@@ -5,7 +5,12 @@
 - ssd_scan:        Mamba2 SSD chunked recurrence (same locality methodology).
 - flash_attention: blockwise causal/sliding-window attention for prefill.
 
-Each kernel package ships kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
+Each kernel package ships kernel.py (pallas kernel body + VMEM tiling),
 ops.py (jit'd public wrapper with interpret/XLA fallbacks) and ref.py (pure-jnp
 oracle used by the allclose test sweeps).
+
+runtime.py is the shared kernel runtime: Pallas API-drift shims
+(CompilerParams/TPUCompilerParams, BlockSpec argument order, VMEM scratch)
+behind one pallas_call_compat entry point, plus the TPU/interpret/reference
+dispatch policy every ops.py consults.
 """

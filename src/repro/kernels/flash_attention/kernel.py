@@ -21,7 +21,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import runtime as rt
 
 NEG_INF = -1e30
 
@@ -126,24 +127,22 @@ def flash_attention_pallas(
         q_offset=q_offset,
         num_kv_blocks=nk,
     )
-    return pl.pallas_call(
+    return rt.pallas_call_compat(
         kernel,
         grid=(B, QH, nq, nk),
         in_specs=[
-            pl.BlockSpec((1, 1, bq, Dh), lambda b, h, iq, ik: (b, h, iq, 0)),
-            pl.BlockSpec((1, 1, bk, Dh), lambda b, h, iq, ik: (b, h * KH // QH, ik, 0)),
-            pl.BlockSpec((1, 1, bk, Dh), lambda b, h, iq, ik: (b, h * KH // QH, ik, 0)),
+            ((1, 1, bq, Dh), lambda b, h, iq, ik: (b, h, iq, 0)),
+            ((1, 1, bk, Dh), lambda b, h, iq, ik: (b, h * KH // QH, ik, 0)),
+            ((1, 1, bk, Dh), lambda b, h, iq, ik: (b, h * KH // QH, ik, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, bq, Dh), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_specs=((1, 1, bq, Dh), lambda b, h, iq, ik: (b, h, iq, 0)),
         out_shape=jax.ShapeDtypeStruct((B, QH, Sq, Dh), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((bq, Dh), jnp.float32),
-            pltpu.VMEM((bq, 1), jnp.float32),
-            pltpu.VMEM((bq, 1), jnp.float32),
+            ((bq, Dh), jnp.float32),
+            ((bq, 1), jnp.float32),
+            ((bq, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=(pltpu.PARALLEL, pltpu.PARALLEL, pltpu.PARALLEL, pltpu.ARBITRARY),
-        ),
+        dimension_semantics=(rt.PARALLEL, rt.PARALLEL, rt.PARALLEL, rt.ARBITRARY),
         interpret=interpret,
         name="flash_attention",
     )(q, k, v)

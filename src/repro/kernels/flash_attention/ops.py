@@ -13,6 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import runtime as rt
 from repro.kernels.flash_attention import kernel as _k
 from repro.kernels.flash_attention import ref as _ref
 
@@ -22,7 +23,7 @@ def _fa_kernel_cvjp(q, k, v, causal, window, q_offset, block_q, block_k):
     return _k.flash_attention_pallas(
         q, k, v, causal=causal, window=window, q_offset=q_offset,
         block_q=block_q, block_k=block_k,
-        interpret=jax.default_backend() != "tpu",
+        interpret=not rt.on_tpu(),
     )
 
 
@@ -61,8 +62,7 @@ def flash_attention(
     qt = jnp.swapaxes(q, 1, 2)
     kt = jnp.swapaxes(k, 1, 2)
     vt = jnp.swapaxes(v, 1, 2)
-    use_kernel = (jax.default_backend() == "tpu") or bool(interpret)
-    if force_reference or not use_kernel:
+    if rt.resolve_dispatch(force_reference, interpret) is rt.Dispatch.REFERENCE:
         out = _ref.attention_reference(qt, kt, vt, causal=causal, window=window, q_offset=q_offset)
     else:
         out = _fa_kernel_cvjp(qt, kt, vt, causal, window, q_offset, block_q, block_k)

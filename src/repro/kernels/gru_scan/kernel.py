@@ -34,9 +34,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.neural_flow import INV_LIPSCHITZ_ALPHA
+from repro.kernels import runtime as rt
 
 
 def _gru_step_math(x, h, wx, wh, b, time_scale, dt, *, flow: bool, hidden: int):
@@ -125,24 +125,22 @@ def gru_scan_pallas(
 
     grid = (nb, T)
     kernel = functools.partial(_gru_scan_kernel, flow=flow, hidden=H)
-    out = pl.pallas_call(
+    out = rt.pallas_call_compat(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bb, 1, D), lambda ib, t: (ib, t, 0)),  # xs: stream x_t
-            pl.BlockSpec((bb, H), lambda ib, t: (ib, 0)),  # h0
-            pl.BlockSpec((D, 3 * H), lambda ib, t: (0, 0)),  # wx: resident
-            pl.BlockSpec((H, 3 * H), lambda ib, t: (0, 0)),  # wh: resident
-            pl.BlockSpec((1, 3 * H), lambda ib, t: (0, 0)),  # b
-            pl.BlockSpec((1, H), lambda ib, t: (0, 0)),  # time_scale
-            pl.BlockSpec((1, 1), lambda ib, t: (t, 0)),  # dt_t
+            ((bb, 1, D), lambda ib, t: (ib, t, 0)),  # xs: stream x_t
+            ((bb, H), lambda ib, t: (ib, 0)),  # h0
+            ((D, 3 * H), lambda ib, t: (0, 0)),  # wx: resident
+            ((H, 3 * H), lambda ib, t: (0, 0)),  # wh: resident
+            ((1, 3 * H), lambda ib, t: (0, 0)),  # b
+            ((1, H), lambda ib, t: (0, 0)),  # time_scale
+            ((1, 1), lambda ib, t: (t, 0)),  # dt_t
         ],
-        out_specs=pl.BlockSpec((bb, 1, H), lambda ib, t: (ib, t, 0)),
+        out_specs=((bb, 1, H), lambda ib, t: (ib, t, 0)),
         out_shape=jax.ShapeDtypeStruct((B, T, H), xs.dtype),
-        scratch_shapes=[pltpu.VMEM((bb, H), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=(pltpu.PARALLEL, pltpu.ARBITRARY),
-        ),
+        scratch_shapes=[((bb, H), jnp.float32)],
+        dimension_semantics=(rt.PARALLEL, rt.ARBITRARY),
         interpret=interpret,
         name="gru_scan",
     )(
@@ -250,27 +248,25 @@ def gru_scan_pallas_int8(
     assert B % bb == 0
     nb = B // bb
     kernel = functools.partial(_gru_scan_q_kernel, hidden=H, n_seg=n_seg)
-    return pl.pallas_call(
+    return rt.pallas_call_compat(
         kernel,
         grid=(nb, T),
         in_specs=[
-            pl.BlockSpec((bb, 1, D), lambda ib, t: (ib, t, 0)),
-            pl.BlockSpec((bb, H), lambda ib, t: (ib, 0)),
-            pl.BlockSpec((D, 3 * H), lambda ib, t: (0, 0)),
-            pl.BlockSpec((H, 3 * H), lambda ib, t: (0, 0)),
-            pl.BlockSpec((1, 3 * H), lambda ib, t: (0, 0)),
-            pl.BlockSpec((1, 3 * H), lambda ib, t: (0, 0)),
-            pl.BlockSpec((1, 3 * H), lambda ib, t: (0, 0)),
-            pl.BlockSpec((1, 1), lambda ib, t: (t, 0)),
-            pl.BlockSpec((2, n_seg), lambda ib, t: (0, 0)),
-            pl.BlockSpec((2, n_seg), lambda ib, t: (0, 0)),
+            ((bb, 1, D), lambda ib, t: (ib, t, 0)),
+            ((bb, H), lambda ib, t: (ib, 0)),
+            ((D, 3 * H), lambda ib, t: (0, 0)),
+            ((H, 3 * H), lambda ib, t: (0, 0)),
+            ((1, 3 * H), lambda ib, t: (0, 0)),
+            ((1, 3 * H), lambda ib, t: (0, 0)),
+            ((1, 3 * H), lambda ib, t: (0, 0)),
+            ((1, 1), lambda ib, t: (t, 0)),
+            ((2, n_seg), lambda ib, t: (0, 0)),
+            ((2, n_seg), lambda ib, t: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((bb, 1, H), lambda ib, t: (ib, t, 0)),
+        out_specs=((bb, 1, H), lambda ib, t: (ib, t, 0)),
         out_shape=jax.ShapeDtypeStruct((B, T, H), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((bb, H), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=(pltpu.PARALLEL, pltpu.ARBITRARY),
-        ),
+        scratch_shapes=[((bb, H), jnp.float32)],
+        dimension_semantics=(rt.PARALLEL, rt.ARBITRARY),
         interpret=interpret,
         name="gru_scan_int8_pwl",
     )(

@@ -1,33 +1,30 @@
 """Public jit'd wrapper for the fused GRU scan.
 
-Dispatch:  TPU backend -> Pallas kernel;  anywhere else -> interpret mode
-(kernel body executed in Python, semantics-identical) unless
-``force_reference`` picks the lax.scan oracle.
+Dispatch policy lives in kernels/runtime.resolve_dispatch (shared by all
+kernel families): Pallas kernel on TPU, kernel body under the interpreter
+when explicitly requested (CPU correctness sweeps), lax.scan oracle
+otherwise or when ``force_reference`` is set.
 """
 
 from __future__ import annotations
+
+import functools as _functools
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.neural_flow import GRUParams
 from repro.core.quant import make_sigmoid_table, make_tanh_table, quantize_int8
+from repro.kernels import runtime as rt
 from repro.kernels.gru_scan import kernel as _k
 from repro.kernels.gru_scan import ref as _ref
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-import functools as _functools
 
 
 @_functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8))
 def _gru_kernel_cvjp(xs, h0, wx, wh, b, time_scale, dts, flow, block_b):
     return _k.gru_scan_pallas(
         xs, h0, wx, wh, b, time_scale, dts,
-        flow=flow, block_b=block_b, interpret=not _on_tpu(),
+        flow=flow, block_b=block_b, interpret=not rt.on_tpu(),
     )
 
 
@@ -65,8 +62,7 @@ def gru_scan(
     H = params.hidden
     if dts is None:
         dts = jnp.ones((T,), xs.dtype)
-    use_kernel = _on_tpu() or bool(interpret)
-    if force_reference or not use_kernel:
+    if rt.resolve_dispatch(force_reference, interpret) is rt.Dispatch.REFERENCE:
         hs = _ref.gru_scan_reference(
             xs, h0, params.w[:D], params.w[D:], params.b, params.time_scale, dts, flow=flow
         )
@@ -102,9 +98,7 @@ def gru_scan_int8(
     tanh_t = make_tanh_table(n_seg)
     sig_tab = jnp.stack([sig_t.slopes, sig_t.intercepts])
     tanh_tab = jnp.stack([tanh_t.slopes, tanh_t.intercepts])
-    if not (_on_tpu() or bool(interpret)):
-        force_reference = True
-    if force_reference:
+    if rt.resolve_dispatch(force_reference, interpret) is rt.Dispatch.REFERENCE:
         hs = _ref.gru_scan_int8_reference(
             xs, h0, wxq.values, whq.values, wxq.scale, whq.scale, params.b, dts, sig_t, tanh_t
         )
@@ -121,7 +115,7 @@ def gru_scan_int8(
             sig_tab,
             tanh_tab,
             block_b=block_b,
-            interpret=not _on_tpu(),
+            interpret=not rt.on_tpu(),
             n_seg=n_seg,
         )
     return hs[:, -1, :], hs

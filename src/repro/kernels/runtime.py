@@ -1,0 +1,187 @@
+"""Kernel runtime: Pallas API-drift shims + the shared dispatch decision.
+
+Every kernel family (gru_scan, flash_attention, ssd_scan) goes through this
+module instead of touching ``pl.pallas_call`` directly. It owns the three
+places where the Pallas TPU API has drifted across JAX releases, plus the
+TPU/interpret/reference dispatch policy that used to be copy-pasted into all
+three ``ops.py`` files:
+
+1. Compiler params class name.  ``pltpu.TPUCompilerParams`` (JAX <= 0.4.x)
+   was renamed to ``pltpu.CompilerParams`` (JAX >= 0.5).  ``compiler_params``
+   resolves whichever spelling the installed JAX exposes.
+2. BlockSpec argument order.  Old JAX took ``BlockSpec(index_map,
+   block_shape)``; modern JAX takes ``BlockSpec(block_shape, index_map)``.
+   ``block_spec`` inspects the installed signature once and builds specs in
+   the right order.
+3. VMEM scratch spelling.  ``vmem_scratch`` wraps ``pltpu.VMEM(shape,
+   dtype)`` (raising a clear error if a future release moves it again).
+
+``pallas_call_compat`` is the single entry point: kernels hand it the kernel
+body, grid, (block_shape, index_map) spec pairs, output shapes, scratch
+shapes and dimension semantics, and it assembles a version-correct
+``pl.pallas_call``.
+
+``resolve_dispatch`` centralizes the backend decision: the compiled kernel on
+TPU, the kernel body under the Pallas interpreter when explicitly requested
+(CPU correctness sweeps), and the pure-JAX reference everywhere else.
+"""
+
+from __future__ import annotations
+
+import enum
+import inspect
+from typing import Any, Callable, Sequence
+
+import jax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Grid-dimension semantics: plain strings on every JAX we support; prefer the
+# module constants when present so we track any future enum migration.
+PARALLEL = getattr(pltpu, "PARALLEL", "parallel")
+ARBITRARY = getattr(pltpu, "ARBITRARY", "arbitrary")
+
+_COMPILER_PARAMS_SPELLINGS = ("CompilerParams", "TPUCompilerParams")
+
+
+def resolve_compiler_params_cls(ns: Any = pltpu) -> type:
+    """The compiler-params class under whichever name ``ns`` exposes it.
+
+    ``ns`` is injectable so the regression tests can pin the resolution
+    against namespaces carrying only one of the two historical spellings.
+    """
+    for name in _COMPILER_PARAMS_SPELLINGS:
+        cls = getattr(ns, name, None)
+        if cls is not None:
+            return cls
+    raise AttributeError(
+        f"Pallas TPU module {ns!r} exposes none of {_COMPILER_PARAMS_SPELLINGS}; "
+        "unsupported JAX version — extend kernels/runtime.py"
+    )
+
+
+def compiler_params(
+    dimension_semantics: Sequence[str] | None = None, ns: Any = pltpu, **kw
+) -> Any:
+    """Version-correct compiler-params object (CompilerParams/TPUCompilerParams)."""
+    if dimension_semantics is not None:
+        kw["dimension_semantics"] = tuple(dimension_semantics)
+    return resolve_compiler_params_cls(ns)(**kw)
+
+
+def blockspec_block_shape_first(cls: type = pl.BlockSpec) -> bool:
+    """True when ``cls(block_shape, index_map)`` is the installed order."""
+    try:
+        params = [p for p in inspect.signature(cls.__init__).parameters if p != "self"]
+    except (TypeError, ValueError):  # C-accelerated/builtin signature
+        return True
+    return not (params and params[0] == "index_map")
+
+
+_BLOCK_SHAPE_FIRST = blockspec_block_shape_first()
+
+
+def block_spec(
+    block_shape: tuple[int, ...], index_map: Callable | None = None
+) -> pl.BlockSpec:
+    """BlockSpec with the argument order the installed JAX expects."""
+    if _BLOCK_SHAPE_FIRST:
+        return pl.BlockSpec(tuple(block_shape), index_map)
+    return pl.BlockSpec(index_map, tuple(block_shape))
+
+
+def vmem_scratch(shape: tuple[int, ...], dtype) -> Any:
+    """VMEM scratch allocation (f32 accumulators, resident state, ...)."""
+    vmem = getattr(pltpu, "VMEM", None)
+    if vmem is None:
+        raise AttributeError(
+            "pltpu.VMEM missing; unsupported JAX version — extend kernels/runtime.py"
+        )
+    return vmem(tuple(shape), dtype)
+
+
+class Dispatch(enum.Enum):
+    """Where a kernel-family call executes."""
+
+    KERNEL = "kernel"  # compiled Pallas kernel (TPU)
+    INTERPRET = "interpret"  # kernel body under the Pallas interpreter (CPU tests)
+    REFERENCE = "reference"  # pure-JAX oracle (lax.scan / jnp)
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_dispatch(
+    force_reference: bool = False,
+    interpret: bool | None = None,
+    backend: str | None = None,
+) -> Dispatch:
+    """The shared dispatch policy for all kernel families.
+
+    - ``force_reference`` always wins (callers use it for oracle comparisons
+      and for features only the reference implements, e.g. carried state).
+    - On TPU the compiled kernel runs.
+    - Off TPU, ``interpret=True`` runs the kernel body under the interpreter
+      (semantics-identical to the TPU kernel — what the CPU test sweeps use);
+      otherwise the reference runs.
+    """
+    if force_reference:
+        return Dispatch.REFERENCE
+    backend = backend if backend is not None else jax.default_backend()
+    if backend == "tpu":
+        return Dispatch.KERNEL
+    if interpret:
+        return Dispatch.INTERPRET
+    return Dispatch.REFERENCE
+
+
+def pallas_call_compat(
+    kernel: Callable,
+    *,
+    grid: tuple[int, ...],
+    in_specs: Sequence[tuple[tuple[int, ...], Callable | None]],
+    out_specs,
+    out_shape,
+    scratch_shapes: Sequence[Any] = (),
+    dimension_semantics: Sequence[str] | None = None,
+    interpret: bool = False,
+    name: str | None = None,
+    **compiler_kw,
+):
+    """The one ``pl.pallas_call`` constructor for every kernel family.
+
+    ``in_specs``/``out_specs`` are (block_shape, index_map) pairs — this
+    module turns them into BlockSpecs in the installed argument order.
+    Convention: a single-output kernel passes ``out_specs`` as ONE tuple pair;
+    a multi-output kernel passes a LIST of pairs (mirroring ``out_shape``).
+    ``scratch_shapes`` entries may be (shape, dtype) pairs (VMEM implied) or
+    prebuilt scratch objects.
+    """
+
+    def to_spec(s):
+        if isinstance(s, tuple) and len(s) == 2 and not isinstance(s, pl.BlockSpec):
+            return block_spec(s[0], s[1])
+        return s
+
+    def to_scratch(s):
+        if isinstance(s, tuple) and len(s) == 2 and isinstance(s[0], tuple):
+            return vmem_scratch(s[0], s[1])
+        return s
+
+    if isinstance(out_specs, list):
+        out_specs_built = [to_spec(s) for s in out_specs]
+    else:
+        out_specs_built = to_spec(out_specs)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[to_spec(s) for s in in_specs],
+        out_specs=out_specs_built,
+        out_shape=out_shape,
+        scratch_shapes=[to_scratch(s) for s in scratch_shapes],
+        compiler_params=compiler_params(dimension_semantics, **compiler_kw),
+        interpret=interpret,
+        name=name,
+    )

@@ -21,7 +21,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import runtime as rt
 
 
 def _ssd_chunk_kernel(
@@ -106,29 +107,27 @@ def ssd_scan_pallas(
     kernel = functools.partial(_ssd_chunk_kernel, chunk=chunk)
 
     grid = (B, H, nc)
-    y, s_final = pl.pallas_call(
+    y, s_final = rt.pallas_call_compat(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
-            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
-            pl.BlockSpec((1, 1), lambda b, h, c: (h, 0)),
-            pl.BlockSpec((1, chunk, 1, N), lambda b, h, c: (b, c, h * G // H, 0)),
-            pl.BlockSpec((1, chunk, 1, N), lambda b, h, c: (b, c, h * G // H, 0)),
-            pl.BlockSpec((1, 1), lambda b, h, c: (h, 0)),
+            ((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            ((1, chunk, 1), lambda b, h, c: (b, c, h)),
+            ((1, 1), lambda b, h, c: (h, 0)),
+            ((1, chunk, 1, N), lambda b, h, c: (b, c, h * G // H, 0)),
+            ((1, chunk, 1, N), lambda b, h, c: (b, c, h * G // H, 0)),
+            ((1, 1), lambda b, h, c: (h, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
-            pl.BlockSpec((1, 1, N, P), lambda b, h, c: (b, h, 0, 0)),
+            ((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            ((1, 1, N, P), lambda b, h, c: (b, h, 0, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((B, T, H, P), x.dtype),
             jax.ShapeDtypeStruct((B, H, N, P), jnp.float32),
         ],
-        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=(pltpu.PARALLEL, pltpu.PARALLEL, pltpu.ARBITRARY),
-        ),
+        scratch_shapes=[((N, P), jnp.float32)],
+        dimension_semantics=(rt.PARALLEL, rt.PARALLEL, rt.ARBITRARY),
         interpret=interpret,
         name="ssd_scan",
     )(x, dt, A.reshape(-1, 1), bm, cm, D.reshape(-1, 1))

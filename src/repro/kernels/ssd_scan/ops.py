@@ -13,6 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import runtime as rt
 from repro.kernels.ssd_scan import kernel as _k
 from repro.kernels.ssd_scan import ref as _ref
 
@@ -20,7 +21,7 @@ from repro.kernels.ssd_scan import ref as _ref
 @functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
 def _ssd_kernel_cvjp(x, dt, A, bm, cm, D, chunk):
     return _k.ssd_scan_pallas(
-        x, dt, A, bm, cm, D, chunk=chunk, interpret=jax.default_backend() != "tpu"
+        x, dt, A, bm, cm, D, chunk=chunk, interpret=not rt.on_tpu()
     )
 
 
@@ -65,12 +66,10 @@ def ssd_scan(
         dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
         bm = jnp.pad(bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
         cm = jnp.pad(cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
-    if interpret is None:
-        interpret = False  # auto: kernel only where it lowers natively
-    use_kernel = (jax.default_backend() == "tpu") or interpret
-    if force_reference or initial_state is not None or not use_kernel:
-        # the kernel currently always starts from S=0; prefills with a carried
-        # state (rare) use the jnp path
+    # the kernel always starts from S=0; prefills with a carried state (rare)
+    # are a reference-only feature, folded into force_reference here
+    force_reference = force_reference or initial_state is not None
+    if rt.resolve_dispatch(force_reference, interpret) is rt.Dispatch.REFERENCE:
         y, s = _ref.ssd_chunked(x, dt, A, bm, cm, D, chunk=chunk, initial_state=initial_state)
     else:
         y, s = _ssd_kernel_cvjp(x, dt, A, bm, cm, D, chunk)

@@ -14,6 +14,13 @@ Failure drill (kills a "host" mid-run, supervisor re-meshes + restores):
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b \
         --steps 40 --chaos-step 20 --data 2 --model 2
+
+Model-recovery mode (the paper's workload, scan-jitted engine — one compiled
+program for the whole run; comma-separate systems to recover a fleet in one
+vmapped call via core/engine.recover_many):
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --recover lorenz,damped_oscillator,controlled_pendulum --steps 300
 """
 
 from __future__ import annotations
@@ -27,16 +34,48 @@ import jax
 import numpy as np
 
 
+def run_recover(systems: list[str], steps: int, lr: float) -> int:
+    """Streaming-recovery driver: one vmapped scan-jitted program recovers
+    coefficients for every requested system (core/engine.py)."""
+    from repro.core import engine
+    from repro.core.library import denormalize_theta
+
+    t0 = time.time()
+    ys_b, us_b, norms, cfg = engine.stack_systems(systems)
+    thetas = engine.recover_many(cfg, ys_b, us_b, steps=steps, lr=lr, batch_size=64)
+    thetas = np.asarray(jax.block_until_ready(thetas))
+    dt = time.time() - t0
+    print(
+        f"[recover] {len(systems)} systems x {steps} steps in {dt:.1f}s "
+        f"(one compiled program; library order {cfg.order}, {cfg.n_terms} terms)"
+    )
+    for name, th, norm in zip(systems, thetas, norms):
+        # report in PHYSICAL units — spurious terms can hide in z-scored
+        # coordinates (see merinda.recover_physical_coefficients)
+        th_phys = denormalize_theta(
+            th, norm["mean"], norm["scale"],
+            n_vars=cfg.state_dim + cfg.input_dim, order=cfg.order,
+            n_state=cfg.state_dim,
+        )
+        nz = int((np.abs(th_phys) > 0.05).sum())
+        print(f"  {name:22s} |theta|_max={np.abs(th_phys).max():.3f} active_terms~{nz}")
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--recover", default=None, metavar="SYS[,SYS...]",
+                    help="model-recovery mode: comma-separated systems from "
+                         "data/dynamics.SYSTEMS (skips LM training entirely)")
     ap.add_argument("--full", action="store_true", help="full config (TPU only)")
     ap.add_argument("--steps", type=int, default=60)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--data", type=int, default=1)
     ap.add_argument("--model", type=int, default=1)
-    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--lr", type=float, default=None,
+                    help="default 3e-4 (LM training) / 3e-3 (--recover mode)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--save-every", type=int, default=20)
     ap.add_argument("--chaos-step", type=int, default=0, help="simulate failure at step")
@@ -44,6 +83,10 @@ def main() -> int:
     ap.add_argument("--rules", default="default",
                     help="sharding rules variant (parallel/rules.RULE_VARIANTS)")
     args = ap.parse_args()
+
+    if args.recover:
+        systems = [s.strip() for s in args.recover.split(",") if s.strip()]
+        return run_recover(systems, args.steps, args.lr if args.lr is not None else 3e-3)
 
     logging.basicConfig(level=logging.INFO, format="%(name)s %(message)s")
     from repro.configs.base import ShapeConfig, get_config
@@ -66,7 +109,8 @@ def main() -> int:
         rules = rules_mod.RULE_VARIANTS[args.rules]
         with rules_mod.use_mesh_rules(mesh, rules):
             jitted, state_sh, batch_sh, _ = make_train_step(
-                cfg, shape, mesh, rules, lr=args.lr, donate=False
+                cfg, shape, mesh, rules,
+                lr=args.lr if args.lr is not None else 3e-4, donate=False
             )
 
         def init_state():

@@ -377,7 +377,8 @@ def prefill(params, batch, cfg: ModelConfig, cache_len: int):
             )
             x = _residual_constraint(x + h, cfg)
             if cfg.family == "moe":
-                h, _ = moe_mod.moe_ffn(lp["moe"], rmsnorm(lp["ln2"], x, cfg.norm_eps), cfg.moe)
+                # dropless: prefill must route like decode (see moe_ffn)
+                h, _ = moe_mod.moe_ffn(lp["moe"], rmsnorm(lp["ln2"], x, cfg.norm_eps), cfg.moe, dropless=True)
             else:
                 h = mlp(lp["mlp"], rmsnorm(lp["ln2"], x, cfg.norm_eps))
             x = _residual_constraint(x + h, cfg)
@@ -465,7 +466,7 @@ def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
             h, kv = attn_mod.decode_attention(lp["attn"], rmsnorm(lp["ln1"], x, cfg.norm_eps), pos, kv, cfg.attn)
             x = x + h
             if cfg.family == "moe":
-                h, _ = moe_mod.moe_ffn(lp["moe"], rmsnorm(lp["ln2"], x, cfg.norm_eps), cfg.moe)
+                h, _ = moe_mod.moe_ffn(lp["moe"], rmsnorm(lp["ln2"], x, cfg.norm_eps), cfg.moe, dropless=True)
             else:
                 h = mlp(lp["mlp"], rmsnorm(lp["ln2"], x, cfg.norm_eps))
             return x + h, kv

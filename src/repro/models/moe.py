@@ -38,11 +38,24 @@ def expert_capacity(m: MoEConfig, group_size: int) -> int:
     return max(4, min(c, group_size))
 
 
-def moe_ffn(params, x: jnp.ndarray, m: MoEConfig) -> tuple[jnp.ndarray, jnp.ndarray]:
+def moe_ffn(
+    params, x: jnp.ndarray, m: MoEConfig, dropless: bool = False
+) -> tuple[jnp.ndarray, jnp.ndarray]:
     """x: [B, S, D] -> (out [B, S, D], aux_loss scalar).
 
     aux_loss is the standard load-balancing loss (mean expert fraction x mean
     router prob, scaled by E).
+
+    dropless=True is the INFERENCE path (prefill + decode): every (token,
+    expert choice) is honored, so the layer is a pure per-token function of
+    its input. The capacity-bounded training path drops tokens that overflow
+    an expert's queue — that makes a token's output depend on which other
+    tokens share its dispatch group, which breaks prefill/decode parity (a
+    decoded token is alone in its group and never dropped; the same token
+    inside a prefill competes with the whole prompt). Dropless inference
+    computes all experts densely and combines with the routing weights —
+    E/top_k extra FLOPs, fine for smoke-scale eval; production serving would
+    use a gather-based dispatch instead.
     """
     # SP boundary: seq all-gather fwd / reduce-scatter bwd (rules.sp_gather)
     x = sp_gather(x)
@@ -63,8 +76,29 @@ def moe_ffn(params, x: jnp.ndarray, m: MoEConfig) -> tuple[jnp.ndarray, jnp.ndar
     top_p, top_e = jax.lax.top_k(probs, K)  # [ng, g, K]
     top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
 
-    # position of each (token, choice) within its expert queue
     onehot = jax.nn.one_hot(top_e, E, dtype=jnp.float32)  # [ng, g, K, E]
+
+    # load-balance auxiliary loss (same for both dispatch modes)
+    frac_tokens = jnp.mean(onehot.sum(2), axis=1)  # [ng, E] fraction routed
+    frac_prob = jnp.mean(probs, axis=1)  # [ng, E]
+    aux = (E * jnp.mean(jnp.sum(frac_tokens * frac_prob, axis=-1))).astype(jnp.float32)
+
+    if dropless:
+        # same sharding story as the capacity path below: token dim carries
+        # batch, expert or per-expert ffn dim carries model (rules fallback) —
+        # the dense [ng, g, E, F] activation otherwise replicates per device
+        comb_e = jnp.einsum("ngk,ngke->nge", top_p, onehot)  # routing weights
+        h = jax.nn.silu(jnp.einsum("ngd,edf->ngef", xt, params["w_gate"]))
+        h = h * jnp.einsum("ngd,edf->ngef", xt, params["w_up"])
+        h = constraint(h, ("batch", None, "act_expert", "act_mlp"))
+        out_e = jnp.einsum("ngef,efd->nged", h, params["w_down"])
+        out_e = constraint(out_e, ("batch", None, "act_expert", "act_embed"))
+        out = jnp.einsum("nge,nged->ngd", comb_e.astype(x.dtype), out_e)
+        out = constraint(out, ("batch", None, "act_embed"))
+        out = out.reshape(-1, D)[:n_tok]
+        return out.reshape(B, S, D), aux
+
+    # position of each (token, choice) within its expert queue
     flat = onehot.reshape(ng, g * K, E)
     pos = jnp.cumsum(flat, axis=1) - 1.0  # [ng, g*K, E]
     pos = (pos * flat).reshape(ng, g, K, E).sum(-1)  # [ng, g, K] queue slot
@@ -93,10 +127,4 @@ def moe_ffn(params, x: jnp.ndarray, m: MoEConfig) -> tuple[jnp.ndarray, jnp.ndar
     out = jnp.einsum("ngec,necd->ngd", comb.astype(x.dtype), expert_out)
     out = constraint(out, ("batch", None, "act_embed"))
     out = out.reshape(-1, D)[:n_tok]
-
-    # load-balance auxiliary loss
-    frac_tokens = jnp.mean(onehot.sum(2), axis=1)  # [ng, E] fraction routed
-    frac_prob = jnp.mean(probs, axis=1)  # [ng, E]
-    aux = E * jnp.mean(jnp.sum(frac_tokens * frac_prob, axis=-1))
-
-    return out.reshape(B, S, D), aux.astype(jnp.float32)
+    return out.reshape(B, S, D), aux

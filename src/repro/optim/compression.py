@@ -36,7 +36,6 @@ def compress_reduce_grads(grads: Any, errors: Any, axis_name: str = "pod"):
 
     Returns (reduced_grads fp32-ish, new_errors). grads/errors are pytrees.
     """
-    n = jax.lax.axis_size(axis_name)
 
     def one(g, e):
         g32 = g.astype(jnp.float32) + e

@@ -34,9 +34,23 @@ from jax.sharding import Mesh, PartitionSpec as P
 try:  # jax >= 0.6 moved shard_map out of experimental
     from jax import shard_map as _shard_map_mod  # type: ignore
 
-    shard_map = _shard_map_mod.shard_map if hasattr(_shard_map_mod, "shard_map") else _shard_map_mod
+    _shard_map = _shard_map_mod.shard_map if hasattr(_shard_map_mod, "shard_map") else _shard_map_mod
 except Exception:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map  # type: ignore
+    from jax.experimental.shard_map import shard_map as _shard_map  # type: ignore
+
+import inspect as _inspect
+
+# the replication-check kwarg was renamed check_rep -> check_vma in jax 0.7
+_CHECK_KW = (
+    "check_vma"
+    if "check_vma" in _inspect.signature(_shard_map).parameters
+    else "check_rep"
+)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_replication: bool = True):
+    kw = {_CHECK_KW: check_replication}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
 
 
 def split_stages(stacked, n_stages: int):
@@ -112,7 +126,7 @@ def pipeline_spmd(layer_fn, stacked, x_mb: jnp.ndarray, mesh: Mesh, axis: str = 
         P(),  # microbatches replicated across stages
     )
     fn = shard_map(
-        per_stage, mesh=mesh, in_specs=in_specs, out_specs=P(), check_vma=False
+        per_stage, mesh=mesh, in_specs=in_specs, out_specs=P(), check_replication=False
     )
     return fn(staged, x_mb)
 

@@ -159,13 +159,23 @@ def _active_rules() -> dict | None:
     return mr[1] if mr else None
 
 
+def _mesh_context(mesh: Mesh):
+    """API-drift shim: jax.set_mesh(mesh) is the context-manager form on
+    jax >= 0.7; on older releases the Mesh object itself is the context
+    manager that activates it."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
+
+
 @contextlib.contextmanager
 def use_mesh_rules(mesh: Mesh, rules: dict[str, list[Candidate]] | None = None):
     """Activate logical sharding constraints for model code traced within."""
     prev = _active()
     _ctx.mesh_rules = (mesh, rules or DEFAULT_RULES)
     try:
-        with jax.set_mesh(mesh):  # context-manager form (jax >= 0.7)
+        with _mesh_context(mesh):
             yield
     finally:
         _ctx.mesh_rules = prev
@@ -184,7 +194,9 @@ def constraint(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
         return x
     mesh, rules = mr
     spec = partition_spec(x.shape, axes, mesh, rules)
-    cur = jax.sharding.get_abstract_mesh()
+    # get_abstract_mesh is jax >= 0.5-only; older releases have no abstract-
+    # mesh tracking, so the rules-table mesh is authoritative there
+    cur = getattr(jax.sharding, "get_abstract_mesh", lambda: None)()
     manual: set[str] = set()
     use_mesh = mesh
     if cur is not None and not getattr(cur, "empty", True) and tuple(

@@ -1,0 +1,135 @@
+"""kernels/runtime compat+dispatch layer: shims pinned against both API
+spellings, dispatch policy, and interpret-vs-reference parity for all three
+kernel families routed through pallas_call_compat."""
+
+from __future__ import annotations
+
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import runtime as rt
+
+
+# --- CompilerParams spelling shim -------------------------------------------
+class _ParamsNew:
+    def __init__(self, **kw):
+        self.kw = kw
+
+
+class _ParamsOld:
+    def __init__(self, **kw):
+        self.kw = kw
+
+
+def test_compiler_params_resolves_new_spelling():
+    ns = types.SimpleNamespace(CompilerParams=_ParamsNew)
+    assert rt.resolve_compiler_params_cls(ns) is _ParamsNew
+
+
+def test_compiler_params_resolves_old_spelling():
+    ns = types.SimpleNamespace(TPUCompilerParams=_ParamsOld)
+    assert rt.resolve_compiler_params_cls(ns) is _ParamsOld
+
+
+def test_compiler_params_prefers_new_when_both_exist():
+    ns = types.SimpleNamespace(CompilerParams=_ParamsNew, TPUCompilerParams=_ParamsOld)
+    assert rt.resolve_compiler_params_cls(ns) is _ParamsNew
+
+
+def test_compiler_params_unknown_namespace_raises():
+    with pytest.raises(AttributeError, match="runtime.py"):
+        rt.resolve_compiler_params_cls(types.SimpleNamespace())
+
+
+def test_compiler_params_builds_on_installed_jax():
+    p = rt.compiler_params(dimension_semantics=(rt.PARALLEL, rt.ARBITRARY))
+    assert tuple(p.dimension_semantics) == (rt.PARALLEL, rt.ARBITRARY)
+
+
+# --- BlockSpec argument-order shim ------------------------------------------
+class _SpecBlockShapeFirst:
+    def __init__(self, block_shape=None, index_map=None):
+        self.block_shape, self.index_map = block_shape, index_map
+
+
+class _SpecIndexMapFirst:
+    def __init__(self, index_map=None, block_shape=None):
+        self.block_shape, self.index_map = block_shape, index_map
+
+
+def test_blockspec_order_detection_both_orders():
+    assert rt.blockspec_block_shape_first(_SpecBlockShapeFirst)
+    assert not rt.blockspec_block_shape_first(_SpecIndexMapFirst)
+
+
+def test_block_spec_builds_on_installed_jax():
+    spec = rt.block_spec((8, 128), lambda i: (i, 0))
+    assert tuple(spec.block_shape) == (8, 128)
+
+
+# --- dispatch policy ---------------------------------------------------------
+def test_dispatch_force_reference_wins_everywhere():
+    for backend in ("cpu", "tpu", "gpu"):
+        for interp in (None, False, True):
+            assert (
+                rt.resolve_dispatch(True, interp, backend=backend)
+                is rt.Dispatch.REFERENCE
+            )
+
+
+def test_dispatch_tpu_runs_kernel():
+    assert rt.resolve_dispatch(False, None, backend="tpu") is rt.Dispatch.KERNEL
+    assert rt.resolve_dispatch(False, True, backend="tpu") is rt.Dispatch.KERNEL
+
+
+def test_dispatch_cpu_interpret_vs_reference():
+    assert rt.resolve_dispatch(False, True, backend="cpu") is rt.Dispatch.INTERPRET
+    assert rt.resolve_dispatch(False, None, backend="cpu") is rt.Dispatch.REFERENCE
+    assert rt.resolve_dispatch(False, False, backend="cpu") is rt.Dispatch.REFERENCE
+
+
+# --- interpret-vs-reference parity through the compat layer ------------------
+def test_gru_interpret_matches_reference():
+    from repro.core.neural_flow import gru_scan_ref, init_gru
+    from repro.kernels.gru_scan.ops import gru_scan
+
+    key = jax.random.key(0)
+    p = init_gru(key, 4, 16)
+    xs = jax.random.normal(key, (2, 9, 4), jnp.float32)
+    h0 = jax.random.normal(jax.random.key(1), (2, 16), jnp.float32) * 0.1
+    _, hs_r = gru_scan_ref(p, xs, h0, flow=True)
+    _, hs_k = gru_scan(p, xs, h0, flow=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(hs_k), np.asarray(hs_r), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_interpret_matches_reference():
+    from repro.kernels.flash_attention.ops import flash_attention
+
+    key = jax.random.key(2)
+    q = jax.random.normal(key, (1, 64, 2, 32), jnp.float32)
+    k = jax.random.normal(jax.random.key(3), (1, 64, 2, 32), jnp.float32)
+    v = jax.random.normal(jax.random.key(4), (1, 64, 2, 32), jnp.float32)
+    out_k = flash_attention(q, k, v, causal=True, interpret=True, block_q=32, block_k=32)
+    out_r = flash_attention(q, k, v, causal=True, force_reference=True)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), atol=2e-5, rtol=2e-5)
+
+
+def test_ssd_interpret_matches_reference():
+    from repro.kernels.ssd_scan.ops import ssd_scan
+
+    key = jax.random.key(5)
+    B, T, H, P, G, N = 1, 64, 2, 8, 1, 4
+    x = jax.random.normal(key, (B, T, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(jax.random.key(6), (B, T, H))) * 0.1
+    A = -jax.nn.softplus(jax.random.normal(jax.random.key(7), (H,)))
+    bm = jax.random.normal(jax.random.key(8), (B, T, G, N), jnp.float32)
+    cm = jax.random.normal(jax.random.key(9), (B, T, G, N), jnp.float32)
+    D = jax.random.normal(jax.random.key(10), (H,), jnp.float32)
+    y_k, s_k = ssd_scan(x, dt, A, bm, cm, D, chunk=32, interpret=True)
+    y_r, s_r = ssd_scan(x, dt, A, bm, cm, D, chunk=32, force_reference=True)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), atol=2e-4, rtol=2e-4)

@@ -90,11 +90,7 @@ def test_grad_compression_int8_error_feedback():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.optim.compression import compress_reduce_grads, init_error_buffers
-        try:
-            from jax import shard_map as _m
-            shard_map = _m.shard_map if hasattr(_m, "shard_map") else _m
-        except Exception:
-            from jax.experimental.shard_map import shard_map
+        from repro.parallel.pipeline import shard_map  # check_rep/check_vma compat
         mesh = jax.make_mesh((4,), ("pod",))
         g_global = jax.random.normal(jax.random.key(0), (4, 64, 8))  # per-pod grads
         mean_ref = jnp.mean(g_global, axis=0)
@@ -104,7 +100,7 @@ def test_grad_compression_int8_error_feedback():
             return out["w"], e2["w"]
 
         fn = shard_map(body, mesh=mesh, in_specs=(P("pod"), P("pod")),
-                       out_specs=(P(), P("pod")), check_vma=False)
+                       out_specs=(P(), P("pod")), check_replication=False)
         # one step: quantization error bounded
         e0 = jnp.zeros_like(g_global)
         red1, e1 = fn(g_global, e0)

@@ -1,10 +1,18 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+hypothesis is a dev-only dependency (requirements-dev.txt); environments
+without it (e.g. the minimal CPU container) skip this module instead of
+aborting collection.
+"""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.library import exponent_table, n_library_terms, polynomial_features, term_names
