@@ -20,8 +20,6 @@ the same conclusion as the paper's s1D_s2L_s3L_s4D row.
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 
 from benchmarks.common import HBM_BW, PEAK_FLOPS, TPU_CLOCK_HZ, emit
 

@@ -8,7 +8,7 @@ import jax
 import numpy as np
 
 # v5e-class hardware model (same constants as analysis/hlo.py)
-from repro.analysis.hlo import HBM_BW, ICI_BW, PEAK_FLOPS, analyze_module
+from repro.analysis.hlo import HBM_BW, PEAK_FLOPS, analyze_module
 
 TPU_CLOCK_HZ = 940e6  # v5e nominal clock: converts seconds -> "cycles"
 

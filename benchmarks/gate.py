@@ -1,0 +1,75 @@
+"""Benchmark regression gate: BENCH_*.json vs the committed floors.
+
+``benchmarks/baselines.json`` maps suite -> gated metric -> {"floor": x}.
+``run.py --smoke`` writes ``BENCH_<suite>.json`` files at the repo root and
+calls :func:`check_all`; CI uploads the JSONs as artifacts and fails the
+bench-smoke job when any gated metric lands below its floor.
+
+Gated metrics are dimensionless ratios only — deterministic cost-model
+ratios (cycles suite) or speedups with conservative floors (engine/stream
+suites). Absolute wall times live in each file's "info" section and are
+never gated, so the gate is stable across runner hardware.
+
+Standalone usage (after a smoke run has produced the JSONs):
+
+    PYTHONPATH=src python -m benchmarks.gate
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+BASELINES = Path(__file__).resolve().parent / "baselines.json"
+
+
+def check(bench: dict, floors: dict, name: str) -> list[str]:
+    """Compare one suite's gated metrics against its floors."""
+    failures = []
+    gated = bench.get("gated", {})
+    for metric, spec in floors.items():
+        floor = spec["floor"]
+        value = gated.get(metric)
+        if not isinstance(value, (int, float)):
+            failures.append(f"{name}: gated metric {metric!r} missing from BENCH json")
+        elif value < floor:
+            failures.append(f"{name}: {metric} = {value} < committed floor {floor}")
+    return failures
+
+
+def check_all(
+    bench_dir: Path | str = REPO_ROOT, baselines_path: Path | str = BASELINES
+) -> list[str]:
+    """Check every suite named in baselines.json; returns failure messages."""
+    bench_dir = Path(bench_dir)
+    with open(baselines_path) as f:
+        baselines = json.load(f)
+    failures = []
+    for suite, floors in sorted(baselines.items()):
+        path = bench_dir / f"BENCH_{suite}.json"
+        if not path.exists():
+            failures.append(f"{suite}: {path} missing (run `python -m benchmarks.run --smoke`)")
+            continue
+        with open(path) as f:
+            failures.extend(check(json.load(f), floors, suite))
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--bench-dir", default=str(REPO_ROOT))
+    ap.add_argument("--baselines", default=str(BASELINES))
+    args = ap.parse_args(argv)
+    failures = check_all(args.bench_dir, args.baselines)
+    if failures:
+        for msg in failures:
+            print(f"[gate] REGRESSION: {msg}")
+        return 1
+    print("[gate] all gated benchmark metrics at or above committed floors")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

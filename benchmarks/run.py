@@ -1,6 +1,6 @@
 """Benchmark aggregator — one suite per paper table.
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME] [--smoke]
 
 Prints ``name,us_per_call,derived`` CSV rows (stdout), one suite at a time:
 
@@ -9,22 +9,100 @@ Prints ``name,us_per_call,derived`` CSV rows (stdout), one suite at a time:
     stagemap   paper Table 7    (kernel resource-mapping sweep)
     accuracy   paper Table 6    (MERINDA vs EMILY vs PINN+SR vs SINDy)
     platform   paper Table 5    (workload runtime/memory/error on AID)
+    stream     streaming service (batched slots vs serial recovery)
     roofline   §Roofline        (40-cell dry-run table, markdown to stderr)
+
+``--smoke`` runs the reduced-size GATED subset (cycles + engine + stream)
+and writes ``BENCH_cycles.json`` / ``BENCH_stream.json`` at the repo root,
+then checks them against ``benchmarks/baselines.json`` (benchmarks/gate.py)
+— the CI bench-smoke job. The JSON files are deterministic: keys sorted,
+all seeds fixed, and the gated section carries only dimensionless ratios
+(deterministic cost-model ratios or speedups) — absolute wall times and
+other machine-dependent numbers stay in the ungated "info" section.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def write_bench_json(path: Path, suite: str, gated: dict, info: dict, smoke: bool) -> None:
+    """Deterministic BENCH_*.json: sorted keys, no timestamps, fixed layout."""
+    doc = {
+        "meta": {"suite": suite, "smoke": smoke, "seed": 0},
+        "gated": gated,
+        "info": info,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path}", flush=True)
+
+
+def run_smoke() -> int:
+    """Reduced gated subset -> BENCH_*.json at the repo root -> gate check."""
+    from benchmarks import bench_cycles, bench_stream, gate
+    from benchmarks.common import emit
+
+    print("# suite: cycles (smoke)", flush=True)
+    rows, m_cycles = bench_cycles.run()
+    for name, us, derived in rows:
+        emit(name, us, derived)
+    rows, m_engine = bench_cycles.run_engine(steps=300)
+    for name, us, derived in rows:
+        emit(name, us, derived)
+    write_bench_json(
+        REPO_ROOT / "BENCH_cycles.json",
+        "cycles",
+        gated={
+            "ltc_over_kernel_interval_ratio": m_cycles["ltc_over_kernel_interval_ratio"],
+            "engine_loop_over_scan_speedup": m_engine["loop_over_scan_speedup"],
+        },
+        info={
+            "interval_cycles": m_cycles["interval_cycles"],
+            "engine": m_engine["info"],
+        },
+        smoke=True,
+    )
+
+    print("# suite: stream (smoke)", flush=True)
+    rows, m_stream = bench_stream.run(smoke=True)
+    for name, us, derived in rows:
+        emit(name, us, derived)
+    info = m_stream.pop("info")
+    write_bench_json(
+        REPO_ROOT / "BENCH_stream.json", "stream", gated=m_stream, info=info, smoke=True
+    )
+
+    failures = gate.check_all(REPO_ROOT)
+    if failures:
+        for msg in failures:
+            print(f"# GATE REGRESSION: {msg}", file=sys.stderr)
+        return 1
+    print("# gate: all gated metrics at or above committed floors", flush=True)
+    return 0
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale budgets")
     ap.add_argument("--only", default=None)
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="reduced gated subset; writes + gates BENCH_*.json at the repo root",
+    )
     args = ap.parse_args()
+
+    if args.smoke:
+        return run_smoke()
 
     from benchmarks import (
         bench_accuracy,
@@ -32,6 +110,7 @@ def main() -> int:
         bench_platform,
         bench_profile,
         bench_stagemap,
+        bench_stream,
     )
 
     suites = {
@@ -40,6 +119,7 @@ def main() -> int:
         "stagemap": lambda: bench_stagemap.main(),
         "accuracy": lambda: bench_accuracy.main(fast=not args.full),
         "platform": lambda: bench_platform.main(fast=not args.full),
+        "stream": lambda: bench_stream.main(),
     }
     failures = []
     for name, fn in suites.items():

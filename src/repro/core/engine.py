@@ -23,7 +23,7 @@ dispatch structure differs.
 from __future__ import annotations
 
 import functools
-from typing import Any, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp

@@ -30,10 +30,10 @@ import jax.numpy as jnp
 
 from repro.core import ode
 from repro.core.library import n_library_terms, polynomial_features
-from repro.core.ltc import LTCParams, init_ltc, ltc_scan
-from repro.core.neural_flow import GRUParams, gru_scan_ref, init_gru
+from repro.core.ltc import init_ltc, ltc_scan
+from repro.core.neural_flow import gru_scan_ref, init_gru
 from repro.core.quant import QuantConfig, fake_quant_ste
-from repro.optim import adamw_init, adamw_update, clip_by_global_norm
+from repro.optim import adamw_update, clip_by_global_norm
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,11 +131,12 @@ def _encode(params: MRParams, cfg: MRConfig, xs: jnp.ndarray) -> jnp.ndarray:
     return h_T
 
 
-def mr_forward(params: MRParams, cfg: MRConfig, ys: jnp.ndarray, us: jnp.ndarray | None):
-    """Returns (theta [B, n_terms, n_state], shifts [B, q])."""
-    xs = ys if us is None or us.shape[-1] == 0 else jnp.concatenate([ys, us], axis=-1)
-    xs = _maybe_quant(xs, cfg, "a")
-    h = _encode(params, cfg, xs)
+def head_from_hidden(params: MRParams, cfg: MRConfig, h: jnp.ndarray):
+    """Dense head: encoder summary state [B, V] -> (theta, shifts).
+
+    Split out of mr_forward so serving paths that swap the encoder (e.g. the
+    int8/PWL kernel in core/stream.py) reuse the exact head math.
+    """
     # RMS-normalize the summary state: keeps the initial Theta scale O(0.1)
     # for every encoder family (the iterative NODE/LTC encoders otherwise
     # hand the head O(50) activations and the RK4 reconstruction diverges).
@@ -145,9 +146,17 @@ def mr_forward(params: MRParams, cfg: MRConfig, ys: jnp.ndarray, us: jnp.ndarray
     w2 = _maybe_quant(params.head_w2, cfg, "w")
     z = jax.nn.relu(h @ w1 + params.head_b1)
     out = z @ w2 + params.head_b2
-    theta = out[..., : cfg.n_coef].reshape(ys.shape[0], cfg.n_terms, cfg.state_dim)
+    theta = out[..., : cfg.n_coef].reshape(h.shape[0], cfg.n_terms, cfg.state_dim)
     shifts = out[..., cfg.n_coef :]
     return theta, shifts
+
+
+def mr_forward(params: MRParams, cfg: MRConfig, ys: jnp.ndarray, us: jnp.ndarray | None):
+    """Returns (theta [B, n_terms, n_state], shifts [B, q])."""
+    xs = ys if us is None or us.shape[-1] == 0 else jnp.concatenate([ys, us], axis=-1)
+    xs = _maybe_quant(xs, cfg, "a")
+    h = _encode(params, cfg, xs)
+    return head_from_hidden(params, cfg, h)
 
 
 def _recovered_dynamics(cfg: MRConfig):

@@ -1,0 +1,447 @@
+"""Slot-based, continuously-batched online model-recovery service.
+
+The paper's headline property is "one setup, then continuous streaming":
+configure the pipeline once, then recovery updates flow with no per-step
+launch or synchronization overhead (the FPGA dataflow claim). This module is
+the serving-system analogue for a FLEET of dynamical-system streams:
+
+- N slots each hold one stream's ring-buffer window, warm-started MERINDA
+  params and optimizer state inside ONE shared pytree (SlotState);
+- every tick executes a single donated, jit-cached program (``tick``) that
+  rolls new observations into every slot's buffer (data/windows.py),
+  re-windows and re-normalizes device-side, runs K scan-jitted recovery
+  steps per slot via a vmapped train loop, and reads out per-slot
+  coefficient estimates + their tick-over-tick delta;
+- slots whose coefficient delta falls below threshold are EVICTED and the
+  next queued stream is ADMITTED into the freed slot via
+  ``dynamic_update_slice`` — the same admission structure as the LM decode
+  service in launch/serve.py, applied to model recovery;
+- evicted params are kept in a warm-start registry, so a returning stream
+  resumes from its previous model instead of a cold init.
+
+``RecoveryService`` is the host-side orchestrator (queue, eviction policy,
+warm-start registry); everything numerical stays inside compiled programs.
+The optional int8 readout path (``readout_theta(..., quant=True)``) serves
+converged coefficients through the fixed-point GRU kernel
+(kernels/gru_scan int8 + PWL activations) — the paper's serving
+configuration, exercised end to end.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import WARMUP_STEPS
+from repro.core.merinda import (
+    MRConfig,
+    MRParams,
+    head_from_hidden,
+    init_mr,
+    mr_forward,
+    mr_train_step,
+)
+from repro.data.windows import buffer_stats, n_buffer_windows, roll_buffer, window_views
+from repro.optim import adamw_init
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Static service configuration (hashable: usable as a jit static arg)."""
+
+    buf_len: int = 160  # ring-buffer length L (observations per slot)
+    window: int = 32  # T: window length fed to the encoder
+    stride: int = 8  # window stride over the buffer
+    chunk: int = 16  # C: new observations ingested per tick
+    steps_per_tick: int = 8  # K: optimizer steps per slot per tick
+    lr: float = 3e-3
+    batch_size: int | None = None  # windows per step (None = all N windows)
+    ema: float = 0.9  # smoothing for the per-tick Theta readout
+    delta_tol: float = 0.015  # relative coefficient-delta eviction threshold
+    min_steps: int = 128  # no eviction before this many optimizer steps
+    max_steps: int = 400  # unconditional eviction budget per stream
+
+    def __post_init__(self):
+        if self.window > self.buf_len:
+            raise ValueError(f"window {self.window} exceeds buf_len {self.buf_len}")
+        if self.chunk > self.buf_len:
+            # roll_buffer would silently GROW the buffer past buf_len and
+            # every static shape downstream (admit, n_windows) would be wrong
+            raise ValueError(f"chunk {self.chunk} exceeds buf_len {self.buf_len}")
+        if self.stride < 1 or self.steps_per_tick < 1 or self.chunk < 1:
+            raise ValueError("stride, chunk and steps_per_tick must be >= 1")
+
+    @property
+    def n_windows(self) -> int:
+        return n_buffer_windows(self.buf_len, self.window, self.stride)
+
+
+class SlotState(NamedTuple):
+    """One shared pytree for all S slots (every leaf has leading axis S)."""
+
+    params: Any  # MRParams, leaves [S, ...]
+    opt: Any  # AdamWState, leaves [S, ...]
+    buf_y: jnp.ndarray  # [S, L, n] raw observations (ring buffer)
+    buf_u: jnp.ndarray  # [S, L, m] exogenous inputs (m may be 0)
+    theta: jnp.ndarray  # [S, n_terms, n] last readout (normalized coords)
+    delta: jnp.ndarray  # [S] relative theta change at the last tick
+    loss: jnp.ndarray  # [S] last-step reconstruction MSE
+    mean: jnp.ndarray  # [S, n] normalization stats FROZEN at admission
+    scale: jnp.ndarray  # [S, n]
+    steps: jnp.ndarray  # [S] int32 optimizer steps since admission
+    active: jnp.ndarray  # [S] bool
+    stream_id: jnp.ndarray  # [S] int32 (-1 = empty slot)
+
+
+def cold_start(key: jax.Array, cfg: MRConfig) -> tuple[MRParams, Any]:
+    """Fresh (params, opt_state) for one admission."""
+    params = init_mr(key, cfg)
+    return params, adamw_init(params)
+
+
+def init_slots(key: jax.Array, cfg: MRConfig, scfg: StreamConfig, n_slots: int) -> SlotState:
+    """All-empty service state: per-slot fresh params, inactive slots."""
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n_slots))
+    params = jax.vmap(lambda k: init_mr(k, cfg))(keys)
+    opt = jax.vmap(adamw_init)(params)
+    n, m = cfg.state_dim, cfg.input_dim
+    return SlotState(
+        params=params,
+        opt=opt,
+        buf_y=jnp.zeros((n_slots, scfg.buf_len, n), jnp.float32),
+        buf_u=jnp.zeros((n_slots, scfg.buf_len, m), jnp.float32),
+        theta=jnp.zeros((n_slots, cfg.n_terms, n), jnp.float32),
+        delta=jnp.full((n_slots,), jnp.inf, jnp.float32),
+        loss=jnp.full((n_slots,), jnp.inf, jnp.float32),
+        mean=jnp.zeros((n_slots, n), jnp.float32),
+        scale=jnp.ones((n_slots, n), jnp.float32),
+        steps=jnp.zeros((n_slots,), jnp.int32),
+        active=jnp.zeros((n_slots,), bool),
+        stream_id=jnp.full((n_slots,), -1, jnp.int32),
+    )
+
+
+def _write_slot(tree: Any, slot: jnp.ndarray, one: Any) -> Any:
+    """Write one slot's entry (leading axis) across a whole pytree."""
+
+    def wr(full, new):
+        new = jnp.asarray(new, full.dtype)
+        return jax.lax.dynamic_update_slice_in_dim(full, new[None], slot, axis=0)
+
+    return jax.tree.map(wr, tree, one)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def admit(
+    state: SlotState,
+    slot: jnp.ndarray,  # scalar int32 (traced: one program serves all slots)
+    stream_id: jnp.ndarray,
+    buf_y: jnp.ndarray,  # [L, n] initial history
+    buf_u: jnp.ndarray,  # [L, m]
+    params: MRParams,  # cold init or warm-start tree (single slot)
+    opt: Any,
+) -> SlotState:
+    """Admit one stream into ``slot`` (dynamic_update_slice across the pytree).
+
+    Normalization stats are computed from the admission history and FROZEN
+    for the stream's lifetime: re-estimating them as the buffer slides would
+    wobble the coefficient basis under the optimizer every tick (a moving
+    target Theta has to chase) and make the EMA readout mix estimates from
+    different coordinate systems.
+    """
+    n_terms, n = state.theta.shape[1:]
+    mean, scale = buffer_stats(buf_y)
+    return SlotState(
+        params=_write_slot(state.params, slot, params),
+        opt=_write_slot(state.opt, slot, opt),
+        buf_y=_write_slot(state.buf_y, slot, buf_y),
+        buf_u=_write_slot(state.buf_u, slot, buf_u),
+        theta=_write_slot(state.theta, slot, jnp.zeros((n_terms, n))),
+        delta=_write_slot(state.delta, slot, jnp.inf),
+        loss=_write_slot(state.loss, slot, jnp.inf),
+        mean=_write_slot(state.mean, slot, mean[0]),
+        scale=_write_slot(state.scale, slot, scale[0]),
+        steps=_write_slot(state.steps, slot, jnp.zeros((), jnp.int32)),
+        active=_write_slot(state.active, slot, jnp.ones((), bool)),
+        stream_id=_write_slot(state.stream_id, slot, stream_id),
+    )
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def deactivate(state: SlotState, slot: jnp.ndarray) -> SlotState:
+    """Mark a slot empty (no queued stream to admit)."""
+    return state._replace(
+        active=_write_slot(state.active, slot, jnp.zeros((), bool)),
+        stream_id=_write_slot(state.stream_id, slot, jnp.full((), -1, jnp.int32)),
+    )
+
+
+def _slot_windows(buf_y, buf_u, mean, scale, scfg: StreamConfig):
+    """Normalize a buffer (frozen admission stats) and window it."""
+    yw = window_views((buf_y - mean) / scale, scfg.window, scfg.stride)
+    uw = window_views(buf_u, scfg.window, scfg.stride)
+    return yw, uw
+
+
+def _recover_steps(params, opt, yw, uw, key, steps0, *, cfg: MRConfig, scfg: StreamConfig):
+    """K optimizer steps on one slot's windows (scan body; vmapped in tick)."""
+    n_win = yw.shape[0]
+    bs = scfg.batch_size or n_win
+    sample = bs < n_win
+
+    def body(carry, j):
+        p, o = carry
+        if sample:
+            sub = jax.random.fold_in(key, j)
+            idx = jax.random.randint(sub, (bs,), 0, n_win)
+            yb, ub = jnp.take(yw, idx, axis=0), jnp.take(uw, idx, axis=0)
+        else:
+            yb, ub = yw, uw
+        # linear warmup then inverse-sqrt decay: the decay makes the Theta
+        # readout settle so the coefficient-delta eviction signal converges
+        # (constant lr keeps the estimate jittering above any useful tol)
+        frac = (steps0 + j + 1.0) / WARMUP_STEPS
+        lr_t = scfg.lr * jnp.minimum(frac, jax.lax.rsqrt(frac))
+        p, o, aux = mr_train_step(p, o, cfg, yb, ub, lr_t, None)
+        return (p, o), aux["recon_mse"]
+
+    (params, opt), recon = jax.lax.scan(body, (params, opt), jnp.arange(scfg.steps_per_tick))
+    theta, _ = mr_forward(params, cfg, yw, uw)
+    return params, opt, theta.mean(axis=0), recon[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "scfg"), donate_argnums=(0,))
+def tick(
+    state: SlotState,
+    new_y: jnp.ndarray,  # [S, C, n] fresh observations (zeros for idle slots)
+    new_u: jnp.ndarray,  # [S, C, m]
+    key: jax.Array,
+    *,
+    cfg: MRConfig,
+    scfg: StreamConfig,
+) -> SlotState:
+    """One service tick: ingest + K recovery steps + readout, for ALL slots.
+
+    A single compiled program (jit-cached across the whole run): ring-buffer
+    roll, per-slot re-normalization and windowing, the vmapped K-step train
+    scan and the coefficient readout all execute device-side with zero
+    per-slot or per-step dispatch — the service-level analogue of the
+    paper's "one setup, continuous streaming" pipeline.
+    """
+    buf_y = roll_buffer(state.buf_y, new_y)
+    buf_u = roll_buffer(state.buf_u, new_u)
+    yw, uw = jax.vmap(lambda y, u, mu, sd: _slot_windows(y, u, mu, sd, scfg))(
+        buf_y, buf_u, state.mean, state.scale
+    )
+
+    n_slots = buf_y.shape[0]
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n_slots))
+    params, opt, theta, recon = jax.vmap(
+        lambda p, o, y, u, k, s: _recover_steps(p, o, y, u, k, s, cfg=cfg, scfg=scfg)
+    )(state.params, state.opt, yw, uw, keys, state.steps)
+
+    # EMA-smoothed readout: the window set (and its normalization) shifts a
+    # little every tick, so the raw per-tick Theta jitters even after the
+    # model has converged; the EMA is what the delta threshold watches.
+    # First tick after admission (steps == 0) seeds the EMA directly.
+    theta = jnp.where(
+        (state.steps == 0)[:, None, None],
+        theta,
+        scfg.ema * state.theta + (1.0 - scfg.ema) * theta,
+    )
+    # relative coefficient delta: |Theta| grows toward its asymptote long
+    # after the loss plateaus, so an absolute threshold never fires at a
+    # scale-free setting — normalize by the current coefficient magnitude
+    change = jnp.max(jnp.abs(theta - state.theta), axis=(1, 2))
+    delta = change / (jnp.max(jnp.abs(theta), axis=(1, 2)) + 1e-3)
+    delta = jnp.where(state.active, delta, jnp.inf)
+    return state._replace(
+        params=params,
+        opt=opt,
+        buf_y=buf_y,
+        buf_u=buf_u,
+        theta=theta,
+        delta=delta,
+        loss=jnp.where(state.active, recon, jnp.inf),
+        steps=state.steps + scfg.steps_per_tick,
+    )
+
+
+def readout_theta(
+    params: MRParams,
+    cfg: MRConfig,
+    yw: jnp.ndarray,  # [N, T, n] normalized windows
+    uw: jnp.ndarray | None = None,
+    quant: bool = False,
+) -> jnp.ndarray:
+    """Serving readout: mean-over-windows Theta (normalized coordinates).
+
+    quant=True routes the encoder through the int8-weight / PWL-activation
+    GRU kernel (gru_scan_pallas_int8; interpret mode off-TPU) — the paper's
+    fixed-point serving configuration — and reuses the exact dense-head math
+    via merinda.head_from_hidden. Requires cfg.encoder == "gru" (the int8
+    kernel implements the standard GRU cell, paper Eq. 12-15).
+    """
+    if not quant:
+        theta, _ = mr_forward(params, cfg, yw, uw)
+        return theta.mean(axis=0)
+    if cfg.encoder != "gru":
+        raise ValueError(f"int8 readout requires encoder='gru', got {cfg.encoder!r}")
+    from repro.kernels.gru_scan.ops import gru_scan_int8
+
+    xs = yw if uw is None or uw.shape[-1] == 0 else jnp.concatenate([yw, uw], axis=-1)
+    h0 = jnp.zeros((xs.shape[0], cfg.hidden), xs.dtype)
+    h_t, _ = gru_scan_int8(params.encoder, xs, h0, interpret=True)
+    theta, _ = head_from_hidden(params, cfg, h_t)
+    return theta.mean(axis=0)
+
+
+class StreamResult(NamedTuple):
+    """Host-side record for one completed stream."""
+
+    stream_id: int
+    theta: np.ndarray  # [n_terms, n] normalized coordinates
+    mean: np.ndarray  # [n] buffer stats for denormalization
+    scale: np.ndarray  # [n]
+    steps: int
+    reason: str  # "converged" | "budget"
+
+
+class RecoveryService:
+    """Host orchestrator: admission queue, eviction policy, warm-start registry.
+
+    All numerics run inside the compiled ``tick``/``admit`` programs; this
+    class only moves O(slots) scalars across the host boundary per tick.
+    """
+
+    def __init__(
+        self,
+        cfg: MRConfig,
+        scfg: StreamConfig,
+        n_slots: int,
+        seed: int = 0,
+        quant: bool = False,
+    ):
+        self.cfg, self.scfg, self.n_slots = cfg, scfg, n_slots
+        self.quant = quant
+        self.key = jax.random.key(seed)
+        self.state = init_slots(self.key, cfg, scfg, n_slots)
+        self.queue: collections.deque = collections.deque()
+        self.warm: dict[int, MRParams] = {}  # stream_id -> evicted params
+        self.results: dict[int, StreamResult] = {}
+        self.ticks = 0
+
+    # -- admission ----------------------------------------------------------
+    def submit(self, stream_id: int, history_y: np.ndarray, history_u: np.ndarray | None = None):
+        """Enqueue a stream with its initial buf_len-observation history."""
+        L, m = self.scfg.buf_len, self.cfg.input_dim
+        if history_y.shape != (L, self.cfg.state_dim):
+            raise ValueError(f"history must be [{L}, {self.cfg.state_dim}], got {history_y.shape}")
+        if history_u is None:
+            history_u = np.zeros((L, m), np.float32)
+        self.queue.append((int(stream_id), np.asarray(history_y), np.asarray(history_u)))
+
+    def _admit_into(self, slot: int):
+        if not self.queue:
+            self.state = deactivate(self.state, jnp.int32(slot))
+            return None
+        stream_id, buf_y, buf_u = self.queue.popleft()
+        if stream_id in self.warm:
+            params = self.warm[stream_id]
+            opt = adamw_init(params)
+        else:
+            params, opt = cold_start(jax.random.fold_in(self.key, 1000 + stream_id), self.cfg)
+        self.state = admit(
+            self.state,
+            jnp.int32(slot),
+            jnp.int32(stream_id),
+            jnp.asarray(buf_y),
+            jnp.asarray(buf_u),
+            params,
+            opt,
+        )
+        return stream_id
+
+    def fill_slots(self) -> list[int]:
+        """Bootstrap: admit queued streams into every empty slot."""
+        admitted = []
+        active = np.asarray(self.state.active)
+        for s in range(self.n_slots):
+            if not active[s] and self.queue:
+                sid = self._admit_into(s)
+                if sid is not None:
+                    admitted.append(sid)
+        return admitted
+
+    # -- the tick loop ------------------------------------------------------
+    def slot_streams(self) -> list[int]:
+        """stream_id per slot (-1 = empty); the driver feeds chunks by this."""
+        return [int(i) for i in np.asarray(self.state.stream_id)]
+
+    def _evict(self, slot: int, reason: str) -> StreamResult:
+        st = self.state
+        sid = int(np.asarray(st.stream_id[slot]))
+        theta = st.theta[slot]
+        if self.quant:
+            yw, uw = _slot_windows(
+                st.buf_y[slot], st.buf_u[slot], st.mean[slot], st.scale[slot], self.scfg
+            )
+            slot_params = jax.tree.map(lambda a: a[slot], st.params)
+            theta = readout_theta(slot_params, self.cfg, yw, uw, quant=True)
+        res = StreamResult(
+            stream_id=sid,
+            theta=np.asarray(theta),
+            mean=np.asarray(st.mean[slot]),
+            scale=np.asarray(st.scale[slot]),
+            steps=int(np.asarray(st.steps[slot])),
+            reason=reason,
+        )
+        self.results[sid] = res
+        self.warm[sid] = jax.tree.map(lambda a: a[slot], st.params)
+        return res
+
+    def tick_once(self, chunks_y: np.ndarray, chunks_u: np.ndarray | None = None) -> dict:
+        """Advance the service one tick; returns an info dict of host scalars."""
+        S, C, m = self.n_slots, self.scfg.chunk, self.cfg.input_dim
+        if chunks_u is None:
+            chunks_u = np.zeros((S, C, m), np.float32)
+        self.state = tick(
+            self.state,
+            jnp.asarray(chunks_y, jnp.float32),
+            jnp.asarray(chunks_u, jnp.float32),
+            jax.random.fold_in(self.key, self.ticks),
+            cfg=self.cfg,
+            scfg=self.scfg,
+        )
+        self.ticks += 1
+        delta = np.asarray(self.state.delta)
+        steps = np.asarray(self.state.steps)
+        active = np.asarray(self.state.active)
+        evicted = []
+        for s in range(S):
+            if not active[s]:
+                continue
+            converged = steps[s] >= self.scfg.min_steps and delta[s] <= self.scfg.delta_tol
+            budget = steps[s] >= self.scfg.max_steps
+            if converged or budget:
+                res = self._evict(s, "converged" if converged else "budget")
+                evicted.append(res)
+                self._admit_into(s)
+        return {
+            "tick": self.ticks,
+            "evicted": evicted,
+            "active": int(np.asarray(self.state.active).sum()),
+            "delta": delta,
+            "loss": np.asarray(self.state.loss),
+            "steps": steps,
+        }
+
+    @property
+    def done(self) -> bool:
+        return not self.queue and not bool(np.asarray(self.state.active).any())

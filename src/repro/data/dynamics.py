@@ -237,6 +237,40 @@ def get_system(name: str) -> SystemSpec:
     return SYSTEMS[name]
 
 
+def embed_true_coef(spec: SystemSpec, n_state: int, n_input: int, order: int) -> np.ndarray:
+    """Embed spec's ground-truth Theta into a larger padded library.
+
+    The streaming service (core/stream.py) zero-pads a heterogeneous fleet to
+    common (n_state, n_input, order); recovered coefficients then live in the
+    padded library basis. This maps the spec's [n_terms_spec, state_dim]
+    truth into [n_terms(n_state+n_input, order), n_state] (zeros elsewhere)
+    so recovery error is measured in one consistent basis.
+    """
+    if spec.true_coef is None:
+        raise ValueError(f"system {spec.name!r} has no ground-truth coefficients")
+    if order < spec.order or n_state < spec.state_dim or n_input < spec.input_dim:
+        raise ValueError(f"padded library smaller than {spec.name!r}'s own library")
+    small = np.asarray(spec.true_coef(), float)
+    # shared naming scheme: states s0.., inputs i0.. — the spec's variables map
+    # to the first state/input positions of the padded layout, so every spec
+    # term name appears verbatim in the padded library's term list.
+    small_names = term_names(
+        spec.state_dim + spec.input_dim,
+        spec.order,
+        [f"s{i}" for i in range(spec.state_dim)] + [f"i{j}" for j in range(spec.input_dim)],
+    )
+    big_names = term_names(
+        n_state + n_input,
+        order,
+        [f"s{i}" for i in range(n_state)] + [f"i{j}" for j in range(n_input)],
+    )
+    ix = {name: k for k, name in enumerate(big_names)}
+    big = np.zeros((n_library_terms(n_state + n_input, order), n_state))
+    for k, name in enumerate(small_names):
+        big[ix[name], : spec.state_dim] = small[k]
+    return big
+
+
 def generate_trajectory(
     name: str,
     n_samples: int | None = None,

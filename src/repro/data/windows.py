@@ -1,8 +1,19 @@
 """Windowing of trajectories into training batches (paper §4: batches of
-size S_B forming a [S_B, |Y|+m, k] tensor — we use [S_B, k, |Y|+m] layout)."""
+size S_B forming a [S_B, |Y|+m, k] tensor — we use [S_B, k, |Y|+m] layout).
+
+Two families live here:
+
+- ``make_windows``: host-side (numpy) offline windowing of a whole trajectory,
+  used by the one-shot recovery paths.
+- ``roll_buffer`` / ``window_views`` / ``buffer_stats``: device-side (jnp)
+  streaming analogues used by the online service (core/stream.py) — a slot's
+  ring buffer is rolled forward each tick and re-windowed INSIDE the compiled
+  tick program, so continuous ingestion costs no host round-trip.
+"""
 
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -30,3 +41,51 @@ def make_windows(
     if us is not None and us.shape[-1] > 0:
         uw = np.stack([us[s : s + window] for s in starts]).astype(np.float32)
     return yw.astype(np.float32), uw, stats
+
+
+# ---------------------------------------------------------------------------
+# device-side streaming helpers (jnp; jit/vmap-safe, static shapes)
+# ---------------------------------------------------------------------------
+def n_buffer_windows(buf_len: int, window: int, stride: int) -> int:
+    """Number of sliding windows a length-``buf_len`` buffer yields."""
+    if buf_len < window:
+        raise ValueError(f"buffer length {buf_len} shorter than window {window}")
+    return (buf_len - window) // stride + 1
+
+
+def roll_buffer(buf: jnp.ndarray, new: jnp.ndarray) -> jnp.ndarray:
+    """Shift a ring buffer left and append ``new`` observations at the end.
+
+    buf: [..., L, n], new: [..., C, n] with C <= L. Oldest C samples drop out;
+    static shapes, so this lowers to one fused slice+concat inside jit.
+    """
+    chunk = new.shape[-2]
+    return jnp.concatenate([buf[..., chunk:, :], new], axis=-2)
+
+
+def window_views(buf: jnp.ndarray, window: int, stride: int) -> jnp.ndarray:
+    """Sliding windows over the time axis: [..., L, n] -> [..., N, T, n].
+
+    Gather-based (one advanced-index op), matching make_windows' slicing for
+    the same (window, stride) — pinned by tests/test_stream.py.
+    """
+    n_win = n_buffer_windows(buf.shape[-2], window, stride)
+    starts = np.arange(n_win) * stride
+    idx = starts[:, None] + np.arange(window)[None, :]
+    return buf[..., idx, :]
+
+
+def buffer_stats(buf: jnp.ndarray, eps: float = 1e-6) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-dimension (mean, scale) over the buffer's time axis.
+
+    The streaming analogue of make_windows' trajectory-wide normalization:
+    recomputed every tick from the CURRENT buffer contents, so recovered
+    coefficients can always be mapped back to physical units with the stats
+    that produced them (library.denormalize_theta). (Near-)constant channels
+    — e.g. the zero-padded dims of a heterogeneous stream fleet — keep
+    scale 1 so denormalization never divides by ~0.
+    """
+    mean = buf.mean(axis=-2, keepdims=True)
+    std = buf.std(axis=-2, keepdims=True)
+    scale = jnp.where(std < eps, 1.0, std)
+    return mean, scale

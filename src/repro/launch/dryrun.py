@@ -91,7 +91,7 @@ def run_cell(
     verbose: bool = True,
 ) -> dict:
     """Lower + compile one cell; write the JSON record; return it."""
-    import jax  # deferred: XLA_FLAGS already set at module import
+    import jax  # noqa: F401  # deferred side effect: XLA_FLAGS already set at module import
 
     from repro.analysis.hlo import analyze_module, roofline_terms
     from repro.configs.base import get_config, get_shape, shape_applicable

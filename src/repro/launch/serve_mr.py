@@ -1,0 +1,260 @@
+"""Online model-recovery service driver: many streams, few slots, one program.
+
+The MR analogue of launch/serve.py's continuous-batching LM decode loop:
+``--streams`` dynamical-system streams are queued into ``--slots`` service
+slots (core/stream.py); every tick ingests a fresh observation chunk into
+each slot's ring buffer and runs ``--steps-per-tick`` scan-jitted recovery
+steps for ALL slots inside one donated, jit-cached program. Slots whose
+coefficient estimate stops moving (relative delta below ``--delta-tol``) are
+evicted and refilled from the queue; evicted params feed a warm-start
+registry.
+
+On exit, every recovered Theta is scored against the system's ground truth
+(physical units, data/dynamics.embed_true_coef) and must beat the one-shot
+``recover_many`` baseline tolerance — streaming ingestion must not cost
+recovery quality.
+
+CPU demo (the CI acceptance configuration):
+
+    PYTHONPATH=src python -m repro.launch.serve_mr \
+        --streams 12 --slots 4 --steps-per-tick 8
+
+``--quant`` additionally serves every evicted stream's coefficients through
+the int8-weight / PWL-activation GRU kernel (gru_scan_pallas_int8, interpret
+mode off-TPU) — the paper's fixed-point serving configuration end to end.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core.merinda import MRConfig
+from repro.core.stream import RecoveryService, StreamConfig
+from repro.data.dynamics import SystemSpec, embed_true_coef, generate_trajectory, get_system
+
+DEFAULT_SYSTEMS = "lorenz,damped_oscillator,controlled_pendulum"
+
+
+def build_stream_fleet(
+    names: list[str],
+    n_streams: int,
+    n_samples: int,
+    noise: float = 0.01,
+    seed: int = 0,
+) -> tuple[list[SystemSpec], np.ndarray, np.ndarray, tuple[int, int, int]]:
+    """Generate ``n_streams`` trajectories cycling over ``names``, zero-padded
+    to the fleet's common (n_state, n_input) dims.
+
+    Returns (spec_per_stream, ys [R, T_total, n], us [R, T_total, m],
+    (n_state, n_input, order)). Each stream gets its own noise seed, so two
+    streams of the same system are distinct tenants.
+    """
+    specs = [get_system(n) for n in names]
+    dts = {s.dt for s in specs}
+    if len(dts) > 1:
+        raise ValueError(f"streams must share a sampling dt, got {sorted(dts)}")
+    n_max = max(s.state_dim for s in specs)
+    m_max = max(s.input_dim for s in specs)
+    order = max(s.order for s in specs)
+    stream_specs, ys_all, us_all = [], [], []
+    for i in range(n_streams):
+        spec = specs[i % len(specs)]
+        _, ys, us = generate_trajectory(
+            spec.name, n_samples=n_samples, noise_std=noise, seed=seed + i
+        )
+        ys = np.pad(ys, ((0, 0), (0, n_max - spec.state_dim)))
+        us = np.pad(us, ((0, 0), (0, m_max - us.shape[-1]))) if m_max else np.zeros((len(ys), 0))
+        stream_specs.append(spec)
+        ys_all.append(ys)
+        us_all.append(us)
+    return (
+        stream_specs,
+        np.stack(ys_all).astype(np.float32),
+        np.stack(us_all).astype(np.float32),
+        (n_max, m_max, order),
+    )
+
+
+def _theta_mse(theta_phys: np.ndarray, theta_true: np.ndarray) -> float:
+    return float(np.mean((theta_phys - theta_true) ** 2))
+
+
+def run_service(
+    service: RecoveryService,
+    ys: np.ndarray,  # [R, T_total, n]
+    us: np.ndarray,  # [R, T_total, m]
+    max_ticks: int,
+    verbose: bool = True,
+) -> dict:
+    """Feed all streams through the service until the queue drains.
+
+    Returns {"ticks", "wall_s", "evictions"}. Stream cursors wrap modulo the
+    generated trajectory length, so a slow-converging stream never starves.
+    """
+    n_streams, t_total = ys.shape[:2]
+    scfg, cfg = service.scfg, service.cfg
+    slots, chunk = service.n_slots, scfg.chunk
+    for i in range(n_streams):
+        service.submit(i, ys[i, : scfg.buf_len], us[i, : scfg.buf_len])
+    service.fill_slots()
+    cursors = dict.fromkeys(range(n_streams), scfg.buf_len)
+    evictions: list = []
+    t0 = time.time()
+    while not service.done and service.ticks < max_ticks:
+        chunks_y = np.zeros((slots, chunk, cfg.state_dim), np.float32)
+        chunks_u = np.zeros((slots, chunk, cfg.input_dim), np.float32)
+        for s, sid in enumerate(service.slot_streams()):
+            if sid < 0:
+                continue
+            idx = (cursors[sid] + np.arange(chunk)) % t_total
+            chunks_y[s] = ys[sid, idx]
+            chunks_u[s] = us[sid, idx]
+            cursors[sid] += chunk
+        info = service.tick_once(chunks_y, chunks_u)
+        for res in info["evicted"]:
+            evictions.append(res)
+            if verbose:
+                print(
+                    f"  tick {info['tick']:4d}: evict stream {res.stream_id:3d} "
+                    f"({res.reason}, {res.steps} steps) -> admit next; "
+                    f"active={info['active']}"
+                )
+    return {"ticks": service.ticks, "wall_s": time.time() - t0, "evictions": evictions}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--systems", default=DEFAULT_SYSTEMS, metavar="SYS[,SYS...]")
+    ap.add_argument("--streams", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--steps-per-tick", type=int, default=8)
+    ap.add_argument("--window", type=int, default=32)
+    ap.add_argument("--stride", type=int, default=8)
+    ap.add_argument("--buf-len", type=int, default=160)
+    ap.add_argument("--chunk", type=int, default=16)
+    ap.add_argument("--hidden", type=int, default=32)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--noise", type=float, default=0.01)
+    ap.add_argument("--delta-tol", type=float, default=0.015)
+    ap.add_argument("--min-steps", type=int, default=128)
+    ap.add_argument("--max-steps", type=int, default=400)
+    ap.add_argument("--max-ticks", type=int, default=1200)
+    ap.add_argument("--quant", action="store_true", help="int8/PWL kernel readout at eviction")
+    ap.add_argument(
+        "--tol-factor",
+        type=float,
+        default=3.0,
+        help="pass if stream MSE <= factor * one-shot baseline MSE + tol-abs",
+    )
+    ap.add_argument("--tol-abs", type=float, default=0.05)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    names = [s.strip() for s in args.systems.split(",") if s.strip()]
+    # enough samples that max_steps' worth of ticks never wraps mid-stream
+    n_samples = args.buf_len + args.chunk * (args.max_steps // args.steps_per_tick + 2)
+    specs, ys, us, (n_state, n_input, order) = build_stream_fleet(
+        names, args.streams, n_samples, noise=args.noise, seed=args.seed
+    )
+    cfg = MRConfig(
+        state_dim=n_state,
+        input_dim=n_input,
+        order=order,
+        hidden=args.hidden,
+        dense_hidden=2 * args.hidden,
+        dt=specs[0].dt,
+        encoder="gru",
+    )
+    scfg = StreamConfig(
+        buf_len=args.buf_len,
+        window=args.window,
+        stride=args.stride,
+        chunk=args.chunk,
+        steps_per_tick=args.steps_per_tick,
+        lr=args.lr,
+        delta_tol=args.delta_tol,
+        min_steps=args.min_steps,
+        max_steps=args.max_steps,
+    )
+    service = RecoveryService(cfg, scfg, args.slots, seed=args.seed, quant=args.quant)
+    print(
+        f"[serve_mr] streams={args.streams} slots={args.slots} "
+        f"K={args.steps_per_tick} windows/slot={scfg.n_windows} "
+        f"library={cfg.n_terms}x{cfg.state_dim} quant={args.quant}"
+    )
+    stats = run_service(service, ys, us, args.max_ticks)
+    n_done = len(service.results)
+    print(
+        f"[serve_mr] {n_done}/{args.streams} streams recovered in {stats['ticks']} ticks "
+        f"({stats['wall_s']:.1f}s, {stats['ticks'] / max(stats['wall_s'], 1e-9):.1f} ticks/s)"
+    )
+    if n_done < args.streams:
+        print(f"[serve_mr] FAIL: {args.streams - n_done} streams never recovered")
+        return 1
+
+    # one-shot baseline: recover_many on each stream's initial history, same
+    # step budget — the quality bar streaming ingestion must not fall below
+    from repro.core import engine
+    from repro.core.library import denormalize_theta
+    from repro.data.windows import make_windows
+
+    yw_b, uw_b, norms = [], [], []
+    for i, spec in enumerate(specs):
+        hist_y = ys[i, : scfg.buf_len, : spec.state_dim]
+        hist_u = us[i, : scfg.buf_len] if n_input else None
+        yw, uw, norm = make_windows(hist_y, hist_u, window=scfg.window, stride=scfg.stride)
+        yw = np.pad(yw, ((0, 0), (0, 0), (0, n_state - spec.state_dim)))
+        yw_b.append(yw)
+        if n_input:
+            uw_b.append(uw if uw is not None else np.zeros(yw.shape[:2] + (n_input,), np.float32))
+        norms.append(norm)
+    t0 = time.time()
+    theta_base = np.asarray(
+        engine.recover_many(
+            cfg,
+            np.stack(yw_b),
+            np.stack(uw_b) if n_input else None,
+            steps=scfg.max_steps,
+            lr=args.lr,
+            seed=args.seed,
+        )
+    )
+    print(f"[serve_mr] one-shot recover_many baseline: {time.time() - t0:.1f}s")
+
+    n_vars = n_state + n_input
+    failures = 0
+    for i, spec in enumerate(specs):
+        truth = embed_true_coef(spec, n_state, n_input, order)
+        res = service.results[i]
+        th_srv = denormalize_theta(
+            res.theta, res.mean, res.scale, n_vars=n_vars, order=order, n_state=n_state
+        )
+        th_base = denormalize_theta(
+            theta_base[i],
+            norms[i]["mean"],
+            norms[i]["scale"],
+            n_vars=n_vars,
+            order=order,
+            n_state=n_state,
+        )
+        mse_s, mse_b = _theta_mse(th_srv, truth), _theta_mse(th_base, truth)
+        tol = args.tol_factor * mse_b + args.tol_abs
+        ok = mse_s <= tol
+        failures += not ok
+        print(
+            f"  stream {i:3d} {spec.name:22s} mse={mse_s:8.4f} "
+            f"baseline={mse_b:8.4f} tol={tol:8.4f} steps={res.steps:4d} "
+            f"{res.reason:9s} {'ok' if ok else 'FAIL'}"
+        )
+    if failures:
+        print(f"[serve_mr] FAIL: {failures}/{args.streams} streams above baseline tolerance")
+        return 1
+    print(f"[serve_mr] OK: all {args.streams} streams within baseline tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -26,7 +26,6 @@ vmapped call via core/engine.recover_many):
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import logging
 import time
 
@@ -91,10 +90,9 @@ def main() -> int:
     logging.basicConfig(level=logging.INFO, format="%(name)s %(message)s")
     from repro.configs.base import ShapeConfig, get_config
     from repro.data.pipeline import PipelineConfig, SyntheticLM, device_put_batch
-    from repro.models import model as M
     from repro.parallel import rules as rules_mod
     from repro.parallel.steps import make_train_step, train_state_specs
-    from repro.models.params import materialize, shardings as tree_shardings
+    from repro.models.params import materialize
     from repro.runtime import SimulatedFailure, Supervisor
     from repro.runtime.elastic import plan_mesh
     from repro.runtime.supervisor import SupervisorConfig

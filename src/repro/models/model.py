@@ -19,7 +19,6 @@ layers (Megatron-style SP) when cfg allows; see parallel/rules.py.
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -17,7 +17,6 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.parallel.rules import named_sharding
 

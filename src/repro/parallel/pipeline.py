@@ -25,7 +25,6 @@ API:
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -13,8 +13,6 @@ all-reduce across `pod` is optionally int8-compressed with error feedback
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Any, NamedTuple
 
 import jax
@@ -25,7 +23,6 @@ from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import model as M
 from repro.models.params import ParamSpec, abstract, shardings, tree_map_specs
 from repro.optim import adamw_update, clip_by_global_norm
-from repro.optim.compression import compress_reduce_grads
 
 
 class TrainState(NamedTuple):

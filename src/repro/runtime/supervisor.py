@@ -25,7 +25,7 @@ from __future__ import annotations
 import dataclasses
 import logging
 import time
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 

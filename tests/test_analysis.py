@@ -119,8 +119,6 @@ def test_roofline_terms_bottleneck():
 def test_kernel_adjusted_ssd_roofline():
     """The fused-kernel memory term must beat the XLA path and leave the
     cell compute-bound (EXPERIMENTS.md §Perf cell 3, reproducible in code)."""
-    import pathlib
-
     import pytest
 
     from benchmarks.roofline import ART, kernel_adjusted_ssd

@@ -3,8 +3,6 @@
 from __future__ import annotations
 
 import json
-import pathlib
-import shutil
 
 import jax
 import jax.numpy as jnp

@@ -8,14 +8,13 @@ matching the sequential path.
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import engine
 from repro.core.merinda import MRConfig, train_mr
-from repro.data.dynamics import generate_trajectory, get_system
+from repro.data.dynamics import generate_trajectory
 from repro.data.windows import make_windows
 
 SYSTEM_SET = ["lorenz", "damped_oscillator", "controlled_pendulum"]

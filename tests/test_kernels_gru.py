@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.neural_flow import GRUParams, gru_scan_ref, init_gru
+from repro.core.neural_flow import gru_scan_ref, init_gru
 from repro.core.quant import make_sigmoid_table, make_tanh_table, pwl_apply
 from repro.kernels.gru_scan.ops import gru_scan, gru_scan_int8
 

@@ -102,8 +102,6 @@ def test_prefill_decode_parity(arch):
 
 def test_swa_rolling_cache_matches_full_window():
     """Mixtral-family SWA: rolling cache decode == windowed full attention."""
-    import dataclasses
-
     cfg = get_config("mixtral-8x22b", smoke=True)
     assert cfg.attn.window is not None and cfg.attn.window < 64
     params = M.init_params(jax.random.key(1), cfg)

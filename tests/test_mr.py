@@ -18,7 +18,6 @@ from repro.core.merinda import (
     MRConfig,
     init_mr,
     mr_forward,
-    mr_loss,
     recover_coefficients,
     reconstruct,
     train_mr,

@@ -125,8 +125,6 @@ def test_multislice_compressed_training_matches_uncompressed():
     Two simulated slices train a small MR head; the compressed run must track
     the uncompressed run's loss closely (error feedback removes the bias).
     """
-    import numpy as np
-
     from repro.runtime.multislice import MultiSliceTrainer
 
     key = jax.random.key(0)

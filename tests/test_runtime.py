@@ -2,10 +2,7 @@
 
 from __future__ import annotations
 
-import numpy as np
-import pytest
-
-from repro.runtime.elastic import MeshPlan, plan_mesh, shrink_plan
+from repro.runtime.elastic import plan_mesh, shrink_plan
 from repro.runtime.heartbeat import HeartbeatRegistry, StragglerDetector
 
 
