@@ -47,14 +47,21 @@ import time
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import HBM_BW, PEAK_FLOPS, TPU_CLOCK_HZ, emit, hlo_cost_model, wall_time
+from benchmarks.common import (
+    HBM_BW,
+    LAT_VMEM,
+    LAT_XLA,
+    PEAK_FLOPS,
+    TPU_CLOCK_HZ,
+    emit,
+    hlo_cost_model,
+    wall_time,
+)
 from repro.core.ltc import init_ltc, ltc_scan
 from repro.core.neural_flow import gru_scan_ref, init_gru
 
-LAT_XLA = 500  # cycles: dependency latency between separate XLA ops (HBM hop)
-LAT_VMEM = 50  # cycles: dependency latency inside one fused kernel (VMEM hop)
-
-# data-dependent op-chain depth per input step (see module doc)
+# data-dependent op-chain depth per input step (see module doc); the LAT_*
+# dependency latencies live in benchmarks/common.py (shared with stagemap)
 DEPTH = {
     "ltc_ode": 6 * 2,        # 6 sequential sub-steps x (matvec -> update)
     "gru_unfused": 4,        # r -> (r*h) -> candidate matmul -> blend

@@ -17,6 +17,13 @@ Measured:
   stream/latency_*               per-stream recovery latency for a fixed
                                  step budget, service vs the sequential
                                  (one-system-at-a-time) recover_many baseline
+  stream/fused_tick_over_unfused wall ratio of the stage-fused tick
+                                 (cfg.fused=True -> kernels/mr_step) over
+                                 the unfused stage sequence. Info-only: off
+                                 TPU both resolve to the same reference math
+                                 (~1.0x); the gated fused claim is the
+                                 deterministic interval model in
+                                 bench_stagemap.run_fused_ratio.
 
 Sizes are deliberately small (the paper's regime: tiny models, many
 iterative updates) and fixed-seed; timing is best-of-``repeats`` (the
@@ -27,6 +34,7 @@ only dimensionless ratios are gated (benchmarks/gate.py).
 
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
@@ -62,8 +70,8 @@ def run(slots: int = 8, n_ticks: int = 8, repeats: int = 3, smoke: bool = False)
         np.repeat(ys[L + t * C : L + (t + 1) * C][None], slots, axis=0) for t in range(n_ticks)
     ]
 
-    def run_batched() -> float:
-        svc = RecoveryService(cfg, scfg, slots)
+    def run_batched(service_cfg: MRConfig = cfg) -> float:
+        svc = RecoveryService(service_cfg, scfg, slots)
         for i in range(slots):
             svc.submit(i, ys[:L])
         svc.fill_slots()
@@ -89,6 +97,10 @@ def run(slots: int = 8, n_ticks: int = 8, repeats: int = 3, smoke: bool = False)
 
     t_batched = min(run_batched() for _ in range(repeats))
     t_serial = min(run_serial() for _ in range(repeats))
+    # stage-fused tick (kernels/mr_step through merinda.mr_forward): same
+    # service, cfg.fused=True. Info-only wall ratio (see module docstring),
+    # so one sweep is enough — no best-of-repeats.
+    t_fused = run_batched(dataclasses.replace(cfg, fused=True))
     timed = n_ticks - 1
     tps_batched = timed / t_batched
     tps_serial = timed / t_serial
@@ -122,6 +134,12 @@ def run(slots: int = 8, n_ticks: int = 8, repeats: int = 3, smoke: bool = False)
         ),
         ("stream/batched_over_serial", 0.0, f"x{speedup:.2f} (claim: >=2x at 4+ slots)"),
         (
+            "stream/fused_tick_over_unfused",
+            1e6 / (timed / t_fused),
+            f"x{t_batched / t_fused:.2f} wall (reference math off-TPU; gated "
+            "fused claim lives in bench_stagemap)",
+        ),
+        (
             "stream/latency_service_per_stream",
             t_service / slots * 1e6,
             f"{lat_steps} steps; {slots} streams concurrent",
@@ -142,6 +160,7 @@ def run(slots: int = 8, n_ticks: int = 8, repeats: int = 3, smoke: bool = False)
             "steps_per_tick": scfg.steps_per_tick,
             "n_ticks": timed,
             "latency_speedup_vs_recover_many": round(t_recover_serial / max(t_service, 1e-9), 3),
+            "fused_tick_over_unfused_wall": round(t_batched / max(t_fused, 1e-9), 3),
             "ticks_per_sec_batched": round(tps_batched, 2),
             "ticks_per_sec_serial": round(tps_serial, 2),
             "latency_service_per_stream_s": round(t_service / slots, 4),

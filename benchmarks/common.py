@@ -12,6 +12,12 @@ from repro.analysis.hlo import HBM_BW, PEAK_FLOPS, analyze_module
 
 TPU_CLOCK_HZ = 940e6  # v5e nominal clock: converts seconds -> "cycles"
 
+# Interval-model dependency latencies (single source of truth for the gated
+# cost models in bench_cycles.py and bench_stagemap.py): each data-DEPENDENT
+# op in a per-step chain must drain before the next issues.
+LAT_XLA = 500  # cycles: hop between separate XLA ops (HBM round-trip/dispatch)
+LAT_VMEM = 50  # cycles: hop inside one fused kernel (VMEM-resident chain)
+
 
 def wall_time(fn, *args, warmup: int = 2, iters: int = 10) -> float:
     """Median wall seconds per call of a jitted fn (blocks on result)."""

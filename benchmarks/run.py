@@ -12,13 +12,15 @@ Prints ``name,us_per_call,derived`` CSV rows (stdout), one suite at a time:
     stream     streaming service (batched slots vs serial recovery)
     roofline   §Roofline        (40-cell dry-run table, markdown to stderr)
 
-``--smoke`` runs the reduced-size GATED subset (cycles + engine + stream)
-and writes ``BENCH_cycles.json`` / ``BENCH_stream.json`` at the repo root,
-then checks them against ``benchmarks/baselines.json`` (benchmarks/gate.py)
-— the CI bench-smoke job. The JSON files are deterministic: keys sorted,
-all seeds fixed, and the gated section carries only dimensionless ratios
-(deterministic cost-model ratios or speedups) — absolute wall times and
-other machine-dependent numbers stay in the ungated "info" section.
+``--smoke`` runs the reduced-size GATED subset (cycles + engine + stagemap
++ stream) and writes ``BENCH_cycles.json`` / ``BENCH_stagemap.json`` /
+``BENCH_stream.json`` at the repo root, then checks them against
+``benchmarks/baselines.json`` (benchmarks/gate.py) — the CI bench-smoke
+job. The JSON files are deterministic: keys sorted, all seeds fixed, and
+the gated section carries only dimensionless ratios (deterministic
+cost-model ratios — including the fused-vs-unfused stage ratio from
+bench_stagemap — or speedups) — absolute wall times and other
+machine-dependent numbers stay in the ungated "info" section.
 """
 
 from __future__ import annotations
@@ -48,7 +50,7 @@ def write_bench_json(path: Path, suite: str, gated: dict, info: dict, smoke: boo
 
 def run_smoke() -> int:
     """Reduced gated subset -> BENCH_*.json at the repo root -> gate check."""
-    from benchmarks import bench_cycles, bench_stream, gate
+    from benchmarks import bench_cycles, bench_stagemap, bench_stream, gate
     from benchmarks.common import emit
 
     print("# suite: cycles (smoke)", flush=True)
@@ -70,6 +72,15 @@ def run_smoke() -> int:
             "engine": m_engine["info"],
         },
         smoke=True,
+    )
+
+    print("# suite: stagemap (smoke)", flush=True)
+    rows, m_stage = bench_stagemap.run_fused_ratio()
+    for name, us, derived in rows:
+        emit(name, us, derived)
+    info = m_stage.pop("info")
+    write_bench_json(
+        REPO_ROOT / "BENCH_stagemap.json", "stagemap", gated=m_stage, info=info, smoke=True
     )
 
     print("# suite: stream (smoke)", flush=True)

@@ -1,0 +1,150 @@
+"""Encoder registry: one table maps encoder names to init/encode backends.
+
+Before this module, ``core/merinda.py`` carried two duplicated ``if
+cfg.encoder == ...`` dispatch chains (one in ``init_mr``, one in the scan
+path) plus a ``use_kernel`` boolean that silently rerouted only the GRU
+families.  The registry collapses all of that into data: every encoder the
+paper compares (and every backend it runs on) is ONE row here, and the
+stage-pipeline refactor (kernels/mr_step) reads the same rows to decide
+whether a config can take the fused per-window kernel.
+
+Registered encoders:
+
+    "gru_flow"         MERINDA GRU neural flow (lax.scan reference)
+    "gru"              standard GRU, paper Eq. 12-15 (lax.scan reference)
+    "ltc"              Liquid Time-Constant baseline (iterative fused solver)
+    "node"             ODE-RNN / NODE baseline (EMILY/PiNODE family)
+    "gru_flow_kernel"  gru_flow through the Pallas gru_scan kernel
+    "gru_kernel"       gru through the Pallas gru_scan kernel
+
+The ``*_kernel`` rows resolve their actual backend through
+``kernels/runtime.resolve_dispatch`` (compiled kernel on TPU, lax.scan
+reference on CPU/GPU), so a registry name is a *capability request*, not a
+hard backend pin — the same config runs everywhere.
+
+An ``EncoderSpec`` is a frozen record:
+
+    init(key, d_in, hidden, dtype) -> encoder params pytree
+    encode(enc_params, cfg, xs)    -> final hidden state [B, hidden]
+    flow      time-gated flow update (None for non-GRU families)
+    fusable   the fused mr_step kernel family implements this encoder
+    kernel    encode routes through a Pallas kernel family
+
+``encode`` owns the per-family quantization-aware weight treatment (the QAT
+fake-quant previously inlined in merinda._encode), so callers never touch
+family internals.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ltc import init_ltc, ltc_scan
+from repro.core.neural_flow import GRUParams, gru_scan_ref, init_gru
+from repro.core.quant import qat_weight
+
+
+class EncoderSpec(NamedTuple):
+    """One registry row; see module docstring for field semantics."""
+
+    name: str
+    init: Callable[..., Any]  # (key, d_in, hidden, dtype) -> params
+    encode: Callable[..., jnp.ndarray]  # (params, cfg, xs) -> h_T [B, H]
+    flow: bool | None  # GRU families: time-gated flow update?
+    fusable: bool  # kernels/mr_step implements this encoder
+    kernel: bool  # encode routes through a Pallas kernel
+
+
+_REGISTRY: dict[str, EncoderSpec] = {}
+
+
+def register_encoder(spec: EncoderSpec) -> EncoderSpec:
+    """Add (or replace) a registry row; returns the spec for chaining."""
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_encoder(name: str) -> EncoderSpec:
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown encoder {name!r}; registered: {sorted(_REGISTRY)}"
+        )
+    return _REGISTRY[name]
+
+
+def encoder_names() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def quantized_gru_params(params: GRUParams, cfg) -> GRUParams:
+    """QAT weight treatment shared by every GRU-family encode path."""
+    if cfg.quant is None:
+        return params
+    return params._replace(w=qat_weight(params.w, cfg.quant))
+
+
+def _encode_gru_ref(params: GRUParams, cfg, xs: jnp.ndarray, *, flow: bool) -> jnp.ndarray:
+    params = quantized_gru_params(params, cfg)
+    h0 = jnp.zeros((xs.shape[0], cfg.hidden), xs.dtype)
+    h_T, _ = gru_scan_ref(params, xs, h0, flow=flow)
+    return h_T
+
+
+def _encode_gru_kernel(params: GRUParams, cfg, xs: jnp.ndarray, *, flow: bool) -> jnp.ndarray:
+    from repro.kernels.gru_scan.ops import gru_scan
+
+    params = quantized_gru_params(params, cfg)
+    h0 = jnp.zeros((xs.shape[0], cfg.hidden), xs.dtype)
+    h_T, _ = gru_scan(params, xs, h0, flow=flow)
+    return h_T
+
+
+def _encode_ltc(params, cfg, xs: jnp.ndarray) -> jnp.ndarray:
+    h0 = jnp.zeros((xs.shape[0], cfg.hidden), xs.dtype)
+    h_T, _ = ltc_scan(params, xs, h0, dt=cfg.dt, n_substeps=cfg.ltc_substeps)
+    return h_T
+
+
+def _init_node(key: jax.Array, d_in: int, hidden: int, dtype=jnp.float32):
+    from repro.core.node_mr import init_node_encoder
+
+    return init_node_encoder(key, d_in, hidden, dtype)
+
+
+def _encode_node(params, cfg, xs: jnp.ndarray) -> jnp.ndarray:
+    from repro.core.node_mr import node_encode
+
+    return node_encode(params, xs, cfg)
+
+
+def _gru_row(name: str, *, flow: bool, kernel: bool) -> EncoderSpec:
+    encode = _encode_gru_kernel if kernel else _encode_gru_ref
+    return EncoderSpec(
+        name=name,
+        init=init_gru,
+        encode=lambda p, cfg, xs, _e=encode, _f=flow: _e(p, cfg, xs, flow=_f),
+        flow=flow,
+        fusable=True,
+        kernel=kernel,
+    )
+
+
+register_encoder(_gru_row("gru_flow", flow=True, kernel=False))
+register_encoder(_gru_row("gru", flow=False, kernel=False))
+register_encoder(_gru_row("gru_flow_kernel", flow=True, kernel=True))
+register_encoder(_gru_row("gru_kernel", flow=False, kernel=True))
+register_encoder(
+    EncoderSpec(
+        name="ltc", init=init_ltc, encode=_encode_ltc,
+        flow=None, fusable=False, kernel=False,
+    )
+)
+register_encoder(
+    EncoderSpec(
+        name="node", init=_init_node, encode=_encode_node,
+        flow=None, fusable=False, kernel=False,
+    )
+)

@@ -18,6 +18,13 @@ every iteration. This module is the host-side analogue of the kernel fix:
 The scan body calls ``merinda.mr_train_step`` directly (jit inlines under
 the scan), so per-step math is the old loop's by construction — only the
 dispatch structure differs.
+
+Encoders resolve through the registry in ``core/encoders.py`` (the entry
+points validate ``cfg.encoder`` eagerly so a typo fails with the registered
+names, not a mid-trace KeyError), and ``cfg.fused=True`` routes every
+forward through the stage-fused per-window kernel (kernels/mr_step) — the
+epoch scan, the streaming tick (core/stream.py) and serve_mr then share one
+fused code path.
 """
 
 from __future__ import annotations
@@ -29,6 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import encoders
 from repro.core.merinda import (
     MRConfig,
     MRParams,
@@ -129,6 +137,7 @@ def train_mr_scan(
     ``merinda.train_mr`` wraps this and re-serializes metrics into the old
     history-of-dicts format.
     """
+    encoders.get_encoder(cfg.encoder)  # fail fast on unregistered encoders
     key = jax.random.key(seed)
     params = init_mr(key, cfg)
     opt_state = adamw_init(params)
@@ -199,6 +208,7 @@ def recover_many(
     All systems must share (state_dim, input_dim, order) — use
     ``stack_systems`` to zero-pad a heterogeneous set to common dims.
     """
+    encoders.get_encoder(cfg.encoder)  # fail fast on unregistered encoders
     keys = system_keys(seed, ys_batch.shape[0])
     return _recover_many_jit(
         ys_batch, us_batch, keys, lr,

@@ -6,17 +6,26 @@ Pipeline (per batch of trajectory windows):
     Y_est = SOLVE(Y(0), Theta_est, U)          (RK4, core/ode.py)
     loss  = MSE(Y, Y_est) + lambda * ||Theta||_1  (+ optional coef supervision)
 
-The encoder is pluggable so the paper's comparison set is one code path:
+The encoder is pluggable through the registry in ``core/encoders.py`` (one
+row per family + backend), so the paper's comparison set is one code path:
 
     "gru_flow" — MERINDA (GRU neural flow, single gated update/step)
     "gru"      — plain GRU (hardware pipeline target, paper Eq. 12-15)
     "ltc"      — Liquid Time-Constant baseline (iterative fused solver)
     "node"     — ODE-RNN / NODE-style baseline (EMILY/PiNODE family)
+    "*_kernel" — the GRU families routed through the Pallas gru_scan kernel
 
 The dense head maps the final hidden state to C(M+n, n) x n coefficient
 estimates plus q input-shift values; sparsity is induced by an L1 penalty and
 (at recovery time) magnitude pruning to |Theta| active terms — the paper's
 "pruned dense layer" exploiting the model's inherent sparsity.
+
+``MRConfig.fused=True`` replaces the encode -> head stage sequence with the
+stage-FUSED per-window kernel family (kernels/mr_step): scan + RMS-norm +
+dense head execute as one ``pallas_call`` with the hidden state resident in
+VMEM (the paper's BRAM-tiling dataflow). The fused and unfused paths share
+identical math; off-TPU the fused op resolves to the same reference program
+(kernels/runtime.resolve_dispatch).
 """
 
 from __future__ import annotations
@@ -28,11 +37,9 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import ode
+from repro.core import encoders, ode
 from repro.core.library import n_library_terms, polynomial_features
-from repro.core.ltc import init_ltc, ltc_scan
-from repro.core.neural_flow import gru_scan_ref, init_gru
-from repro.core.quant import QuantConfig, fake_quant_ste
+from repro.core.quant import QuantConfig, fake_quant_ste, qat_act, qat_weight
 from repro.optim import adamw_update, clip_by_global_norm
 
 
@@ -43,7 +50,7 @@ class MRConfig:
     order: int = 2  # M (library polynomial order)
     hidden: int = 64  # V (encoder nodes)
     dense_hidden: int = 128
-    encoder: str = "gru_flow"  # gru_flow | gru | ltc | node
+    encoder: str = "gru_flow"  # any name registered in core/encoders.py
     n_shifts: int = 0  # q input-shift values
     dt: float = 0.05
     solver: str = "rk4"
@@ -51,7 +58,7 @@ class MRConfig:
     lambda_sparse: float = 1e-3
     recon_weight: float = 1.0
     quant: QuantConfig | None = None  # fixed-point QAT when set
-    use_kernel: bool = False  # route the encoder through the Pallas kernel
+    fused: bool = False  # stage-fused per-window step (kernels/mr_step)
 
     @property
     def n_terms(self) -> int:
@@ -74,16 +81,7 @@ class MRParams(NamedTuple):
 def init_mr(key: jax.Array, cfg: MRConfig, dtype=jnp.float32) -> MRParams:
     k_enc, k1, k2 = jax.random.split(key, 3)
     d_in = cfg.state_dim + cfg.input_dim
-    if cfg.encoder in ("gru_flow", "gru"):
-        enc = init_gru(k_enc, d_in, cfg.hidden, dtype)
-    elif cfg.encoder == "ltc":
-        enc = init_ltc(k_enc, d_in, cfg.hidden, dtype)
-    elif cfg.encoder == "node":
-        from repro.core.node_mr import init_node_encoder
-
-        enc = init_node_encoder(k_enc, d_in, cfg.hidden, dtype)
-    else:
-        raise ValueError(f"unknown encoder {cfg.encoder}")
+    enc = encoders.get_encoder(cfg.encoder).init(k_enc, d_in, cfg.hidden, dtype)
     out_dim = cfg.n_coef + cfg.n_shifts
     s1 = 1.0 / jnp.sqrt(cfg.hidden)
     s2 = 1.0 / jnp.sqrt(cfg.dense_hidden)
@@ -96,39 +94,38 @@ def init_mr(key: jax.Array, cfg: MRConfig, dtype=jnp.float32) -> MRParams:
     )
 
 
-def _maybe_quant(x: jnp.ndarray, cfg: MRConfig, kind: str) -> jnp.ndarray:
-    if cfg.quant is None:
-        return x
-    q = cfg.quant
-    if kind == "w":
-        return fake_quant_ste(x, q.weight_int_bits, q.weight_frac_bits)
-    return fake_quant_ste(x, q.act_int_bits, q.act_frac_bits)
+RMS_EPS = 1e-6  # head RMS-normalization epsilon (shared with kernels/mr_step)
+
+
+def head_math(
+    h: jnp.ndarray,  # [B, V] encoder summary state
+    w1: jnp.ndarray,
+    b1: jnp.ndarray,
+    w2: jnp.ndarray,
+    b2: jnp.ndarray,
+    act_bits: tuple[int, int] | None = None,  # (int_bits, frac_bits) QAT
+) -> jnp.ndarray:
+    """Raw dense-head math: RMS-norm -> optional act fake-quant -> relu MLP.
+
+    SINGLE source of truth for the head stage — consumed by
+    ``head_from_hidden`` (unfused path) and by the fused-stage oracle
+    (kernels/mr_step/ref.py); the Pallas kernel body re-implements only the
+    ``dot_general`` spellings and is parity-tested against this.
+
+    RMS-normalizing the summary state keeps the initial Theta scale O(0.1)
+    for every encoder family (the iterative NODE/LTC encoders otherwise
+    hand the head O(50) activations and the RK4 reconstruction diverges).
+    """
+    h = h * jax.lax.rsqrt(jnp.mean(jnp.square(h), axis=-1, keepdims=True) + RMS_EPS)
+    if act_bits is not None:
+        h = fake_quant_ste(h, *act_bits)
+    z = jax.nn.relu(h @ w1 + b1)
+    return z @ w2 + b2
 
 
 def _encode(params: MRParams, cfg: MRConfig, xs: jnp.ndarray) -> jnp.ndarray:
-    """xs: [B, T, n+m] -> final hidden state [B, V]."""
-    B = xs.shape[0]
-    enc = params.encoder
-    if cfg.encoder in ("gru_flow", "gru"):
-        if cfg.quant is not None:
-            enc = enc._replace(w=_maybe_quant(enc.w, cfg, "w"))
-        h0 = jnp.zeros((B, cfg.hidden), xs.dtype)
-        if cfg.use_kernel:
-            from repro.kernels.gru_scan.ops import gru_scan
-
-            h_T, _ = gru_scan(enc, xs, h0, flow=(cfg.encoder == "gru_flow"))
-        else:
-            h_T, _ = gru_scan_ref(enc, xs, h0, flow=(cfg.encoder == "gru_flow"))
-    elif cfg.encoder == "ltc":
-        h0 = jnp.zeros((B, cfg.hidden), xs.dtype)
-        h_T, _ = ltc_scan(enc, xs, h0, dt=cfg.dt, n_substeps=cfg.ltc_substeps)
-    elif cfg.encoder == "node":
-        from repro.core.node_mr import node_encode
-
-        h_T = node_encode(enc, xs, cfg)
-    else:
-        raise ValueError(cfg.encoder)
-    return h_T
+    """xs: [B, T, n+m] -> final hidden state [B, V] (registry-dispatched)."""
+    return encoders.get_encoder(cfg.encoder).encode(params.encoder, cfg, xs)
 
 
 def head_from_hidden(params: MRParams, cfg: MRConfig, h: jnp.ndarray):
@@ -137,24 +134,33 @@ def head_from_hidden(params: MRParams, cfg: MRConfig, h: jnp.ndarray):
     Split out of mr_forward so serving paths that swap the encoder (e.g. the
     int8/PWL kernel in core/stream.py) reuse the exact head math.
     """
-    # RMS-normalize the summary state: keeps the initial Theta scale O(0.1)
-    # for every encoder family (the iterative NODE/LTC encoders otherwise
-    # hand the head O(50) activations and the RK4 reconstruction diverges).
-    h = h * jax.lax.rsqrt(jnp.mean(jnp.square(h), axis=-1, keepdims=True) + 1e-6)
-    h = _maybe_quant(h, cfg, "a")
-    w1 = _maybe_quant(params.head_w1, cfg, "w")
-    w2 = _maybe_quant(params.head_w2, cfg, "w")
-    z = jax.nn.relu(h @ w1 + params.head_b1)
-    out = z @ w2 + params.head_b2
+    q = cfg.quant
+    out = head_math(
+        h,
+        qat_weight(params.head_w1, q),
+        params.head_b1,
+        qat_weight(params.head_w2, q),
+        params.head_b2,
+        act_bits=(q.act_int_bits, q.act_frac_bits) if q is not None else None,
+    )
     theta = out[..., : cfg.n_coef].reshape(h.shape[0], cfg.n_terms, cfg.state_dim)
     shifts = out[..., cfg.n_coef :]
     return theta, shifts
 
 
 def mr_forward(params: MRParams, cfg: MRConfig, ys: jnp.ndarray, us: jnp.ndarray | None):
-    """Returns (theta [B, n_terms, n_state], shifts [B, q])."""
+    """Returns (theta [B, n_terms, n_state], shifts [B, q]).
+
+    ``cfg.fused=True`` runs encode + RMS-norm + dense head as ONE fused
+    per-window stage (kernels/mr_step) instead of separate ops — identical
+    math, single dispatch, hidden state never leaves VMEM on TPU.
+    """
     xs = ys if us is None or us.shape[-1] == 0 else jnp.concatenate([ys, us], axis=-1)
-    xs = _maybe_quant(xs, cfg, "a")
+    xs = qat_act(xs, cfg.quant)
+    if cfg.fused:
+        from repro.kernels.mr_step.ops import mr_step
+
+        return mr_step(params, cfg, xs)
     h = _encode(params, cfg, xs)
     return head_from_hidden(params, cfg, h)
 

@@ -139,3 +139,17 @@ class QuantConfig(NamedTuple):
     @property
     def weight_bits(self) -> int:
         return self.weight_int_bits + self.weight_frac_bits
+
+
+def qat_weight(w: jnp.ndarray, quant: QuantConfig | None) -> jnp.ndarray:
+    """The one QAT weight treatment (shared by merinda, encoders, mr_step)."""
+    if quant is None:
+        return w
+    return fake_quant_ste(w, quant.weight_int_bits, quant.weight_frac_bits)
+
+
+def qat_act(x: jnp.ndarray, quant: QuantConfig | None) -> jnp.ndarray:
+    """The one QAT activation treatment (see qat_weight)."""
+    if quant is None:
+        return x
+    return fake_quant_ste(x, quant.act_int_bits, quant.act_frac_bits)

@@ -21,10 +21,15 @@ the serving-system analogue for a FLEET of dynamical-system streams:
 
 ``RecoveryService`` is the host-side orchestrator (queue, eviction policy,
 warm-start registry); everything numerical stays inside compiled programs.
-The optional int8 readout path (``readout_theta(..., quant=True)``) serves
-converged coefficients through the fixed-point GRU kernel
-(kernels/gru_scan int8 + PWL activations) — the paper's serving
-configuration, exercised end to end.
+
+The per-window recovery stage itself is merinda.mr_forward, so the service
+inherits the stage-fused dataflow for free: an ``MRConfig(fused=True)``
+routes every tick's encode + norm + head through the single fused
+kernels/mr_step stage (one dispatch, VMEM-resident hidden state) — the same
+code path the engine's epoch scan and serve_mr --fused use. The int8
+readout (``readout_theta(..., quant=True)``) serves converged coefficients
+through the fused fixed-point stage (kernels/mr_step int8 + PWL: quantized
+gate AND head weights) — the paper's serving configuration end to end.
 """
 
 from __future__ import annotations
@@ -42,7 +47,6 @@ from repro.core.engine import WARMUP_STEPS
 from repro.core.merinda import (
     MRConfig,
     MRParams,
-    head_from_hidden,
     init_mr,
     mr_forward,
     mr_train_step,
@@ -282,23 +286,19 @@ def readout_theta(
 ) -> jnp.ndarray:
     """Serving readout: mean-over-windows Theta (normalized coordinates).
 
-    quant=True routes the encoder through the int8-weight / PWL-activation
-    GRU kernel (gru_scan_pallas_int8; interpret mode off-TPU) — the paper's
-    fixed-point serving configuration — and reuses the exact dense-head math
-    via merinda.head_from_hidden. Requires cfg.encoder == "gru" (the int8
-    kernel implements the standard GRU cell, paper Eq. 12-15).
+    quant=True serves through the stage-FUSED fixed-point step
+    (kernels/mr_step int8: int8 gate + head weights with per-channel scales,
+    PWL sigmoid/tanh; interpret mode off-TPU) — the paper's serving
+    configuration as one kernel. Requires a standard-GRU encoder
+    (the int8 kernel implements paper Eq. 12-15, i.e. encoder='gru').
     """
     if not quant:
         theta, _ = mr_forward(params, cfg, yw, uw)
         return theta.mean(axis=0)
-    if cfg.encoder != "gru":
-        raise ValueError(f"int8 readout requires encoder='gru', got {cfg.encoder!r}")
-    from repro.kernels.gru_scan.ops import gru_scan_int8
+    from repro.kernels.mr_step.ops import mr_step_int8
 
     xs = yw if uw is None or uw.shape[-1] == 0 else jnp.concatenate([yw, uw], axis=-1)
-    h0 = jnp.zeros((xs.shape[0], cfg.hidden), xs.dtype)
-    h_t, _ = gru_scan_int8(params.encoder, xs, h0, interpret=True)
-    theta, _ = head_from_hidden(params, cfg, h_t)
+    theta, _ = mr_step_int8(params, cfg, xs, interpret=True)
     return theta.mean(axis=0)
 
 

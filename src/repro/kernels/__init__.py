@@ -2,6 +2,10 @@
 
 - gru_scan:        fused GRU(-flow) sequence scan — the MERINDA core kernel.
                    TPU analogue of the paper's DSP/LUT/BRAM-banked FPGA dataflow.
+- mr_step:         stage-FUSED per-window recovery step: GRU scan + RMS-norm +
+                   dense head in one pallas_call (fp32 + int8/PWL) — the
+                   paper's "no inter-stage synchronization" dataflow, one
+                   level above gru_scan.
 - ssd_scan:        Mamba2 SSD chunked recurrence (same locality methodology).
 - flash_attention: blockwise causal/sliding-window attention for prefill.
 

@@ -170,6 +170,37 @@ def _pwl_eval(x, slopes, intercepts, x_min, x_max, n_seg, left, right):
     return jnp.where(x > x_max, right, y)
 
 
+def _gru_q_step_math(x, h, wxq, whq, wx_scale, wh_scale, b, sig_tab, tanh_tab, *, hidden, n_seg):
+    """Shared int8+PWL step math (standard GRU; f32 accumulation).
+
+    Single source of truth for the fixed-point serving cell — used by the
+    gru_scan int8 kernel below AND the fused mr_step int8 kernel
+    (kernels/mr_step). Dequantizes once per step; weights stay int8 in VMEM
+    (2x density vs bf16, the ap_fixed analogue). Per-output-channel scales.
+    """
+    f32 = jnp.float32
+    wx = wxq.astype(f32) * wx_scale
+    wh = whq.astype(f32) * wh_scale
+    gx = jax.lax.dot_general(x, wx, (((1,), (0,)), ((), ())), preferred_element_type=f32)
+    gh = jax.lax.dot_general(
+        h, wh[:, : 2 * hidden], (((1,), (0,)), ((), ())), preferred_element_type=f32
+    )
+
+    def sig(v):
+        return _pwl_eval(v, sig_tab[0, :], sig_tab[1, :], -8.0, 8.0, n_seg, 0.0, 1.0)
+
+    def tnh(v):
+        return _pwl_eval(v, tanh_tab[0, :], tanh_tab[1, :], -4.0, 4.0, n_seg, -1.0, 1.0)
+
+    r = sig(gx[:, :hidden] + gh[:, :hidden] + b[:hidden])
+    z = sig(gx[:, hidden : 2 * hidden] + gh[:, hidden:] + b[hidden : 2 * hidden])
+    ch = jax.lax.dot_general(
+        r * h, wh[:, 2 * hidden :], (((1,), (0,)), ((), ())), preferred_element_type=f32
+    )
+    c = tnh(gx[:, 2 * hidden :] + ch + b[2 * hidden :])
+    return (1.0 - z) * c + z * h
+
+
 def _gru_scan_q_kernel(
     xs_ref,
     h0_ref,
@@ -194,34 +225,19 @@ def _gru_scan_q_kernel(
     def _init():
         h_scr[...] = h0_ref[...].astype(jnp.float32)
 
-    f32 = jnp.float32
-    x = xs_ref[:, 0, :].astype(f32)
-    h = h_scr[...]
-    # dequantize once per step; weights stay int8 in VMEM (2x density vs bf16,
-    # the ap_fixed analogue). Per-output-channel scales.
-    wx = wxq_ref[...].astype(f32) * wx_scale_ref[0, :]
-    wh = whq_ref[...].astype(f32) * wh_scale_ref[0, :]
-    b = b_ref[0, :]
-    gx = jax.lax.dot_general(x, wx, (((1,), (0,)), ((), ())), preferred_element_type=f32)
-    gh = jax.lax.dot_general(h, wh[:, : 2 * hidden], (((1,), (0,)), ((), ())), preferred_element_type=f32)
-
-    def sig(v):
-        return _pwl_eval(
-            v, sig_tab_ref[0, :], sig_tab_ref[1, :], -8.0, 8.0, n_seg, 0.0, 1.0
-        )
-
-    def tnh(v):
-        return _pwl_eval(
-            v, tanh_tab_ref[0, :], tanh_tab_ref[1, :], -4.0, 4.0, n_seg, -1.0, 1.0
-        )
-
-    r = sig(gx[:, :hidden] + gh[:, :hidden] + b[:hidden])
-    z = sig(gx[:, hidden : 2 * hidden] + gh[:, hidden:] + b[hidden : 2 * hidden])
-    ch = jax.lax.dot_general(
-        r * h, wh[:, 2 * hidden :], (((1,), (0,)), ((), ())), preferred_element_type=f32
+    h_new = _gru_q_step_math(
+        xs_ref[:, 0, :].astype(jnp.float32),
+        h_scr[...],
+        wxq_ref[...],
+        whq_ref[...],
+        wx_scale_ref[0, :],
+        wh_scale_ref[0, :],
+        b_ref[0, :],
+        sig_tab_ref[...],
+        tanh_tab_ref[...],
+        hidden=hidden,
+        n_seg=n_seg,
     )
-    c = tnh(gx[:, 2 * hidden :] + ch + b[2 * hidden :])
-    h_new = (1.0 - z) * c + z * h
     h_scr[...] = h_new
     hs_ref[:, 0, :] = h_new.astype(hs_ref.dtype)
 

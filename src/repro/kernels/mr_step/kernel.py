@@ -1,0 +1,311 @@
+"""Stage-fused MR per-window step Pallas kernel (the 4th kernel family).
+
+Fuses the whole per-window recovery stage map of merinda.mr_forward —
+GRU(-flow) sequence scan, RMS normalization, and the dense coefficient head
+— into ONE ``pallas_call``. This is the TPU re-derivation of the paper's
+stage-fused FPGA dataflow (§4, Table 8) one level above kernels/gru_scan:
+
+  FPGA mechanism                      ->  this kernel
+  -------------------------------------   -----------------------------------
+  no inter-stage synchronization       ->  encoder, norm and head execute in
+  (stage outputs stream directly           one kernel body; the hidden state
+  into the next stage)                     and the head input NEVER round-trip
+                                           HBM between stages
+  BRAM-resident hidden state           ->  h carried in a VMEM scratch across
+                                           the whole (scan + head) stage map
+  pruned dense layer fed on-chip       ->  head weights VMEM-resident next to
+                                           the gate weights; the head GEMM
+                                           issues the cycle after the last
+                                           scan step retires
+  fixed-point + LUT configuration      ->  int8 gate AND head weights with
+                                           per-channel scales + PWL
+                                           sigmoid/tanh (quant variant)
+
+Per sequence the only HBM traffic is x_t in and theta out — the [B, T, H]
+hidden-state tensor that the unfused pipeline materializes between the scan
+and head dispatches simply does not exist.
+
+Grid/layout mirrors kernels/gru_scan: grid = (batch_tiles, T), batch tiles
+outer (PARALLEL), time inner (ARBITRARY); the head fires under
+``pl.when(t == T-1)`` and writes the per-window head output tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.merinda import RMS_EPS
+from repro.core.quant import quantize_fixed
+from repro.kernels import runtime as rt
+from repro.kernels.gru_scan.kernel import _gru_step_math, _gru_q_step_math
+
+
+def _head_math(h, w1, b1, w2, b2, act_bits):
+    """merinda.head_math in Pallas dot_general spellings (shared RMS_EPS);
+    parity-tested against the shared helper in tests/test_kernels_mr_step.py."""
+    f32 = jnp.float32
+    h = h * jax.lax.rsqrt(jnp.mean(jnp.square(h), axis=-1, keepdims=True) + RMS_EPS)
+    if act_bits is not None:
+        # pure-jnp Qm.n grid; the STE wrapper is irrelevant here (the fused
+        # op's backward runs through the reference, ops._mr_bwd)
+        h = quantize_fixed(h, *act_bits)
+    z = jax.lax.dot_general(h, w1, (((1,), (0,)), ((), ())), preferred_element_type=f32)
+    z = jnp.maximum(z + b1, 0.0)
+    out = jax.lax.dot_general(z, w2, (((1,), (0,)), ((), ())), preferred_element_type=f32)
+    return out + b2
+
+
+def _mr_step_kernel(
+    # inputs
+    xs_ref,  # [bb, 1, D]   x_t tile (double-buffered by Mosaic)
+    h0_ref,  # [bb, H]
+    wx_ref,  # [D, 3H]      VMEM-resident across the whole stage map
+    wh_ref,  # [H, 3H]
+    b_ref,  # [1, 3H]
+    ts_ref,  # [1, H]
+    dts_ref,  # [1, 1]
+    w1_ref,  # [H, Dh]      head weights, VMEM-resident
+    b1_ref,  # [1, Dh]
+    w2_ref,  # [Dh, K]
+    b2_ref,  # [1, K]
+    # outputs
+    out_ref,  # [bb, K]     per-window head output (theta ++ shifts)
+    # scratch
+    h_scr,  # VMEM [bb, H] f32 — BRAM-resident hidden state analogue
+    *,
+    flow: bool,
+    hidden: int,
+    act_bits: tuple[int, int] | None,
+):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        h_scr[...] = h0_ref[...].astype(jnp.float32)
+
+    h_new = _gru_step_math(
+        xs_ref[:, 0, :],
+        h_scr[...],
+        wx_ref[...],
+        wh_ref[...],
+        b_ref[0, :],
+        ts_ref[0, :],
+        dts_ref[0, 0],
+        flow=flow,
+        hidden=hidden,
+    )
+    h_scr[...] = h_new
+
+    # stage handoff without synchronization: the head consumes h straight
+    # from VMEM the step the scan retires — no [B, T, H] HBM materialization
+    @pl.when(t == pl.num_programs(1) - 1)
+    def _head():
+        out = _head_math(h_new, w1_ref[...], b1_ref[0, :], w2_ref[...], b2_ref[0, :], act_bits)
+        out_ref[...] = out.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("flow", "act_bits", "block_b", "interpret")
+)
+def mr_step_pallas(
+    xs: jnp.ndarray,  # [B, T, D]
+    h0: jnp.ndarray,  # [B, H]
+    wx: jnp.ndarray,  # [D, 3H]
+    wh: jnp.ndarray,  # [H, 3H]
+    b: jnp.ndarray,  # [3H]
+    time_scale: jnp.ndarray,  # [H]
+    dts: jnp.ndarray,  # [T]
+    w1: jnp.ndarray,  # [H, Dh]
+    b1: jnp.ndarray,  # [Dh]
+    w2: jnp.ndarray,  # [Dh, K]
+    b2: jnp.ndarray,  # [K]
+    flow: bool = True,
+    act_bits: tuple[int, int] | None = None,
+    block_b: int | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns the per-window head output [B, K] (K = n_coef + n_shifts)."""
+    B, T, D = xs.shape
+    H = h0.shape[-1]
+    Dh = w1.shape[-1]
+    K = w2.shape[-1]
+    bb = block_b or B
+    assert B % bb == 0, f"batch {B} not divisible by block_b {bb}"
+    nb = B // bb
+
+    kernel = functools.partial(
+        _mr_step_kernel, flow=flow, hidden=H, act_bits=act_bits
+    )
+    return rt.pallas_call_compat(
+        kernel,
+        grid=(nb, T),
+        in_specs=[
+            ((bb, 1, D), lambda ib, t: (ib, t, 0)),  # xs: stream x_t
+            ((bb, H), lambda ib, t: (ib, 0)),  # h0
+            ((D, 3 * H), lambda ib, t: (0, 0)),  # wx: resident
+            ((H, 3 * H), lambda ib, t: (0, 0)),  # wh: resident
+            ((1, 3 * H), lambda ib, t: (0, 0)),  # b
+            ((1, H), lambda ib, t: (0, 0)),  # time_scale
+            ((1, 1), lambda ib, t: (t, 0)),  # dt_t
+            ((H, Dh), lambda ib, t: (0, 0)),  # head w1: resident
+            ((1, Dh), lambda ib, t: (0, 0)),  # head b1
+            ((Dh, K), lambda ib, t: (0, 0)),  # head w2: resident
+            ((1, K), lambda ib, t: (0, 0)),  # head b2
+        ],
+        out_specs=((bb, K), lambda ib, t: (ib, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K), jnp.float32),
+        scratch_shapes=[((bb, H), jnp.float32)],
+        dimension_semantics=(rt.PARALLEL, rt.ARBITRARY),
+        interpret=interpret,
+        name="mr_step_fused",
+    )(
+        xs,
+        h0,
+        wx,
+        wh,
+        b.reshape(1, -1),
+        time_scale.reshape(1, -1),
+        dts.reshape(-1, 1),
+        w1,
+        b1.reshape(1, -1),
+        w2,
+        b2.reshape(1, -1),
+    )
+
+
+# ---------------------------------------------------------------------------
+# int8 + piecewise-linear variant — fixed-point weights through BOTH stages
+# ---------------------------------------------------------------------------
+def _mr_step_q_kernel(
+    xs_ref,
+    h0_ref,
+    wxq_ref,  # int8 [D, 3H]
+    whq_ref,  # int8 [H, 3H]
+    wx_scale_ref,  # [1, 3H]
+    wh_scale_ref,  # [1, 3H]
+    b_ref,
+    dts_ref,
+    sig_tab_ref,  # [2, n_seg]
+    tanh_tab_ref,  # [2, n_seg]
+    w1q_ref,  # int8 [H, Dh]
+    w1_scale_ref,  # [1, Dh]
+    b1_ref,
+    w2q_ref,  # int8 [Dh, K]
+    w2_scale_ref,  # [1, K]
+    b2_ref,
+    out_ref,
+    h_scr,
+    *,
+    hidden: int,
+    n_seg: int,
+):
+    """Standard-GRU scan + head, int8 weights + PWL activations end to end."""
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        h_scr[...] = h0_ref[...].astype(jnp.float32)
+
+    f32 = jnp.float32
+    h_new = _gru_q_step_math(
+        xs_ref[:, 0, :].astype(f32),
+        h_scr[...],
+        wxq_ref[...],
+        whq_ref[...],
+        wx_scale_ref[0, :],
+        wh_scale_ref[0, :],
+        b_ref[0, :],
+        sig_tab_ref[...],
+        tanh_tab_ref[...],
+        hidden=hidden,
+        n_seg=n_seg,
+    )
+    h_scr[...] = h_new
+
+    @pl.when(t == pl.num_programs(1) - 1)
+    def _head():
+        w1 = w1q_ref[...].astype(f32) * w1_scale_ref[0, :]
+        w2 = w2q_ref[...].astype(f32) * w2_scale_ref[0, :]
+        out = _head_math(h_new, w1, b1_ref[0, :], w2, b2_ref[0, :], None)
+        out_ref[...] = out.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret", "n_seg"))
+def mr_step_pallas_int8(
+    xs: jnp.ndarray,  # [B, T, D]
+    h0: jnp.ndarray,  # [B, H]
+    wxq: jnp.ndarray,  # int8 [D, 3H]
+    whq: jnp.ndarray,  # int8 [H, 3H]
+    wx_scale: jnp.ndarray,  # [3H]
+    wh_scale: jnp.ndarray,  # [3H]
+    b: jnp.ndarray,  # [3H]
+    dts: jnp.ndarray,  # [T]
+    sig_tab: jnp.ndarray,  # [2, n_seg]
+    tanh_tab: jnp.ndarray,  # [2, n_seg]
+    w1q: jnp.ndarray,  # int8 [H, Dh]
+    w1_scale: jnp.ndarray,  # [Dh]
+    b1: jnp.ndarray,  # [Dh]
+    w2q: jnp.ndarray,  # int8 [Dh, K]
+    w2_scale: jnp.ndarray,  # [K]
+    b2: jnp.ndarray,  # [K]
+    block_b: int | None = None,
+    interpret: bool = False,
+    n_seg: int = 16,
+) -> jnp.ndarray:
+    B, T, D = xs.shape
+    H = h0.shape[-1]
+    Dh = w1q.shape[-1]
+    K = w2q.shape[-1]
+    bb = block_b or B
+    assert B % bb == 0
+    nb = B // bb
+    kernel = functools.partial(_mr_step_q_kernel, hidden=H, n_seg=n_seg)
+    return rt.pallas_call_compat(
+        kernel,
+        grid=(nb, T),
+        in_specs=[
+            ((bb, 1, D), lambda ib, t: (ib, t, 0)),
+            ((bb, H), lambda ib, t: (ib, 0)),
+            ((D, 3 * H), lambda ib, t: (0, 0)),
+            ((H, 3 * H), lambda ib, t: (0, 0)),
+            ((1, 3 * H), lambda ib, t: (0, 0)),
+            ((1, 3 * H), lambda ib, t: (0, 0)),
+            ((1, 3 * H), lambda ib, t: (0, 0)),
+            ((1, 1), lambda ib, t: (t, 0)),
+            ((2, n_seg), lambda ib, t: (0, 0)),
+            ((2, n_seg), lambda ib, t: (0, 0)),
+            ((H, Dh), lambda ib, t: (0, 0)),
+            ((1, Dh), lambda ib, t: (0, 0)),
+            ((1, Dh), lambda ib, t: (0, 0)),
+            ((Dh, K), lambda ib, t: (0, 0)),
+            ((1, K), lambda ib, t: (0, 0)),
+            ((1, K), lambda ib, t: (0, 0)),
+        ],
+        out_specs=((bb, K), lambda ib, t: (ib, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K), jnp.float32),
+        scratch_shapes=[((bb, H), jnp.float32)],
+        dimension_semantics=(rt.PARALLEL, rt.ARBITRARY),
+        interpret=interpret,
+        name="mr_step_fused_int8_pwl",
+    )(
+        xs,
+        h0,
+        wxq,
+        whq,
+        wx_scale.reshape(1, -1),
+        wh_scale.reshape(1, -1),
+        b.reshape(1, -1),
+        dts.reshape(-1, 1),
+        sig_tab,
+        tanh_tab,
+        w1q,
+        w1_scale.reshape(1, -1),
+        b1.reshape(1, -1),
+        w2q,
+        w2_scale.reshape(1, -1),
+        b2.reshape(1, -1),
+    )

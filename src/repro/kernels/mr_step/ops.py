@@ -1,0 +1,183 @@
+"""Public jit'd wrappers for the stage-fused MR per-window step.
+
+``mr_step`` is the fused replacement for merinda's encode -> RMS-norm ->
+dense-head stage sequence; ``mr_step_int8`` is the fixed-point serving
+variant (int8 gate AND head weights, PWL activations). Both resolve their
+backend through kernels/runtime.resolve_dispatch — compiled Pallas kernel on
+TPU, kernel body under the interpreter for CPU correctness sweeps, the
+pure-JAX reference otherwise — so every consumer (engine epoch scan, stream
+tick, serve_mr) shares one code path regardless of backend.
+
+Gradients flow through a custom_vjp whose backward is the reference program
+(same structure as kernels/gru_scan.ops), so the fused stage trains inside
+the scan-jitted engine exactly like the unfused one.
+"""
+
+from __future__ import annotations
+
+import functools as _functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoders
+from repro.core.quant import make_sigmoid_table, make_tanh_table, quantize_int8
+from repro.kernels import runtime as rt
+from repro.kernels.mr_step import kernel as _k
+from repro.kernels.mr_step import ref as _ref
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(11, 12, 13))
+def _mr_step_cvjp(xs, h0, wx, wh, b, time_scale, dts, w1, b1, w2, b2, flow, act_bits, block_b):
+    return _k.mr_step_pallas(
+        xs, h0, wx, wh, b, time_scale, dts, w1, b1, w2, b2,
+        flow=flow, act_bits=act_bits, block_b=block_b, interpret=not rt.on_tpu(),
+    )
+
+
+def _mr_fwd(xs, h0, wx, wh, b, time_scale, dts, w1, b1, w2, b2, flow, act_bits, block_b):
+    out = _mr_step_cvjp(xs, h0, wx, wh, b, time_scale, dts, w1, b1, w2, b2, flow, act_bits, block_b)
+    return out, (xs, h0, wx, wh, b, time_scale, dts, w1, b1, w2, b2)
+
+
+def _mr_bwd(flow, act_bits, block_b, res, ct):
+    _, vjp = jax.vjp(
+        lambda *a: _ref.mr_step_reference(*a, flow=flow, act_bits=act_bits), *res
+    )
+    return vjp(ct)
+
+
+_mr_step_cvjp.defvjp(_mr_fwd, _mr_bwd)
+
+
+def _split_gru(params, cfg):
+    """(wx, wh, b, time_scale) with the QAT weight fake-quant applied."""
+    enc = encoders.quantized_gru_params(params.encoder, cfg)
+    d_in = cfg.state_dim + cfg.input_dim
+    return enc.w[:d_in], enc.w[d_in:], enc.b, enc.time_scale
+
+
+def _head_weights(params, cfg):
+    """(w1, b1, w2, b2) with the shared QAT weight treatment applied."""
+    from repro.core.quant import qat_weight
+
+    w1 = qat_weight(params.head_w1, cfg.quant)
+    w2 = qat_weight(params.head_w2, cfg.quant)
+    return w1, params.head_b1, w2, params.head_b2
+
+
+def _fusable_spec(cfg, *, int8: bool) -> encoders.EncoderSpec:
+    spec = encoders.get_encoder(cfg.encoder)
+    if not spec.fusable:
+        raise ValueError(
+            f"fused mr_step supports the GRU encoder families, got {cfg.encoder!r} "
+            f"(fusable: {[n for n in encoders.encoder_names() if encoders.get_encoder(n).fusable]})"
+        )
+    if int8 and spec.flow:
+        raise ValueError(
+            f"int8 mr_step requires encoder='gru' (standard cell, paper Eq. 12-15), "
+            f"got {cfg.encoder!r}"
+        )
+    return spec
+
+
+def _split_out(out, cfg):
+    theta = out[..., : cfg.n_coef].reshape(out.shape[0], cfg.n_terms, cfg.state_dim)
+    return theta, out[..., cfg.n_coef :]
+
+
+def mr_step(
+    params,  # merinda.MRParams (GRU-family encoder)
+    cfg,  # merinda.MRConfig
+    xs: jnp.ndarray,  # [B, T, n+m] normalized (+ activation-quantized) windows
+    dts: jnp.ndarray | None = None,
+    block_b: int | None = None,
+    force_reference: bool = False,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused per-window recovery stage. Returns (theta [B, n_terms, n], shifts [B, q]).
+
+    Dispatch: Pallas kernel on TPU; reference (identical math) elsewhere.
+    Tests pass interpret=True to execute the kernel body on CPU.
+    """
+    spec = _fusable_spec(cfg, int8=False)
+    B, T, _ = xs.shape
+    h0 = jnp.zeros((B, cfg.hidden), xs.dtype)
+    if dts is None:
+        dts = jnp.ones((T,), xs.dtype)
+    wx, wh, b, time_scale = _split_gru(params, cfg)
+    w1, b1, w2, b2 = _head_weights(params, cfg)
+    act_bits = None
+    if cfg.quant is not None:
+        act_bits = (cfg.quant.act_int_bits, cfg.quant.act_frac_bits)
+    if rt.resolve_dispatch(force_reference, interpret) is rt.Dispatch.REFERENCE:
+        out = _ref.mr_step_reference(
+            xs, h0, wx, wh, b, time_scale, dts, w1, b1, w2, b2,
+            flow=spec.flow, act_bits=act_bits,
+        )
+    else:
+        out = _mr_step_cvjp(
+            xs, h0, wx, wh, b, time_scale, dts, w1, b1, w2, b2,
+            spec.flow, act_bits, block_b,
+        )
+    return _split_out(out, cfg)
+
+
+def mr_step_int8(
+    params,
+    cfg,
+    xs: jnp.ndarray,
+    dts: jnp.ndarray | None = None,
+    n_seg: int = 16,
+    block_b: int | None = None,
+    force_reference: bool = False,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fixed-point serving stage: int8 gate + head weights, PWL activations.
+
+    Quantizes on the fly from float params (production would cache the int8
+    tensors; the kernel signature takes them pre-quantized). Standard GRU
+    only — the int8 kernel implements paper Eq. 12-15.
+    """
+    _fusable_spec(cfg, int8=True)
+    B, T, _ = xs.shape
+    d_in = cfg.state_dim + cfg.input_dim
+    h0 = jnp.zeros((B, cfg.hidden), xs.dtype)
+    if dts is None:
+        dts = jnp.ones((T,), jnp.float32)
+    wxq = quantize_int8(params.encoder.w[:d_in], axis=-1)
+    whq = quantize_int8(params.encoder.w[d_in:], axis=-1)
+    w1q = quantize_int8(params.head_w1, axis=-1)
+    w2q = quantize_int8(params.head_w2, axis=-1)
+    sig_t, tanh_t = make_sigmoid_table(n_seg), make_tanh_table(n_seg)
+    if rt.resolve_dispatch(force_reference, interpret) is rt.Dispatch.REFERENCE:
+        out = _ref.mr_step_int8_reference(
+            xs, h0, wxq.values, whq.values, wxq.scale, whq.scale,
+            params.encoder.b, dts,
+            w1q.values, w1q.scale, params.head_b1,
+            w2q.values, w2q.scale, params.head_b2,
+            sig_t, tanh_t,
+        )
+    else:
+        out = _k.mr_step_pallas_int8(
+            xs,
+            h0,
+            wxq.values,
+            whq.values,
+            wxq.scale.reshape(-1),
+            whq.scale.reshape(-1),
+            params.encoder.b,
+            dts,
+            jnp.stack([sig_t.slopes, sig_t.intercepts]),
+            jnp.stack([tanh_t.slopes, tanh_t.intercepts]),
+            w1q.values,
+            w1q.scale.reshape(-1),
+            params.head_b1,
+            w2q.values,
+            w2q.scale.reshape(-1),
+            params.head_b2,
+            block_b=block_b,
+            interpret=not rt.on_tpu(),
+            n_seg=n_seg,
+        )
+    return _split_out(out, cfg)

@@ -1,0 +1,70 @@
+"""Pure-jnp oracle for the fused MR per-window step (scan + norm + head).
+
+Single source of truth for the stage math: the GRU(-flow) scan delegates to
+core.neural_flow.gru_scan_ref and the head block IS merinda.head_math (one
+shared function — RMS-normalize, optional activation fake-quant, relu MLP —
+not a hand-synced copy). The Pallas kernel (kernel.py) is tested against
+this module; the weight-side QAT fake-quant is applied by ops.py BEFORE
+either path so both consume identical weights.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.merinda import head_math
+from repro.core.neural_flow import GRUParams, gru_scan_ref
+from repro.core.quant import PWLTable
+from repro.kernels.gru_scan.ref import gru_scan_int8_reference
+
+# the head stage of the fused oracle is literally the unfused head math
+head_reference = head_math
+
+
+def mr_step_reference(
+    xs: jnp.ndarray,  # [B, T, D] (already normalized / activation-quantized)
+    h0: jnp.ndarray,  # [B, H]
+    wx: jnp.ndarray,  # [D, 3H]
+    wh: jnp.ndarray,  # [H, 3H]
+    b: jnp.ndarray,  # [3H]
+    time_scale: jnp.ndarray,  # [H]
+    dts: jnp.ndarray,  # [T]
+    w1: jnp.ndarray,  # [H, Dh]
+    b1: jnp.ndarray,  # [Dh]
+    w2: jnp.ndarray,  # [Dh, K]
+    b2: jnp.ndarray,  # [K]
+    flow: bool = True,
+    act_bits: tuple[int, int] | None = None,
+) -> jnp.ndarray:
+    """Fused-stage oracle. Returns the raw head output [B, K]."""
+    params = GRUParams(w=jnp.concatenate([wx, wh], axis=0), b=b, time_scale=time_scale)
+    h_T, _ = gru_scan_ref(params, xs, h0, dts=dts, flow=flow)
+    return head_math(h_T, w1, b1, w2, b2, act_bits=act_bits)
+
+
+def mr_step_int8_reference(
+    xs: jnp.ndarray,
+    h0: jnp.ndarray,
+    wxq: jnp.ndarray,  # int8 [D, 3H]
+    whq: jnp.ndarray,  # int8 [H, 3H]
+    wx_scale: jnp.ndarray,
+    wh_scale: jnp.ndarray,
+    b: jnp.ndarray,
+    dts: jnp.ndarray,
+    w1q: jnp.ndarray,  # int8 [H, Dh]
+    w1_scale: jnp.ndarray,
+    b1: jnp.ndarray,
+    w2q: jnp.ndarray,  # int8 [Dh, K]
+    w2_scale: jnp.ndarray,
+    b2: jnp.ndarray,
+    sig_table: PWLTable,
+    tanh_table: PWLTable,
+) -> jnp.ndarray:
+    """Int8-dequant + PWL oracle (standard GRU + int8 head, float32 math)."""
+    f32 = jnp.float32
+    hs = gru_scan_int8_reference(
+        xs, h0, wxq, whq, wx_scale, wh_scale, b, dts, sig_table, tanh_table
+    )
+    w1 = w1q.astype(f32) * w1_scale
+    w2 = w2q.astype(f32) * w2_scale
+    return head_math(hs[:, -1, :], w1, b1, w2, b2)

@@ -19,9 +19,15 @@ CPU demo (the CI acceptance configuration):
     PYTHONPATH=src python -m repro.launch.serve_mr \
         --streams 12 --slots 4 --steps-per-tick 8
 
+``--fused`` runs every tick's per-window recovery stage through the
+stage-fused kernels/mr_step step (encode + RMS-norm + dense head as ONE
+dispatch with VMEM-resident hidden state; reference math off-TPU) — the
+same fused code path the engine's epoch scan uses.
+
 ``--quant`` additionally serves every evicted stream's coefficients through
-the int8-weight / PWL-activation GRU kernel (gru_scan_pallas_int8, interpret
-mode off-TPU) — the paper's fixed-point serving configuration end to end.
+the fused fixed-point stage (kernels/mr_step int8: quantized gate + head
+weights, PWL activations; interpret mode off-TPU) — the paper's fixed-point
+serving configuration end to end.
 """
 
 from __future__ import annotations
@@ -144,6 +150,11 @@ def main() -> int:
     ap.add_argument("--max-ticks", type=int, default=1200)
     ap.add_argument("--quant", action="store_true", help="int8/PWL kernel readout at eviction")
     ap.add_argument(
+        "--fused",
+        action="store_true",
+        help="stage-fused per-window recovery step (kernels/mr_step) in every tick",
+    )
+    ap.add_argument(
         "--tol-factor",
         type=float,
         default=3.0,
@@ -167,6 +178,7 @@ def main() -> int:
         dense_hidden=2 * args.hidden,
         dt=specs[0].dt,
         encoder="gru",
+        fused=args.fused,
     )
     scfg = StreamConfig(
         buf_len=args.buf_len,
@@ -183,7 +195,7 @@ def main() -> int:
     print(
         f"[serve_mr] streams={args.streams} slots={args.slots} "
         f"K={args.steps_per_tick} windows/slot={scfg.n_windows} "
-        f"library={cfg.n_terms}x{cfg.state_dim} quant={args.quant}"
+        f"library={cfg.n_terms}x{cfg.state_dim} fused={args.fused} quant={args.quant}"
     )
     stats = run_service(service, ys, us, args.max_ticks)
     n_done = len(service.results)

@@ -1,0 +1,99 @@
+"""Encoder registry (core/encoders.py): dispatch, parity, failure modes."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import encoders
+from repro.core.merinda import MRConfig, init_mr, mr_forward
+
+PAPER_SET = {"gru_flow", "gru", "ltc", "node"}
+KERNEL_SET = {"gru_flow_kernel", "gru_kernel"}
+
+
+def test_registry_covers_paper_comparison_set():
+    names = set(encoders.encoder_names())
+    assert PAPER_SET | KERNEL_SET <= names
+
+
+def test_unknown_encoder_lists_registered_names():
+    with pytest.raises(ValueError, match="gru_flow"):
+        encoders.get_encoder("transformer")
+
+
+def test_registry_flags():
+    """fusable/kernel/flow flags drive mr_step + dispatch decisions."""
+    for name in PAPER_SET | KERNEL_SET:
+        spec = encoders.get_encoder(name)
+        assert spec.name == name
+        assert spec.fusable == name.startswith("gru")
+        assert spec.kernel == name.endswith("_kernel")
+    assert encoders.get_encoder("gru_flow").flow is True
+    assert encoders.get_encoder("gru").flow is False
+    assert encoders.get_encoder("ltc").flow is None
+
+
+@pytest.mark.parametrize("name", sorted(PAPER_SET | KERNEL_SET))
+def test_init_and_encode_all_registered(name):
+    """Every row initializes and encodes with the expected shapes."""
+    cfg = MRConfig(state_dim=3, order=2, hidden=8, dense_hidden=16, dt=0.01, encoder=name)
+    params = init_mr(jax.random.key(0), cfg)
+    xs = jax.random.normal(jax.random.key(1), (2, 6, 3), jnp.float32)
+    h = encoders.get_encoder(name).encode(params.encoder, cfg, xs)
+    assert h.shape == (2, 8)
+    assert bool(jnp.isfinite(h).all())
+
+
+@pytest.mark.parametrize("base", ["gru_flow", "gru"])
+def test_kernel_variant_shares_init_and_forward(base):
+    """Registry-resolved kernel backend: same params, same forward."""
+    mk = lambda enc: MRConfig(  # noqa: E731
+        state_dim=3, order=2, hidden=8, dense_hidden=16, dt=0.01, encoder=enc
+    )
+    p_ref = init_mr(jax.random.key(0), mk(base))
+    p_ker = init_mr(jax.random.key(0), mk(base + "_kernel"))
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+        p_ref,
+        p_ker,
+    )
+    xs = jax.random.normal(jax.random.key(1), (2, 6, 3), jnp.float32)
+    th_r, _ = mr_forward(p_ref, mk(base), xs, None)
+    th_k, _ = mr_forward(p_ker, mk(base + "_kernel"), xs, None)
+    np.testing.assert_allclose(np.asarray(th_r), np.asarray(th_k), atol=1e-5, rtol=1e-5)
+
+
+def test_engine_rejects_unknown_encoder_eagerly():
+    from repro.core import engine
+
+    cfg = MRConfig(state_dim=2, order=2, hidden=8, dense_hidden=16, encoder="nope")
+    ys = jnp.zeros((4, 8, 2))
+    with pytest.raises(ValueError, match="unknown encoder"):
+        engine.train_mr_scan(cfg, ys, steps=1)
+    with pytest.raises(ValueError, match="unknown encoder"):
+        engine.recover_many(cfg, ys[None], steps=1)
+
+
+def test_register_encoder_roundtrip():
+    """Custom rows plug into init_mr/mr_forward with no other changes."""
+    spec = encoders.EncoderSpec(
+        name="mean_pool_test",
+        init=lambda key, d_in, hidden, dtype=jnp.float32: {
+            "w": jnp.ones((d_in, hidden), dtype)
+        },
+        encode=lambda p, cfg, xs: jnp.mean(xs, axis=1) @ p["w"],
+        flow=None,
+        fusable=False,
+        kernel=False,
+    )
+    encoders.register_encoder(spec)
+    try:
+        cfg = MRConfig(state_dim=3, order=2, hidden=8, dense_hidden=16, encoder="mean_pool_test")
+        params = init_mr(jax.random.key(0), cfg)
+        th, _ = mr_forward(params, cfg, jnp.ones((2, 5, 3)), None)
+        assert th.shape == (2, cfg.n_terms, 3)
+    finally:
+        encoders._REGISTRY.pop("mean_pool_test", None)

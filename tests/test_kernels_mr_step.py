@@ -1,0 +1,155 @@
+"""mr_step fused-stage kernel vs references: CPU interpret-mode parity sweep.
+
+Mirrors test_kernels_gru.py for the 4th kernel family. Tolerances
+(acceptance criteria for the stage-fused refactor):
+
+  fp32  fused kernel (interpret) vs unfused reference path:  <= 1e-4
+        (observed ~3e-8 — one extra f32 rounding at the stage handoff)
+  int8  fused kernel (interpret) vs int8-dequant oracle:      <= 1e-6
+        int8+PWL vs the float path:                           <= 0.1
+        (quantization error budget, same bound as the service
+        readout-parity test in test_stream.py)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.merinda import MRConfig, head_from_hidden, init_mr, mr_forward
+from repro.core.neural_flow import gru_scan_ref
+from repro.kernels.mr_step.ops import mr_step, mr_step_int8
+
+SHAPES = [
+    # (B, T, n_state, hidden, dense_hidden)
+    (1, 4, 2, 8, 16),
+    (2, 16, 3, 32, 64),
+    (4, 33, 3, 16, 32),  # odd T
+    (8, 7, 2, 64, 128),  # hardware-aligned H
+]
+
+
+def _setup(B, T, n, H, Dh, encoder="gru_flow", seed=0, **kw):
+    cfg = MRConfig(state_dim=n, order=2, hidden=H, dense_hidden=Dh, dt=0.01,
+                   encoder=encoder, **kw)
+    params = init_mr(jax.random.key(seed), cfg)
+    xs = jax.random.normal(jax.random.key(seed + 1), (B, T, n), jnp.float32)
+    return cfg, params, xs
+
+
+@pytest.mark.parametrize("B,T,n,H,Dh", SHAPES)
+@pytest.mark.parametrize("encoder", ["gru_flow", "gru"])
+def test_mr_step_interpret_matches_unfused(B, T, n, H, Dh, encoder):
+    """Fused kernel body (interpreter) vs the unfused encode->head stages."""
+    cfg, params, xs = _setup(B, T, n, H, Dh, encoder)
+    th_u, sh_u = mr_forward(params, cfg, xs, None)
+    th_k, sh_k = mr_step(params, cfg, xs, interpret=True)
+    np.testing.assert_allclose(np.asarray(th_k), np.asarray(th_u), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(sh_k), np.asarray(sh_u), atol=1e-4, rtol=1e-4)
+
+
+def test_mr_step_reference_dispatch_is_exact():
+    """force_reference must bit-match the unfused path (same program)."""
+    cfg, params, xs = _setup(4, 12, 3, 16, 32)
+    th_u, _ = mr_forward(params, cfg, xs, None)
+    th_r, _ = mr_step(params, cfg, xs, force_reference=True)
+    np.testing.assert_array_equal(np.asarray(th_r), np.asarray(th_u))
+
+
+def test_mr_step_head_consumes_final_hidden_state():
+    """The fused head must see exactly h_T (not an intermediate step)."""
+    cfg, params, xs = _setup(3, 9, 3, 16, 32)
+    h_T, _ = gru_scan_ref(params.encoder, xs, jnp.zeros((3, cfg.hidden)), flow=True)
+    th_head, _ = head_from_hidden(params, cfg, h_T)
+    th_k, _ = mr_step(params, cfg, xs, interpret=True)
+    np.testing.assert_allclose(np.asarray(th_k), np.asarray(th_head), atol=1e-5, rtol=1e-5)
+
+
+def test_mr_step_batch_blocking_invariance():
+    """block_b tiling must not change results (BRAM-banking analogue)."""
+    cfg, params, xs = _setup(8, 10, 3, 16, 32)
+    th_full, _ = mr_step(params, cfg, xs, interpret=True)
+    th_tiled, _ = mr_step(params, cfg, xs, block_b=2, interpret=True)
+    np.testing.assert_allclose(np.asarray(th_full), np.asarray(th_tiled), atol=1e-6)
+
+
+def test_mr_step_grads_match_unfused():
+    """Training through the fused stage == training through the unfused one.
+
+    The interpret=True leg takes the custom_vjp kernel dispatch (the same
+    path TPU training uses), so ops._mr_bwd's 11-gradient contract is
+    exercised on CPU — off-TPU default dispatch alone would quietly compare
+    reference vs reference.
+    """
+    cfg, params, xs = _setup(4, 8, 3, 16, 32)
+    cfg_f = MRConfig(state_dim=3, order=2, hidden=16, dense_hidden=32, dt=0.01,
+                     encoder="gru_flow", fused=True)
+
+    def loss(p, c):
+        th, _ = mr_forward(p, c, xs, None)
+        return jnp.sum(th**2)
+
+    def loss_cvjp(p):
+        th, _ = mr_step(p, cfg, xs, interpret=True)
+        return jnp.sum(th**2)
+
+    gu = jax.grad(loss)(params, cfg)
+    gf = jax.grad(loss)(params, cfg_f)
+    gk = jax.grad(loss_cvjp)(params)
+    for other in (gf, gk):
+        jax.tree.map(
+            lambda a, b: np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), atol=1e-5, rtol=1e-5
+            ),
+            gu,
+            other,
+        )
+
+
+def test_mr_step_qat_parity():
+    """cfg.quant (fixed-point QAT) through the fused kernel == unfused."""
+    from repro.core.quant import QuantConfig, fake_quant_ste
+
+    q = QuantConfig(act_int_bits=4, act_frac_bits=10, weight_int_bits=2, weight_frac_bits=12)
+    cfg, params, xs = _setup(4, 10, 3, 16, 32, quant=q)
+    th_u, _ = mr_forward(params, cfg, xs, None)
+    # mr_forward pre-quantizes the window activations before the fused stage
+    xs_q = fake_quant_ste(xs, q.act_int_bits, q.act_frac_bits)
+    th_k, _ = mr_step(params, cfg, xs_q, interpret=True)
+    np.testing.assert_allclose(np.asarray(th_k), np.asarray(th_u), atol=1e-4, rtol=1e-4)
+
+
+def test_mr_step_rejects_non_fusable_encoders():
+    cfg, params, xs = _setup(2, 6, 3, 8, 16, encoder="ltc")
+    with pytest.raises(ValueError, match="fusable"):
+        mr_step(params, cfg, xs)
+
+
+# ---------------------------------------------------------------------------
+# int8 + PWL variant
+# ---------------------------------------------------------------------------
+def test_mr_step_int8_interpret_matches_int8_reference():
+    cfg, params, xs = _setup(4, 20, 3, 32, 64, encoder="gru")
+    th_k, sh_k = mr_step_int8(params, cfg, xs, interpret=True)
+    th_r, sh_r = mr_step_int8(params, cfg, xs, force_reference=True)
+    np.testing.assert_allclose(np.asarray(th_k), np.asarray(th_r), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(sh_k), np.asarray(sh_r), atol=1e-6)
+
+
+def test_mr_step_int8_accuracy_budget():
+    """Documented int8 tolerance: fused fixed-point stage (int8 gate + head
+    weights, PWL activations) within 0.1 of float — and actually quantized."""
+    cfg, params, xs = _setup(4, 30, 3, 32, 64, encoder="gru")
+    th_f, _ = mr_forward(params, cfg, xs, None)
+    th_q, _ = mr_step_int8(params, cfg, xs, force_reference=True)
+    err = float(jnp.max(jnp.abs(th_f - th_q)))
+    assert err < 0.1, f"int8+PWL fused stage drifted too far from float: {err}"
+    assert err > 1e-7, "int8 path silently ran float math"
+
+
+def test_mr_step_int8_requires_standard_gru():
+    cfg, params, xs = _setup(2, 6, 3, 8, 16, encoder="gru_flow")
+    with pytest.raises(ValueError, match="encoder='gru'"):
+        mr_step_int8(params, cfg, xs)

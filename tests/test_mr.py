@@ -62,15 +62,28 @@ def test_baseline_encoders_train(lorenz_windows, encoder):
 
 
 def test_merinda_kernel_path_equals_reference(lorenz_windows):
-    """use_kernel=True must not change the forward computation."""
+    """The registry's kernel-backed encoder must not change the forward."""
     yw, _ = lorenz_windows
     base = dict(state_dim=3, order=2, hidden=32, dense_hidden=64, dt=0.01)
-    cfg_r = MRConfig(**base, encoder="gru_flow", use_kernel=False)
-    cfg_k = MRConfig(**base, encoder="gru_flow", use_kernel=True)
+    cfg_r = MRConfig(**base, encoder="gru_flow")
+    cfg_k = MRConfig(**base, encoder="gru_flow_kernel")
     params = init_mr(jax.random.key(0), cfg_r)
     th_r, _ = mr_forward(params, cfg_r, yw[:8], None)
     th_k, _ = mr_forward(params, cfg_k, yw[:8], None)
     np.testing.assert_allclose(np.asarray(th_r), np.asarray(th_k), atol=1e-4, rtol=1e-4)
+
+
+def test_merinda_fused_stage_equals_unfused(lorenz_windows):
+    """cfg.fused=True (kernels/mr_step) must not change the forward."""
+    yw, _ = lorenz_windows
+    base = dict(state_dim=3, order=2, hidden=32, dense_hidden=64, dt=0.01)
+    cfg_u = MRConfig(**base, encoder="gru_flow")
+    cfg_f = MRConfig(**base, encoder="gru_flow", fused=True)
+    params = init_mr(jax.random.key(0), cfg_u)
+    th_u, sh_u = mr_forward(params, cfg_u, yw[:8], None)
+    th_f, sh_f = mr_forward(params, cfg_f, yw[:8], None)
+    np.testing.assert_allclose(np.asarray(th_u), np.asarray(th_f), atol=1e-4, rtol=1e-4)
+    assert sh_f.shape == sh_u.shape
 
 
 def test_merinda_quantized_accuracy_budget(lorenz_windows):

@@ -1,0 +1,111 @@
+"""core/quant.py edge cases guarding the fused kernel's fixed-point path.
+
+The mr_step int8 kernel consumes these primitives directly (PWL tables,
+per-channel int8 scales) and the QAT path consumes quantize_fixed through
+fake_quant_ste — saturation, clipping bounds and roundtrip behavior must be
+exact or the fused and unfused paths silently diverge.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quant import (
+    dequantize_int8,
+    fake_quant_ste,
+    make_sigmoid_table,
+    make_tanh_table,
+    pwl_apply,
+    pwl_max_error,
+    quantize_fixed,
+    quantize_int8,
+)
+
+
+# ---------------------------------------------------------------------------
+# PWL tables: saturation beyond the table range
+# ---------------------------------------------------------------------------
+def test_pwl_saturates_exactly_beyond_range():
+    """x < x_min / x > x_max must return the exact saturation constants —
+    the FPGA ROM has no entries there; any interpolation would extrapolate."""
+    sig = make_sigmoid_table(16)
+    xs = jnp.asarray([-1e6, sig.x_min - 1e-3, sig.x_max + 1e-3, 1e6], jnp.float32)
+    ys = np.asarray(pwl_apply(sig, xs))
+    # saturation constants are stored as f64 floats; the apply path is f32
+    np.testing.assert_allclose(ys[:2], sig.left, rtol=1e-6)
+    np.testing.assert_allclose(ys[2:], sig.right, rtol=1e-6)
+
+    tnh = make_tanh_table(16)
+    ys = np.asarray(pwl_apply(tnh, jnp.asarray([-50.0, 50.0], jnp.float32)))
+    np.testing.assert_allclose(ys, [tnh.left, tnh.right], rtol=1e-6)
+
+
+def test_pwl_exact_at_knots_and_boundary():
+    """Segment interpolation is exact at every knot, including x_min/x_max."""
+    tab = make_tanh_table(32)
+    knots = np.linspace(tab.x_min, tab.x_max, 33)
+    approx = np.asarray(pwl_apply(tab, jnp.asarray(knots, jnp.float32)))
+    np.testing.assert_allclose(approx, np.tanh(knots), atol=1e-6)
+
+
+def test_pwl_max_error_helper_matches_direct_probe():
+    tab = make_sigmoid_table(64)
+    err = pwl_max_error(tab, lambda x: 1.0 / (1.0 + np.exp(-x)))
+    assert 0.0 < err < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# Q-format fixed point: clipping bounds
+# ---------------------------------------------------------------------------
+def test_quantize_fixed_clipping_bounds():
+    """Two's-complement Q(i).(f): range is [-2^(i+f-1), 2^(i+f-1)-1] / 2^f —
+    asymmetric, like the hardware ap_fixed."""
+    i, f = 2, 2  # grid step 0.25, codes in [-8, 7] -> values in [-2.0, 1.75]
+    x = jnp.asarray([-100.0, -2.0, 1.75, 100.0], jnp.float32)
+    q = np.asarray(quantize_fixed(x, i, f))
+    np.testing.assert_array_equal(q, [-2.0, -2.0, 1.75, 1.75])
+
+
+def test_quantize_fixed_rounds_to_grid():
+    q = np.asarray(quantize_fixed(jnp.asarray([0.3, -0.3, 0.125]), 2, 2))
+    # 0.3*4=1.2 -> 1 -> 0.25; -0.3 -> -0.25; 0.125*4=0.5 rounds-to-even -> 0.0
+    np.testing.assert_array_equal(q, [0.25, -0.25, 0.0])
+    # idempotent: grid points are fixed points of the quantizer
+    np.testing.assert_array_equal(np.asarray(quantize_fixed(jnp.asarray(q), 2, 2)), q)
+
+
+def test_fake_quant_ste_gradient_is_identity():
+    """Straight-through estimator: d(fake_quant)/dx == 1 even at clip."""
+    g = jax.grad(lambda x: jnp.sum(fake_quant_ste(x, 2, 2)))(
+        jnp.asarray([0.3, -5.0, 100.0])
+    )
+    np.testing.assert_array_equal(np.asarray(g), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# int8 per-channel scales: roundtrip
+# ---------------------------------------------------------------------------
+def test_int8_per_channel_roundtrip():
+    key = jax.random.key(0)
+    # per-channel dynamic ranges spanning 3 orders of magnitude
+    w = jax.random.normal(key, (16, 8)) * jnp.asarray([1e-2, 0.1, 1.0, 10.0] * 2)
+    q = quantize_int8(w, axis=-1)
+    assert q.values.dtype == jnp.int8
+    assert q.scale.shape == (1, 8)  # one scale per output channel
+    assert int(jnp.max(jnp.abs(q.values.astype(jnp.int32)))) <= 127
+    back = np.asarray(dequantize_int8(q))
+    # roundtrip error bounded by half an LSB of each channel's scale
+    err = np.abs(back - np.asarray(w))
+    bound = 0.5 * np.asarray(q.scale) + 1e-9
+    assert (err <= bound).all(), (err.max(axis=0), bound)
+
+
+def test_int8_zero_channel_is_safe():
+    """An all-zero channel must not produce NaN/inf scales or values."""
+    w = jnp.zeros((4, 3)).at[:, 1].set(jnp.asarray([1.0, -2.0, 0.5, 0.0]))
+    q = quantize_int8(w, axis=-1)
+    assert np.isfinite(np.asarray(q.scale)).all()
+    np.testing.assert_array_equal(np.asarray(q.values[:, 0]), 0)
+    np.testing.assert_array_equal(np.asarray(dequantize_int8(q)[:, 0]), 0.0)
