@@ -28,12 +28,22 @@ def _mr_mse(system: str, encoder: str, steps: int, seed: int) -> float:
     ts, ys, us = generate_trajectory(system)
     yw, uw, norm = make_windows(ys, us, window=32, stride=4)
     cfg = MRConfig(
-        state_dim=spec.state_dim, order=spec.order, hidden=32, dense_hidden=64,
-        dt=spec.dt, encoder=encoder,
+        state_dim=spec.state_dim,
+        order=spec.order,
+        hidden=32,
+        dense_hidden=64,
+        dt=spec.dt,
+        encoder=encoder,
     )
     params, hist = train_mr(
-        cfg, jnp.asarray(yw), None, steps=steps, lr=3e-3, seed=seed,
-        batch_size=64, log_every=max(steps - 1, 1),
+        cfg,
+        jnp.asarray(yw),
+        None,
+        steps=steps,
+        lr=3e-3,
+        seed=seed,
+        batch_size=64,
+        log_every=max(steps - 1, 1),
     )
     return float(hist[-1]["recon_mse"])
 

@@ -103,8 +103,12 @@ def _kernel_cost(B, T, D, H) -> dict:
     tc, tm = flops / PEAK_FLOPS, hbm / HBM_BW
     t = max(tc, tm)
     return {
-        "flops": flops, "hbm_bytes": hbm, "t_compute": tc, "t_memory": tm,
-        "t_est": t, "cycles_est": t * TPU_CLOCK_HZ,
+        "flops": flops,
+        "hbm_bytes": hbm,
+        "t_compute": tc,
+        "t_memory": tm,
+        "t_est": t,
+        "cycles_est": t * TPU_CLOCK_HZ,
         "bound": "compute" if tc >= tm else "memory",
     }
 

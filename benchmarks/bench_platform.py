@@ -42,8 +42,13 @@ def run(fast: bool = True):
         # horizon O(3) — recovered Theta absorbs the scale (time-unit choice),
         # while dt=1.0 (horizon 32) lets early bad Theta blow up the solve.
         cfg = MRConfig(
-            state_dim=spec.state_dim, input_dim=spec.input_dim, order=spec.order,
-            hidden=32, dense_hidden=64, dt=0.1, encoder=encoder,
+            state_dim=spec.state_dim,
+            input_dim=spec.input_dim,
+            order=spec.order,
+            hidden=32,
+            dense_hidden=64,
+            dt=0.1,
+            encoder=encoder,
             ltc_substeps=6,
         )
         params, hist = train_mr(

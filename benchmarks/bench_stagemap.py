@@ -35,6 +35,7 @@ Claims checked (structurally):
 from __future__ import annotations
 
 from benchmarks.common import HBM_BW, LAT_VMEM, LAT_XLA, PEAK_FLOPS, TPU_CLOCK_HZ, emit
+from repro.kernels.mr_step import tiling
 
 # fused-stage head depth: norm -> GEMM+relu -> GEMM (amortized per window)
 HEAD_DEPTH = 3
@@ -44,27 +45,15 @@ SCAN_DEPTH = 3  # fused affine -> gates -> blend (bench_cycles DEPTH)
 def _vmem_bytes(
     B, D, H, Dh=128, K=32, *, int8: bool, n_seg: int, block_b: int, fused: bool = True
 ) -> int:
-    """Exact VMEM residency from the fused kernel's BlockSpecs (kernel.py).
+    """Exact VMEM residency from the fused kernel's BlockSpecs.
 
+    Delegates to ``repro.kernels.mr_step.tiling.vmem_bytes`` — the SAME
+    model ``repro.api.compile_plan`` budgets ``block_b="auto"`` against, so
+    this sweep and the runtime tiling decision can never disagree.
     ``fused=False`` models the bare gru_scan kernel (no head residency) —
     the configuration the unfused pipeline runs.
     """
-    wbytes = 1 if int8 else 4
-    bb = block_b or B
-    vm = (D * 3 * H + H * 3 * H) * wbytes  # resident gate weights
-    vm += 3 * H * 4 * (3 if int8 else 1)  # bias (+2 scale rows when int8)
-    vm += bb * D * 4 + bb * H * 4 * 2  # x_t block + h scratch + h_t/out tile
-    vm += H * 4 + 4  # time_scale + dt
-    if int8:
-        vm += 2 * 2 * n_seg * 4  # sigmoid/tanh PWL tables (slopes+intercepts)
-    if fused:
-        # head weights are VMEM-resident next to the gate weights
-        vm += (H * Dh + Dh * K) * wbytes  # w1 + w2
-        vm += (Dh + K) * 4  # b1 + b2
-        vm += bb * K * 4  # out tile (theta ++ shifts)
-        if int8:
-            vm += (Dh + K) * 4  # per-channel dequant scale rows
-    return vm
+    return tiling.vmem_bytes(B, D, H, Dh, K, int8=int8, n_seg=n_seg, block_b=block_b, fused=fused)
 
 
 def _step_cost(
@@ -115,9 +104,7 @@ def run(B: int = 256, D: int = 8, H: int = 64, Dh: int = 128, K: int = 32):
     return rows
 
 
-def run_fused_ratio(
-    B: int = 256, T: int = 32, D: int = 8, H: int = 64, Dh: int = 128, K: int = 32
-):
+def run_fused_ratio(B: int = 256, T: int = 32, D: int = 8, H: int = 64, Dh: int = 128, K: int = 32):
     """Deterministic fused-vs-unfused interval ratio for one recovery window.
 
     unfused  two dispatches: the gru_scan kernel streams hs [B, T, H] to HBM

@@ -35,7 +35,12 @@ only dimensionless ratios are gated (benchmarks/gate.py).
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import subprocess
+import sys
 import time
+from pathlib import Path
 
 import jax
 import numpy as np
@@ -45,6 +50,8 @@ from repro.core import engine
 from repro.core.merinda import MRConfig
 from repro.core.stream import RecoveryService, StreamConfig
 from repro.data.windows import make_windows
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
 
 
 def run(slots: int = 8, n_ticks: int = 8, repeats: int = 3, smoke: bool = False):
@@ -170,10 +177,144 @@ def run(slots: int = 8, n_ticks: int = 8, repeats: int = 3, smoke: bool = False)
     return rows, metrics
 
 
+# ---------------------------------------------------------------------------
+# sharded-slot mesh scaling (repro.api plan surface)
+# ---------------------------------------------------------------------------
+# Runs in a SUBPROCESS because the virtual-device count must be pinned via
+# XLA_FLAGS before any jax import; the parent process already holds a
+# single-device jax. One subprocess measures every mesh size so the three
+# configurations share identical CPU conditions.
+_MESH_SNIPPET = """\
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={device_count}"
+import json
+import time
+
+import numpy as np
+
+from repro import api
+from repro.core.stream import StreamConfig
+from repro.data.dynamics import generate_trajectory
+
+
+def ticks_per_sec(mesh_slots, slots, n_ticks, repeats):
+    scfg = StreamConfig(
+        buf_len=32, window=8, stride=8, chunk=8, steps_per_tick=8,
+        min_steps=10**9, max_steps=10**9,
+    )
+    spec = api.RecoverySpec(
+        state_dim=3, order=2, hidden=8, dense_hidden=16, dt=0.01, encoder="gru",
+        mode="stream", n_slots=slots, stream=scfg, mesh_slots=mesh_slots,
+    )
+    plan = api.compile_plan(spec)
+    _, ys, _ = generate_trajectory("lorenz", n_samples=32 + 8 * (n_ticks + 2))
+    chunks = [
+        np.repeat(ys[32 + t * 8 : 32 + (t + 1) * 8][None], slots, axis=0)
+        for t in range(n_ticks)
+    ]
+    best = 0.0
+    for _ in range(repeats):
+        svc = plan.make_service()
+        for i in range(slots):
+            svc.submit(i, ys[:32])
+        svc.fill_slots()
+        svc.tick_once(chunks[0])  # compile
+        t0 = time.perf_counter()
+        for t in range(1, n_ticks):
+            svc.tick_once(chunks[t])
+        best = max(best, (n_ticks - 1) / (time.perf_counter() - t0))
+    return best
+
+
+out = {{
+    str(m): ticks_per_sec(m, slots={slots}, n_ticks={n_ticks}, repeats={repeats})
+    for m in (1, 2, 4)
+}}
+print("MESHBENCH " + json.dumps(out))
+"""
+
+
+def run_mesh_scaling(
+    slots: int = 8,
+    n_ticks: int = 8,
+    repeats: int = 3,
+    device_count: int = 4,
+    smoke: bool = False,
+):
+    """Sharded-SlotState service throughput at mesh sizes 1/2/4.
+
+    The plan surface (repro.api) shards the slot axis over a CPU
+    virtual-device mesh; measured is ticks/sec (and slots/sec = ticks/sec x
+    slots) per mesh size. On CPU the devices share the same cores, so the
+    gateable claim is CONSERVATIVE: sharding must not collapse throughput
+    (``mesh_slots_per_sec_scaling`` = mesh-2 over mesh-1 ticks/sec stays
+    above a floor), while real scaling lives on multi-chip hardware.
+    Returns (csv_rows, metrics).
+    """
+    if smoke:
+        n_ticks, repeats = 6, 2
+    prog = _MESH_SNIPPET.format(
+        device_count=device_count, slots=slots, n_ticks=n_ticks, repeats=repeats
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO_ROOT / "src")
+    env.pop("XLA_FLAGS", None)
+    p = subprocess.run(
+        [sys.executable, "-c", prog],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=REPO_ROOT,
+        timeout=900,
+    )
+    marker = [ln for ln in p.stdout.splitlines() if ln.startswith("MESHBENCH ")]
+    if p.returncode != 0 or not marker:
+        raise RuntimeError(
+            f"mesh-scaling subprocess failed (rc={p.returncode})\n"
+            f"stdout:\n{p.stdout[-2000:]}\nstderr:\n{p.stderr[-2000:]}"
+        )
+    tps = {int(k): v for k, v in json.loads(marker[0][len("MESHBENCH ") :]).items()}
+    scaling = tps[2] / tps[1]
+    rows = [
+        (
+            f"stream/mesh{m}_ticks_per_sec",
+            1e6 / tps[m],
+            f"slots={slots};{slots * tps[m]:.1f} slots/s;{device_count} virtual devices",
+        )
+        for m in sorted(tps)
+    ]
+    rows.append(
+        (
+            "stream/mesh_slots_per_sec_scaling",
+            0.0,
+            f"x{scaling:.2f} mesh-2 over mesh-1 (CPU virtual devices share cores; "
+            "conservative no-collapse floor)",
+        )
+    )
+    metrics = {
+        "mesh_slots_per_sec_scaling": round(scaling, 3),
+        "info": {
+            "device_count": device_count,
+            "slots": slots,
+            "n_ticks": n_ticks - 1,
+            **{
+                f"mesh{m}_slots_per_sec": round(slots * tps[m], 2) for m in sorted(tps)
+            },
+            "mesh4_over_mesh1": round(tps[4] / tps[1], 3),
+        },
+    }
+    return rows, metrics
+
+
 def main(smoke: bool = False):
     rows, metrics = run(smoke=smoke)
     for name, us, derived in rows:
         emit(name, us, derived)
+    mesh_rows, mesh_metrics = run_mesh_scaling(smoke=smoke)
+    for name, us, derived in mesh_rows:
+        emit(name, us, derived)
+    metrics["mesh"] = mesh_metrics
     return metrics
 
 

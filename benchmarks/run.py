@@ -87,9 +87,17 @@ def run_smoke() -> int:
     rows, m_stream = bench_stream.run(smoke=True)
     for name, us, derived in rows:
         emit(name, us, derived)
+    rows, m_mesh = bench_stream.run_mesh_scaling(smoke=True)
+    for name, us, derived in rows:
+        emit(name, us, derived)
     info = m_stream.pop("info")
+    info["mesh"] = m_mesh.pop("info")
     write_bench_json(
-        REPO_ROOT / "BENCH_stream.json", "stream", gated=m_stream, info=info, smoke=True
+        REPO_ROOT / "BENCH_stream.json",
+        "stream",
+        gated={**m_stream, **m_mesh},
+        info=info,
+        smoke=True,
     )
 
     failures = gate.check_all(REPO_ROOT)

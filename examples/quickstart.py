@@ -2,43 +2,57 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Generates a Lotka-Volterra (predator-prey) trajectory, trains the MERINDA
-GRU-flow recovery model on sliding windows, prunes to the true sparsity, and
+Generates a Lotka-Volterra (predator-prey) trajectory, declares the recovery
+as ONE ``repro.api.RecoverySpec``, compiles it into a ``RecoveryPlan``
+(every execution decision — encoder, precision, fusion, tiling — resolved
+up front), trains on sliding windows, prunes to the true sparsity, and
 prints the recovered vs true coefficient matrix.
 """
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.core.library import term_names
-from repro.core.merinda import MRConfig, recover_physical_coefficients, train_mr
 from repro.data.dynamics import generate_trajectory, get_system
 from repro.data.windows import make_windows
 
 
 def main():
-    spec = get_system("lotka_volterra")
+    spec_sys = get_system("lotka_volterra")
     ts, ys, us = generate_trajectory("lotka_volterra")
     yw, uw, norm = make_windows(ys, us, window=32, stride=4)
-    print(f"system: {spec.name}  trajectory: {ys.shape}  windows: {yw.shape}")
+    print(f"system: {spec_sys.name}  trajectory: {ys.shape}  windows: {yw.shape}")
 
-    cfg = MRConfig(state_dim=2, order=2, hidden=32, dense_hidden=64, dt=spec.dt,
-                   encoder="gru_flow")
-    params, hist = train_mr(
-        cfg, jnp.asarray(yw), None, steps=300, lr=3e-3, batch_size=64, log_every=50,
-        callback=lambda s, h: print(f"  step {s:4d}  recon_mse {h['recon_mse']:.4f}"),
-        norm=norm,  # L1 applied to physical-unit coefficients
+    spec = api.RecoverySpec(
+        state_dim=2,
+        order=2,
+        hidden=32,
+        dense_hidden=64,
+        dt=spec_sys.dt,
+        encoder="gru_flow",
+        mode="offline",
+        steps=300,
+        lr=3e-3,
+        batch_size=64,
     )
+    plan = api.compile_plan(spec)
+    print(f"compiled: {plan.lowering}")
 
-    theta = recover_physical_coefficients(
-        params, cfg, jnp.asarray(yw), None, norm, n_active=4
-    )
+    # norm=... applies the L1 penalty to physical-unit coefficients
+    params, metrics = plan.run_offline(jnp.asarray(yw), norm=norm)
+    for h in api.history_from_metrics(metrics, log_every=50):
+        print(f"  step {h['step']:4d}  recon_mse {h['recon_mse']:.4f}")
+
+    theta = plan.readout(params, jnp.asarray(yw), norm=norm, n_active=4)
     names = term_names(2, 2, ["h", "l"])
-    true = spec.true_coef()
+    true = spec_sys.true_coef()
     print(f"\n{'term':>8s}  {'rec dh/dt':>10s} {'true':>8s}   {'rec dl/dt':>10s} {'true':>8s}")
     for i, n in enumerate(names):
-        print(f"{n:>8s}  {float(theta[i,0]):10.3f} {true[i,0]:8.3f}   "
-              f"{float(theta[i,1]):10.3f} {true[i,1]:8.3f}")
+        print(
+            f"{n:>8s}  {float(theta[i, 0]):10.3f} {true[i, 0]:8.3f}   "
+            f"{float(theta[i, 1]):10.3f} {true[i, 1]:8.3f}"
+        )
     err = float(np.abs(theta - true).max())
     print(f"\nmax |recovered - true| = {err:.3f} (physical units)")
 

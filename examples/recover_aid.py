@@ -2,8 +2,10 @@
 
 The paper's edge-AI application: recover the Bergman minimal model (the
 OhioT1D stand-in — see DESIGN.md §8) from CGM+insulin traces, comparing the
-paper's three workload families head-to-head, including the fixed-point
-(quantization-aware) MERINDA configuration that maps to the int8+PWL kernel.
+paper's three workload families head-to-head — each declared as one
+``repro.api.RecoverySpec`` and compiled into a ``RecoveryPlan``, including
+the fixed-point (quantization-aware) MERINDA configuration that maps to the
+int8+PWL kernel.
 
     PYTHONPATH=src python examples/recover_aid.py [--steps 300]
 """
@@ -14,7 +16,7 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.merinda import MRConfig, train_mr
+from repro import api
 from repro.core.quant import QuantConfig
 from repro.core.sindy import fit_sindy
 from repro.data.dynamics import generate_trajectory, get_system
@@ -26,39 +28,58 @@ def main():
     ap.add_argument("--steps", type=int, default=300)
     args = ap.parse_args()
 
-    spec = get_system("aid")
+    spec_sys = get_system("aid")
     ts, ys, us = generate_trajectory("aid", noise_std=0.01)
     yw, uw, norm = make_windows(ys, us, window=32, stride=2)
     yw, uw = jnp.asarray(yw), jnp.asarray(uw)
     print(f"AID traces: {ys.shape} (5-min CGM samples), windows {yw.shape}")
 
     results = {}
-    for name, encoder, quant in (
+    for name, encoder, qat in (
         ("MERINDA (gru_flow)", "gru_flow", None),
-        ("MERINDA int8-QAT", "gru_flow",
-         QuantConfig(act_int_bits=4, act_frac_bits=10, weight_int_bits=2, weight_frac_bits=12)),
+        (
+            "MERINDA int8-QAT",
+            "gru_flow",
+            QuantConfig(act_int_bits=4, act_frac_bits=10, weight_int_bits=2, weight_frac_bits=12),
+        ),
         ("LTC (iterative ODE)", "ltc", None),
     ):
-        cfg = MRConfig(state_dim=spec.state_dim, input_dim=spec.input_dim,
-                       order=spec.order, hidden=32, dense_hidden=64, dt=0.1,
-                       encoder=encoder, quant=quant)
+        plan = api.compile_plan(
+            api.RecoverySpec(
+                state_dim=spec_sys.state_dim,
+                input_dim=spec_sys.input_dim,
+                order=spec_sys.order,
+                hidden=32,
+                dense_hidden=64,
+                dt=0.1,
+                encoder=encoder,
+                qat=qat,
+                mode="offline",
+                steps=args.steps,
+                lr=3e-3,
+                batch_size=64,
+            )
+        )
         t0 = time.time()
-        params, hist = train_mr(cfg, yw, uw, steps=args.steps, lr=3e-3,
-                                batch_size=64, log_every=args.steps - 1)
+        params, metrics = plan.run_offline(yw, uw)
+        hist = api.history_from_metrics(metrics, log_every=args.steps - 1)
         results[name] = (hist[-1]["recon_mse"], time.time() - t0)
 
     t0 = time.time()
-    fit = fit_sindy(jnp.asarray(ys), dt=spec.dt, order=spec.order,
-                    u=jnp.asarray(us), threshold=0.005)
-    coef_err = float(np.abs(np.asarray(fit.coef) - spec.true_coef()).max())
+    fit = fit_sindy(
+        jnp.asarray(ys), dt=spec_sys.dt, order=spec_sys.order, u=jnp.asarray(us), threshold=0.005
+    )
+    coef_err = float(np.abs(np.asarray(fit.coef) - spec_sys.true_coef()).max())
     results["SINDy (STLSQ)"] = (coef_err, time.time() - t0)
 
     print(f"\n{'method':24s} {'error':>10s} {'seconds':>9s}")
     for name, (err, dt) in results.items():
         print(f"{name:24s} {err:10.4f} {dt:9.1f}")
-    print("\n(MERINDA errors = window recon MSE; SINDy = max coefficient error."
-          "\n Paper claim reproduced: the GRU-flow path matches LTC accuracy"
-          "\n while replacing the iterative solver with one gated update/step.)")
+    print(
+        "\n(MERINDA errors = window recon MSE; SINDy = max coefficient error."
+        "\n Paper claim reproduced: the GRU-flow path matches LTC accuracy"
+        "\n while replacing the iterative solver with one gated update/step.)"
+    )
 
 
 if __name__ == "__main__":

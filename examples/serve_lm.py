@@ -15,12 +15,18 @@ from repro.launch.serve import main as serve_main
 def main():
     argv = [
         "serve_lm",
-        "--arch", "qwen2.5-3b",
-        "--requests", "16",
-        "--slots", "4",
-        "--prompt-len", "32",
-        "--max-new", "24",
-        "--cache-len", "128",
+        "--arch",
+        "qwen2.5-3b",
+        "--requests",
+        "16",
+        "--slots",
+        "4",
+        "--prompt-len",
+        "32",
+        "--max-new",
+        "24",
+        "--cache-len",
+        "128",
     ] + sys.argv[1:]
     sys.argv = argv
     return serve_main()

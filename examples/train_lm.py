@@ -19,15 +19,24 @@ from repro.launch.train import main as train_main
 def main():
     argv = [
         "train_lm",
-        "--arch", "mamba2-130m",
-        "--steps", "200",
-        "--batch", "8",
-        "--seq", "128",
-        "--data", "2",
-        "--model", "2",
-        "--lr", "1e-3",
-        "--save-every", "50",
-        "--log-every", "20",
+        "--arch",
+        "mamba2-130m",
+        "--steps",
+        "200",
+        "--batch",
+        "8",
+        "--seq",
+        "128",
+        "--data",
+        "2",
+        "--model",
+        "2",
+        "--lr",
+        "1e-3",
+        "--save-every",
+        "50",
+        "--log-every",
+        "20",
     ] + sys.argv[1:]
     sys.argv = argv
     return train_main()

@@ -53,9 +53,23 @@ HBM_BW = 819e9  # bytes/s / chip
 ICI_BW = 50e9  # bytes/s / link
 
 _DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
-    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+    "f64": 8,
+    "f32": 4,
+    "bf16": 2,
+    "f16": 2,
+    "f8e4m3fn": 1,
+    "f8e5m2": 1,
+    "s64": 8,
+    "u64": 8,
+    "s32": 4,
+    "u32": 4,
+    "s16": 2,
+    "u16": 2,
+    "s8": 1,
+    "u8": 1,
+    "pred": 1,
+    "c64": 8,
+    "c128": 16,
 }
 
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
@@ -64,21 +78,60 @@ _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "col
 # heavy ops: results always materialize to memory (MXU outputs, data movers,
 # collectives); their tensor operands must also be materialized
 _HEAVY_OPS = {
-    "dot", "convolution", "copy", "concatenate", "scatter", "gather",
-    "dynamic-slice", "dynamic-update-slice", "sort", "reduce-window",
-    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-    "collective-permute", "custom-call", "rng", "pad", "reverse",
-    "cholesky", "triangular-solve", "fft",
+    "dot",
+    "convolution",
+    "copy",
+    "concatenate",
+    "scatter",
+    "gather",
+    "dynamic-slice",
+    "dynamic-update-slice",
+    "sort",
+    "reduce-window",
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+    "custom-call",
+    "rng",
+    "pad",
+    "reverse",
+    "cholesky",
+    "triangular-solve",
+    "fft",
 }
 # structural ops: no traffic of their own; values flow through
 _SKIP_OPS = {
-    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
-    "after-all", "token", "while", "call", "conditional", "domain",
-    "partition-id", "replica-id", "bitcast-convert", "optimization-barrier",
-    "get-dimension-size", "rng-get-and-update-state",
-    "all-reduce-done", "all-gather-done", "async-done", "async-start",
-    "copy-start", "copy-done", "send", "recv", "send-done", "recv-done",
-    "iota", "constant",
+    "parameter",
+    "constant",
+    "tuple",
+    "get-tuple-element",
+    "bitcast",
+    "after-all",
+    "token",
+    "while",
+    "call",
+    "conditional",
+    "domain",
+    "partition-id",
+    "replica-id",
+    "bitcast-convert",
+    "optimization-barrier",
+    "get-dimension-size",
+    "rng-get-and-update-state",
+    "all-reduce-done",
+    "all-gather-done",
+    "async-done",
+    "async-start",
+    "copy-start",
+    "copy-done",
+    "send",
+    "recv",
+    "send-done",
+    "recv-done",
+    "iota",
+    "constant",
 }
 
 

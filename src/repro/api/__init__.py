@@ -1,0 +1,31 @@
+"""repro.api — the declarative plan/compile/run surface for model recovery.
+
+    from repro import api
+
+    spec = api.RecoverySpec(state_dim=3, mode="batch", encoder="gru", fused=True)
+    plan = api.compile_plan(spec)
+    theta = plan.run_batch(ys_batch)
+
+One :class:`RecoverySpec` declares WHAT to recover and HOW to execute it
+(encoder, precision, fusion, tiling, mode, slots, mesh); ``compile_plan``
+resolves every execution decision once into a :class:`RecoveryPlan` (see
+``plan.Lowering``) and hands back the jitted donated programs for offline,
+batched and sharded streaming recovery. The legacy entry points remain as
+deprecated wrappers that build a spec internally.
+"""
+
+from repro.api.plan import Lowering, RecoveryPlan, compile_plan
+from repro.api.spec import MODES, PRECISIONS, RecoverySpec
+from repro.core.engine import history_from_metrics
+from repro.core.merinda import prune_theta
+
+__all__ = [
+    "MODES",
+    "PRECISIONS",
+    "Lowering",
+    "RecoveryPlan",
+    "RecoverySpec",
+    "compile_plan",
+    "history_from_metrics",
+    "prune_theta",
+]

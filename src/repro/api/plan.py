@@ -1,0 +1,286 @@
+"""compile_plan: lower a RecoverySpec into an executable RecoveryPlan.
+
+MERINDA's central claim is compile-once / stream-forever: all execution
+decisions are made at setup time, after which recovery is a fixed dataflow
+with no per-step decisions. ``compile_plan`` is the host-side compiler for
+that story. It takes one declarative :class:`RecoverySpec` and produces a
+:class:`RecoveryPlan` holding
+
+- the resolved :class:`Lowering` record — every decision that used to be
+  scattered across call sites (``fused``, ``use_kernel``-era encoder
+  backends, quantized serving, the ``block_b`` batch tile, backend
+  dispatch) in ONE place;
+- the jitted, donated programs for the spec's execution mode (the engine's
+  epoch scan, the vmapped multi-system recovery, the streaming tick);
+- for stream mode, a device mesh over the slot axis — ``SlotState`` is
+  sharded across it (``jax.set_mesh`` shim + the ``parallel/`` rule table),
+  with ``mesh_slots=1`` degenerating to the single-device path — so one
+  service scales past a single chip's VMEM/HBM.
+
+Compile-time failures are ValueErrors raised here (unknown encoder, fused
+with a non-fusable family, int8 serving with a flow encoder, mesh larger
+than the device count) — never mid-trace errors inside a jitted scan.
+
+The legacy entry points (``merinda.train_mr``, ``engine.train_mr_scan``,
+``engine.recover_many``, direct ``RecoveryService`` construction) remain as
+deprecated wrappers that build a spec internally and run through a plan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.spec import RecoverySpec
+from repro.core import encoders, engine
+from repro.core import stream as stream_mod
+from repro.core.merinda import MRConfig, init_mr, prune_theta
+from repro.core.stream import RecoveryService, StreamConfig
+from repro.kernels import runtime as rt
+from repro.kernels.mr_step import tiling
+from repro.optim import adamw_init
+
+
+@dataclasses.dataclass(frozen=True)
+class Lowering:
+    """Every resolved execution decision, in one record.
+
+    ``dispatch`` names where the per-window recovery stage executes:
+    ``"pallas"`` (compiled kernel on TPU), ``"reference"`` (identical math
+    as pure JAX off-TPU — what kernel-backed and fused requests resolve to
+    on CPU/GPU), or ``"xla"`` (plain lax.scan encoders that never route
+    through a kernel family).
+    """
+
+    encoder: str
+    fused: bool
+    kernel: bool  # encoder row routes through a Pallas kernel family
+    dispatch: str  # "pallas" | "reference" | "xla"
+    quant_serving: bool  # int8/PWL fused readout at serving time
+    qat: bool  # fixed-point fake-quant during training
+    block_b: int | None  # resolved fused-stage batch tile (None = full batch)
+    vmem_bytes: int | None  # modeled fused-stage VMEM residency at block_b
+    mesh_shape: tuple[int, ...]  # device mesh over the slot axis (stream mode)
+
+
+class RecoveryPlan:
+    """A compiled recovery dataflow: spec + lowering + jitted programs.
+
+    Built by :func:`compile_plan`; consumers call the mode's run method and
+    never re-make execution decisions:
+
+    - ``run_offline(ys, us, norm)``  -> (params, metrics)     [mode=offline]
+    - ``run_batch(ys_batch, us_b)``  -> theta [S, n_terms, n] [mode=batch]
+    - ``make_service(seed)``         -> RecoveryService       [mode=stream]
+    - ``readout(params, yw, uw)``    -> theta through the spec's precision
+    """
+
+    def __init__(
+        self,
+        spec: RecoverySpec,
+        cfg: MRConfig,
+        scfg: StreamConfig,
+        lowering: Lowering,
+        mesh,
+        programs: dict,
+    ):
+        self.spec = spec
+        self.cfg = cfg
+        self.scfg = scfg
+        self.lowering = lowering
+        self.mesh = mesh  # jax Mesh over ("slots",) or None (trivial mesh)
+        self.programs = programs  # name -> jitted donated program
+
+    def _require_mode(self, mode: str):
+        if self.spec.mode != mode:
+            raise ValueError(
+                f"this plan was compiled for mode={self.spec.mode!r}; "
+                f"recompile with RecoverySpec(mode={mode!r})"
+            )
+
+    # -- offline: one system, one compiled training run ----------------------
+    def run_offline(
+        self, ys: jnp.ndarray, us: jnp.ndarray | None = None, norm: dict | None = None
+    ) -> tuple:
+        """Train one system's recovery model: ys [N, T, n] -> (params, metrics).
+
+        One donated lax.scan program over all optimizer steps (the engine's
+        epoch scan); ``norm`` applies the L1 penalty in physical units.
+        """
+        self._require_mode("offline")
+        key = jax.random.key(self.spec.seed)
+        params = init_mr(key, self.cfg)
+        opt_state = adamw_init(params)
+        phys = engine.make_phys(self.cfg, norm)
+        params, _, metrics = self.programs["epoch"](
+            params, opt_state, ys, us, key, self.spec.lr, phys
+        )
+        return params, metrics
+
+    # -- batch: a fleet of systems, one vmapped program -----------------------
+    def run_batch(self, ys_batch: jnp.ndarray, us_batch: jnp.ndarray | None = None) -> jnp.ndarray:
+        """Recover S distinct systems in one compiled vmapped call.
+
+        ys_batch [S, N, T, n] -> theta_batch [S, n_terms, n] (normalized
+        coordinates; pruned to ``spec.n_active`` when set).
+        """
+        self._require_mode("batch")
+        keys = engine.system_keys(self.spec.seed, ys_batch.shape[0])
+        return self.programs["recover_many"](ys_batch, us_batch, keys, self.spec.lr)
+
+    # -- stream: the slot-based online service --------------------------------
+    def make_service(self, seed: int | None = None) -> RecoveryService:
+        """The online multi-tenant service, with SlotState sharded over the
+        plan's mesh (trivial on mesh_slots=1)."""
+        self._require_mode("stream")
+        return RecoveryService(
+            self.cfg,
+            self.scfg,
+            self.spec.n_slots,
+            seed=self.spec.seed if seed is None else seed,
+            quant=self.lowering.quant_serving,
+            mesh=self.mesh,
+            tick_program=self.programs["tick"],
+        )
+
+    # -- readout: the spec's serving precision --------------------------------
+    def readout(
+        self,
+        params,
+        yw: jnp.ndarray,
+        uw: jnp.ndarray | None = None,
+        norm: dict | None = None,
+        n_active: int | None = None,
+    ) -> np.ndarray:
+        """Aggregate Theta through the spec's serving precision.
+
+        fp32 runs the (possibly fused) forward; int8_pwl serves through the
+        fused fixed-point stage (kernels/mr_step int8). ``norm`` maps the
+        result back to physical units; ``n_active`` (default: the spec's)
+        magnitude-prunes.
+        """
+        theta = stream_mod.readout_theta(
+            params, self.cfg, yw, uw, quant=self.lowering.quant_serving
+        )
+        theta = np.asarray(theta)
+        if norm is not None:
+            from repro.core.library import denormalize_theta
+
+            theta = denormalize_theta(
+                theta,
+                norm["mean"],
+                norm["scale"],
+                n_vars=self.cfg.state_dim + self.cfg.input_dim,
+                order=self.cfg.order,
+                n_state=self.cfg.state_dim,
+            )
+        n_active = self.spec.n_active if n_active is None else n_active
+        if n_active is not None:
+            theta = prune_theta(theta, n_active)
+        return theta
+
+
+def _resolve_lowering(spec: RecoverySpec, row: encoders.EncoderSpec) -> Lowering:
+    """All execution decisions for one spec, resolved once."""
+    quant_serving = spec.precision == "int8_pwl"
+    routes_kernel = spec.fused or row.kernel or quant_serving
+    if routes_kernel:
+        dispatch = "pallas" if rt.on_tpu() else "reference"
+    else:
+        dispatch = "xla"
+    block_b, vmem = None, None
+    if spec.fused:
+        batch = _compile_time_batch(spec)
+        if spec.block_b == "auto":
+            block_b = tiling.auto_block_b(spec.to_mr_config(), batch, spec.vmem_budget_bytes)
+        elif isinstance(spec.block_b, int):
+            if batch is not None and batch % spec.block_b != 0:
+                # the kernel would silently drop a non-dividing tile at run
+                # time (ops._legal_block_b) while this record claimed it —
+                # a validatable request fails HERE like every other one
+                raise ValueError(
+                    f"block_b={spec.block_b} does not divide the compile-time "
+                    f"batch ({batch}); the fused kernel requires B % block_b == 0"
+                )
+            block_b = spec.block_b
+        if batch is not None:
+            vmem = tiling.config_vmem_bytes(spec.to_mr_config(), batch, block_b=block_b)
+    return Lowering(
+        encoder=spec.encoder,
+        fused=spec.fused,
+        kernel=row.kernel,
+        dispatch=dispatch,
+        quant_serving=quant_serving,
+        qat=spec.qat is not None,
+        block_b=block_b,
+        vmem_bytes=vmem,
+        mesh_shape=(spec.mesh_slots,) if spec.mode == "stream" else (),
+    )
+
+
+def _compile_time_batch(spec: RecoverySpec) -> int | None:
+    """The fused-stage batch dimension knowable at compile time.
+
+    stream: windows per slot (the tick's per-slot forward batch);
+    offline/batch: the optimizer minibatch when configured, else unknown
+    (None) — the auto tile then falls back to full batch, the documented
+    no-budget behaviour.
+    """
+    if spec.mode == "stream":
+        return spec.stream_config().n_windows
+    return spec.batch_size
+
+
+def compile_plan(spec: RecoverySpec) -> RecoveryPlan:
+    """Validate + lower a RecoverySpec; see the module docstring."""
+    row = encoders.get_encoder(spec.encoder)  # unknown name fails here
+    if spec.precision == "int8_pwl" and row.flow is not False:
+        raise ValueError(
+            f"precision='int8_pwl' serves through the fixed-point GRU stage "
+            f"(paper Eq. 12-15) and requires encoder='gru', got {spec.encoder!r}"
+        )
+    if spec.qat is not None and row.flow is None:
+        raise ValueError(
+            f"qat (fixed-point fake-quant) is implemented for the GRU families, "
+            f"got encoder={spec.encoder!r}"
+        )
+    lowering = _resolve_lowering(spec, row)
+    cfg = spec.to_mr_config(block_b=lowering.block_b)
+    # ONE source of truth for encoder-level invariants (registered name,
+    # fused x fusable) — the same check the legacy entry points run
+    encoders.validate_config(cfg)
+    scfg = spec.stream_config()
+
+    mesh = None
+    if spec.mode == "stream" and spec.mesh_slots > 1:
+        n_dev = len(jax.devices())
+        if spec.mesh_slots > n_dev:
+            raise ValueError(
+                f"mesh_slots={spec.mesh_slots} exceeds the {n_dev} visible "
+                f"device(s); set XLA_FLAGS=--xla_force_host_platform_device_count "
+                f"for CPU virtual devices"
+            )
+        mesh = jax.make_mesh((spec.mesh_slots,), ("slots",))
+
+    # the jitted donated programs for this spec's mode — static arguments are
+    # bound NOW so every later call hits the same executable
+    programs: dict = {}
+    if spec.mode == "offline":
+        programs["epoch"] = functools.partial(
+            engine.run_epoch, cfg=cfg, steps=spec.steps, batch_size=spec.batch_size
+        )
+    elif spec.mode == "batch":
+        programs["recover_many"] = functools.partial(
+            engine._recover_many_jit,
+            cfg=cfg,
+            steps=spec.steps,
+            batch_size=spec.batch_size,
+            n_active=spec.n_active,
+        )
+    else:  # stream
+        programs["tick"] = functools.partial(stream_mod.tick, cfg=cfg, scfg=scfg)
+    return RecoveryPlan(spec, cfg, scfg, lowering, mesh, programs)

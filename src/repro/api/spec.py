@@ -1,0 +1,176 @@
+"""RecoverySpec: one declarative record of WHAT to recover and HOW to run it.
+
+The paper's deployment story is "configure the pipeline once, then stream":
+every execution decision — encoder family, precision, stage fusion, batch
+tiling, slot sharding — is made at setup time and baked into a dataflow that
+then runs untouched. ``RecoverySpec`` is that setup record for this repo:
+one frozen dataclass covering the model/library shape, the numerics
+(``fp32`` vs ``int8_pwl`` serving, optional QAT), the execution mode
+(``offline`` | ``batch`` | ``stream``) and the placement (slot count, mesh
+size, ``block_b`` tiling policy).
+
+``repro.api.compile_plan`` lowers a spec into a :class:`RecoveryPlan`; the
+legacy entry points (``merinda.train_mr``, ``engine.recover_many``,
+``stream.RecoveryService``) remain as wrappers that build a spec internally.
+
+Validation happens in two stages, mirroring compile pipelines:
+
+- literal validation (mode/precision spellings, positive dims, ``block_b``
+  form) in ``__post_init__`` — a bad spec never constructs;
+- environment validation (encoder registry, fusability, device count vs
+  mesh) in ``validate()``, called by ``compile_plan``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.merinda import MRConfig
+from repro.core.quant import QuantConfig
+from repro.core.stream import StreamConfig
+
+MODES = ("offline", "batch", "stream")
+PRECISIONS = ("fp32", "int8_pwl")
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoverySpec:
+    """Declarative recovery request; see the module docstring.
+
+    Hashable (all fields are frozen dataclasses or scalars), so a spec can
+    key jit caches and plan registries directly.
+    """
+
+    # -- model / library shape ---------------------------------------------
+    state_dim: int  # n = |Y|
+    input_dim: int = 0  # m = |U|
+    order: int = 2  # library polynomial order
+    hidden: int = 32  # encoder width V
+    dense_hidden: int | None = None  # head width (None = 2 * hidden)
+    n_shifts: int = 0  # q input-shift outputs
+    dt: float = 0.05
+    solver: str = "rk4"
+    ltc_substeps: int = 6
+    lambda_sparse: float = 1e-3
+    recon_weight: float = 1.0
+
+    # -- numerics / lowering -----------------------------------------------
+    encoder: str = "gru_flow"  # any name registered in core/encoders.py
+    precision: str = "fp32"  # serving readout: "fp32" | "int8_pwl"
+    qat: QuantConfig | None = None  # fixed-point fake-quant during training
+    fused: bool = False  # stage-fused per-window step (kernels/mr_step)
+    block_b: int | str | None = None  # fused batch tile: int, None, or "auto"
+    vmem_budget_bytes: int | None = None  # budget the "auto" tile fits into
+
+    # -- execution ----------------------------------------------------------
+    mode: str = "offline"  # "offline" | "batch" | "stream"
+    steps: int = 500  # optimizer steps (offline/batch)
+    lr: float = 3e-3
+    batch_size: int | None = None  # windows per optimizer step (None = all)
+    seed: int = 0
+    n_active: int | None = None  # magnitude-prune readout to this many terms
+
+    # -- stream mode ---------------------------------------------------------
+    n_slots: int = 4
+    stream: StreamConfig | None = None  # None = StreamConfig() defaults
+
+    # -- placement -----------------------------------------------------------
+    mesh_slots: int = 1  # devices sharding the slot axis (1 = trivial mesh)
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
+        if self.precision not in PRECISIONS:
+            raise ValueError(f"precision must be one of {PRECISIONS}, got {self.precision!r}")
+        if self.state_dim < 1 or self.input_dim < 0 or self.order < 1:
+            raise ValueError(
+                f"bad library shape: state_dim={self.state_dim} "
+                f"input_dim={self.input_dim} order={self.order}"
+            )
+        if isinstance(self.block_b, str):
+            if self.block_b != "auto":
+                raise ValueError(f'block_b must be an int, None or "auto", got {self.block_b!r}')
+        elif self.block_b is not None and self.block_b < 1:
+            raise ValueError(f"block_b must be >= 1, got {self.block_b}")
+        if self.vmem_budget_bytes is not None and self.block_b != "auto":
+            # a budget with a fixed (or default full-batch) tile would be
+            # silently ignored — the exact misconfiguration "auto" exists for
+            raise ValueError(
+                'vmem_budget_bytes requires block_b="auto" (a fixed tile ignores the budget)'
+            )
+        if self.mesh_slots < 1:
+            raise ValueError(f"mesh_slots must be >= 1, got {self.mesh_slots}")
+        if self.mode == "stream":
+            if self.n_slots < 1:
+                raise ValueError(f"n_slots must be >= 1, got {self.n_slots}")
+            if self.n_slots % self.mesh_slots != 0:
+                raise ValueError(
+                    f"n_slots ({self.n_slots}) must divide evenly over the mesh "
+                    f"({self.mesh_slots} devices) for a balanced slot shard"
+                )
+            if self.stream is not None and (
+                self.stream.lr != self.lr or self.stream.batch_size != self.batch_size
+            ):
+                # the tick trains with StreamConfig's copies; a diverging
+                # spec-level value would be silently ignored — one record,
+                # one source of truth
+                raise ValueError(
+                    f"stream-mode lr/batch_size conflict: spec has "
+                    f"(lr={self.lr}, batch_size={self.batch_size}) but stream= has "
+                    f"(lr={self.stream.lr}, batch_size={self.stream.batch_size}); "
+                    f"set them equal (the StreamConfig governs the tick)"
+                )
+        elif self.mesh_slots != 1:
+            raise ValueError(f"mesh_slots > 1 requires mode='stream', got mode={self.mode!r}")
+
+    # -- bridges to the legacy config objects --------------------------------
+    def to_mr_config(self, block_b: int | None = None) -> MRConfig:
+        """The MRConfig this spec lowers to. ``block_b`` is the RESOLVED tile
+        (compile_plan turns "auto" into an int before building the config)."""
+        if block_b is None and isinstance(self.block_b, int):
+            block_b = self.block_b
+        return MRConfig(
+            state_dim=self.state_dim,
+            input_dim=self.input_dim,
+            order=self.order,
+            hidden=self.hidden,
+            dense_hidden=self.dense_hidden or 2 * self.hidden,
+            encoder=self.encoder,
+            n_shifts=self.n_shifts,
+            dt=self.dt,
+            solver=self.solver,
+            ltc_substeps=self.ltc_substeps,
+            lambda_sparse=self.lambda_sparse,
+            recon_weight=self.recon_weight,
+            quant=self.qat,
+            fused=self.fused,
+            block_b=block_b,
+        )
+
+    def stream_config(self) -> StreamConfig:
+        if self.stream is not None:
+            return self.stream  # __post_init__ pinned lr/batch_size agreement
+        return StreamConfig(lr=self.lr, batch_size=self.batch_size)
+
+    @classmethod
+    def from_mr_config(cls, cfg: MRConfig, **overrides) -> "RecoverySpec":
+        """Bridge for the deprecated entry points: spec fields from an
+        existing MRConfig, with execution fields supplied as overrides."""
+        return cls(
+            state_dim=cfg.state_dim,
+            input_dim=cfg.input_dim,
+            order=cfg.order,
+            hidden=cfg.hidden,
+            dense_hidden=cfg.dense_hidden,
+            encoder=cfg.encoder,
+            n_shifts=cfg.n_shifts,
+            dt=cfg.dt,
+            solver=cfg.solver,
+            ltc_substeps=cfg.ltc_substeps,
+            lambda_sparse=cfg.lambda_sparse,
+            recon_weight=cfg.recon_weight,
+            qat=cfg.quant,
+            fused=cfg.fused,
+            block_b=cfg.block_b,
+            **overrides,
+        )

@@ -69,14 +69,35 @@ def register_encoder(spec: EncoderSpec) -> EncoderSpec:
 
 def get_encoder(name: str) -> EncoderSpec:
     if name not in _REGISTRY:
-        raise ValueError(
-            f"unknown encoder {name!r}; registered: {sorted(_REGISTRY)}"
-        )
+        raise ValueError(f"unknown encoder {name!r}; registered: {sorted(_REGISTRY)}")
     return _REGISTRY[name]
 
 
 def encoder_names() -> list[str]:
     return sorted(_REGISTRY)
+
+
+def fusable_names() -> list[str]:
+    return [n for n in encoder_names() if _REGISTRY[n].fusable]
+
+
+def validate_config(cfg) -> EncoderSpec:
+    """Eager (compile-time) validation of an MRConfig's encoder request.
+
+    Raises ValueError for an unregistered encoder name AND for
+    ``fused=True`` with a non-fusable encoder (``ltc``, ``node``) — the
+    entry points (engine, streaming service, ``repro.api.compile_plan``)
+    call this so a bad combination fails before any tracing, not as an
+    opaque error deep inside a jitted scan (and never silently falls back
+    to the unfused stage sequence).
+    """
+    spec = get_encoder(cfg.encoder)
+    if getattr(cfg, "fused", False) and not spec.fusable:
+        raise ValueError(
+            f"MRConfig(fused=True) requires a fusable encoder, got {cfg.encoder!r} "
+            f"(no fused mr_step stage exists for this family; fusable: {fusable_names()})"
+        )
+    return spec
 
 
 def quantized_gru_params(params: GRUParams, cfg) -> GRUParams:
@@ -138,13 +159,21 @@ register_encoder(_gru_row("gru_flow_kernel", flow=True, kernel=True))
 register_encoder(_gru_row("gru_kernel", flow=False, kernel=True))
 register_encoder(
     EncoderSpec(
-        name="ltc", init=init_ltc, encode=_encode_ltc,
-        flow=None, fusable=False, kernel=False,
+        name="ltc",
+        init=init_ltc,
+        encode=_encode_ltc,
+        flow=None,
+        fusable=False,
+        kernel=False,
     )
 )
 register_encoder(
     EncoderSpec(
-        name="node", init=_init_node, encode=_encode_node,
-        flow=None, fusable=False, kernel=False,
+        name="node",
+        init=_init_node,
+        encode=_encode_node,
+        flow=None,
+        fusable=False,
+        kernel=False,
     )
 )

@@ -19,12 +19,16 @@ The scan body calls ``merinda.mr_train_step`` directly (jit inlines under
 the scan), so per-step math is the old loop's by construction — only the
 dispatch structure differs.
 
-Encoders resolve through the registry in ``core/encoders.py`` (the entry
-points validate ``cfg.encoder`` eagerly so a typo fails with the registered
-names, not a mid-trace KeyError), and ``cfg.fused=True`` routes every
-forward through the stage-fused per-window kernel (kernels/mr_step) — the
-epoch scan, the streaming tick (core/stream.py) and serve_mr then share one
-fused code path.
+Since the plan/compile/run redesign (``repro.api``), this module owns the
+PRIMITIVES — ``run_epoch``, ``recover_one``, ``_recover_many_jit``,
+``system_keys``, ``stack_systems`` — while the public entry points
+(``train_mr_scan``, ``recover_many``) are deprecated wrappers that build a
+``RecoverySpec`` and run through ``api.compile_plan``. Encoder names and the
+``fused`` flag are validated eagerly at compile time there (a typo or a
+non-fusable ``fused=True`` fails with the registered names, not a mid-trace
+error), and ``cfg.fused=True`` routes every forward through the stage-fused
+per-window kernel (kernels/mr_step) — the epoch scan, the streaming tick
+(core/stream.py) and serve_mr then share one fused code path.
 """
 
 from __future__ import annotations
@@ -36,7 +40,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import encoders
 from repro.core.merinda import (
     MRConfig,
     MRParams,
@@ -101,14 +104,10 @@ def _epoch(
         else:
             yb, ub = ys, us
         lr_t = lr * jnp.minimum(1.0, (step + 1.0) / WARMUP_STEPS)
-        params, opt_state, aux = mr_train_step(
-            params, opt_state, cfg, yb, ub, lr_t, phys
-        )
+        params, opt_state, aux = mr_train_step(params, opt_state, cfg, yb, ub, lr_t, phys)
         return (params, opt_state), dict(aux, lr=lr_t)
 
-    (params, opt_state), metrics = jax.lax.scan(
-        step_fn, (params, opt_state), jnp.arange(steps)
-    )
+    (params, opt_state), metrics = jax.lax.scan(step_fn, (params, opt_state), jnp.arange(steps))
     return params, opt_state, metrics
 
 
@@ -131,22 +130,23 @@ def train_mr_scan(
     batch_size: int | None = None,
     norm: dict | None = None,
 ) -> tuple[MRParams, dict]:
-    """Scan-jitted replacement for the per-step train_mr loop.
+    """Deprecated wrapper: builds a RecoverySpec and runs the compiled plan.
+
+    Prefer ``repro.api``::
+
+        plan = api.compile_plan(api.RecoverySpec(..., mode="offline"))
+        params, metrics = plan.run_offline(ys, us, norm=norm)
 
     Returns (params, metrics) where metrics holds [steps]-shaped arrays.
     ``merinda.train_mr`` wraps this and re-serializes metrics into the old
     history-of-dicts format.
     """
-    encoders.get_encoder(cfg.encoder)  # fail fast on unregistered encoders
-    key = jax.random.key(seed)
-    params = init_mr(key, cfg)
-    opt_state = adamw_init(params)
-    phys = make_phys(cfg, norm)
-    params, _, metrics = run_epoch(
-        params, opt_state, ys, us, key, lr, phys,
-        cfg=cfg, steps=steps, batch_size=batch_size,
+    from repro import api
+
+    spec = api.RecoverySpec.from_mr_config(
+        cfg, mode="offline", steps=steps, lr=lr, seed=seed, batch_size=batch_size
     )
-    return params, metrics
+    return api.compile_plan(spec).run_offline(ys, us, norm=norm)
 
 
 def history_from_metrics(metrics: dict, log_every: int) -> list[dict]:
@@ -186,8 +186,16 @@ def recover_one(
     params = init_mr(key, cfg)
     opt_state = adamw_init(params)
     params, _, _ = _epoch(
-        params, opt_state, ys, us, key, lr, None,
-        cfg=cfg, steps=steps, batch_size=batch_size,
+        params,
+        opt_state,
+        ys,
+        us,
+        key,
+        lr,
+        None,
+        cfg=cfg,
+        steps=steps,
+        batch_size=batch_size,
     )
     return recover_coefficients(params, cfg, ys, us, n_active=n_active)
 
@@ -202,30 +210,45 @@ def recover_many(
     batch_size: int | None = None,
     n_active: int | None = None,
 ) -> jnp.ndarray:
-    """Recover coefficients for S distinct systems in ONE compiled vmapped
-    call. Returns theta_batch [S, n_terms, n_state] (normalized coords).
+    """Deprecated wrapper: builds a RecoverySpec and runs the compiled plan.
 
-    All systems must share (state_dim, input_dim, order) — use
+    Prefer ``repro.api``::
+
+        plan = api.compile_plan(api.RecoverySpec(..., mode="batch"))
+        theta_batch = plan.run_batch(ys_batch, us_batch)
+
+    Returns theta_batch [S, n_terms, n_state] (normalized coords). All
+    systems must share (state_dim, input_dim, order) — use
     ``stack_systems`` to zero-pad a heterogeneous set to common dims.
     """
-    encoders.get_encoder(cfg.encoder)  # fail fast on unregistered encoders
-    keys = system_keys(seed, ys_batch.shape[0])
-    return _recover_many_jit(
-        ys_batch, us_batch, keys, lr,
-        cfg=cfg, steps=steps, batch_size=batch_size, n_active=n_active,
+    from repro import api
+
+    spec = api.RecoverySpec.from_mr_config(
+        cfg,
+        mode="batch",
+        steps=steps,
+        lr=lr,
+        seed=seed,
+        batch_size=batch_size,
+        n_active=n_active,
     )
+    return api.compile_plan(spec).run_batch(ys_batch, us_batch)
 
 
 # module-level jit so repeat calls with the same static config hit the
 # compile cache (a per-call jit(lambda ...) would retrace every invocation)
-@functools.partial(
-    jax.jit, static_argnames=("cfg", "steps", "batch_size", "n_active")
-)
+@functools.partial(jax.jit, static_argnames=("cfg", "steps", "batch_size", "n_active"))
 def _recover_many_jit(ys_batch, us_batch, keys, lr, *, cfg, steps, batch_size, n_active):
     def one(ys, us, key):
         return recover_one(
-            cfg, ys, us, key,
-            steps=steps, lr=lr, batch_size=batch_size, n_active=n_active,
+            cfg,
+            ys,
+            us,
+            key,
+            steps=steps,
+            lr=lr,
+            batch_size=batch_size,
+            n_active=n_active,
         )
 
     if us_batch is None:
@@ -279,7 +302,11 @@ def stack_systems(
     ys_batch = jnp.asarray(np.stack(yws))
     us_batch = jnp.asarray(np.stack(uws)) if m_max else None
     cfg = MRConfig(
-        state_dim=n_max, input_dim=m_max, order=order,
-        hidden=32, dense_hidden=64, dt=dts.pop(),
+        state_dim=n_max,
+        input_dim=m_max,
+        order=order,
+        hidden=32,
+        dense_hidden=64,
+        dt=dts.pop(),
     )
     return ys_batch, us_batch, norms, cfg

@@ -59,6 +59,7 @@ class MRConfig:
     recon_weight: float = 1.0
     quant: QuantConfig | None = None  # fixed-point QAT when set
     fused: bool = False  # stage-fused per-window step (kernels/mr_step)
+    block_b: int | None = None  # fused-stage batch tile (None = full batch)
 
     @property
     def n_terms(self) -> int:
@@ -160,7 +161,7 @@ def mr_forward(params: MRParams, cfg: MRConfig, ys: jnp.ndarray, us: jnp.ndarray
     if cfg.fused:
         from repro.kernels.mr_step.ops import mr_step
 
-        return mr_step(params, cfg, xs)
+        return mr_step(params, cfg, xs, block_b=cfg.block_b)
     h = _encode(params, cfg, xs)
     return head_from_hidden(params, cfg, h)
 
@@ -251,8 +252,14 @@ def train_mr(
     from repro.core import engine
 
     params, metrics = engine.train_mr_scan(
-        cfg, ys, us, steps=steps, lr=lr, seed=seed,
-        batch_size=batch_size, norm=norm,
+        cfg,
+        ys,
+        us,
+        steps=steps,
+        lr=lr,
+        seed=seed,
+        batch_size=batch_size,
+        norm=norm,
     )
     history = engine.history_from_metrics(metrics, log_every)
     if callback:
@@ -279,6 +286,21 @@ def recover_coefficients(
     return theta
 
 
+def prune_theta(theta, n_active: int):
+    """Magnitude-prune a HOST-side theta to its ``n_active`` largest terms.
+
+    The single numpy spelling, shared by ``recover_physical_coefficients``
+    and ``api.RecoveryPlan.readout``; ``recover_coefficients`` keeps the jnp
+    twin above because it runs inside jit/vmap (device-side).
+    """
+    import numpy as np
+
+    flat = np.abs(theta).ravel()
+    k = min(n_active, flat.size)
+    thresh = np.sort(flat)[-k]
+    return np.where(np.abs(theta) >= thresh, theta, 0.0)
+
+
 def recover_physical_coefficients(
     params: MRParams,
     cfg: MRConfig,
@@ -300,13 +322,13 @@ def recover_physical_coefficients(
 
     theta_z = np.asarray(recover_coefficients(params, cfg, ys, us, n_active=None))
     theta_y = denormalize_theta(
-        theta_z, norm["mean"], norm["scale"],
-        n_vars=cfg.state_dim + cfg.input_dim, order=cfg.order,
+        theta_z,
+        norm["mean"],
+        norm["scale"],
+        n_vars=cfg.state_dim + cfg.input_dim,
+        order=cfg.order,
         n_state=cfg.state_dim,
     )
     if n_active is not None:
-        flat = np.abs(theta_y).ravel()
-        k = min(n_active, flat.size)
-        thresh = np.sort(flat)[-k]
-        theta_y = np.where(np.abs(theta_y) >= thresh, theta_y, 0.0)
+        theta_y = prune_theta(theta_y, n_active)
     return theta_y

@@ -25,7 +25,9 @@ class NodeEncoderParams(NamedTuple):
     b_in: jnp.ndarray
 
 
-def init_node_encoder(key: jax.Array, d_in: int, hidden: int, dtype=jnp.float32) -> NodeEncoderParams:
+def init_node_encoder(
+    key: jax.Array, d_in: int, hidden: int, dtype=jnp.float32
+) -> NodeEncoderParams:
     k1, k2, k3 = jax.random.split(key, 3)
     s = 1.0 / jnp.sqrt(hidden)
     return NodeEncoderParams(

@@ -46,7 +46,9 @@ class Int8Quantized(NamedTuple):
 
 def quantize_int8(w: jnp.ndarray, axis: int = -1) -> Int8Quantized:
     """Symmetric per-channel int8 — the weight format of the serving kernel."""
-    amax = jnp.max(jnp.abs(w), axis=tuple(d for d in range(w.ndim) if d != axis % w.ndim), keepdims=True)
+    amax = jnp.max(
+        jnp.abs(w), axis=tuple(d for d in range(w.ndim) if d != axis % w.ndim), keepdims=True
+    )
     scale = jnp.maximum(amax, 1e-8) / 127.0
     q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
     return Int8Quantized(values=q, scale=scale.astype(jnp.float32))
@@ -117,7 +119,9 @@ def make_tanh_table(n_segments: int = 64) -> PWLTable:
     return pwl_table(np.tanh, -4.0, 4.0, n_segments)
 
 
-def pwl_max_error(table: PWLTable, fn: Callable[[np.ndarray], np.ndarray], n_probe: int = 20001) -> float:
+def pwl_max_error(
+    table: PWLTable, fn: Callable[[np.ndarray], np.ndarray], n_probe: int = 20001
+) -> float:
     xs = np.linspace(table.x_min, table.x_max, n_probe)
     approx = np.asarray(pwl_apply(table, jnp.asarray(xs, jnp.float32)))
     return float(np.max(np.abs(approx - fn(xs))))

@@ -34,7 +34,9 @@ def finite_difference(x: jnp.ndarray, dt: float) -> jnp.ndarray:
     return dxdt
 
 
-def _masked_ridge(theta: jnp.ndarray, dx: jnp.ndarray, mask: jnp.ndarray, lam: float) -> jnp.ndarray:
+def _masked_ridge(
+    theta: jnp.ndarray, dx: jnp.ndarray, mask: jnp.ndarray, lam: float
+) -> jnp.ndarray:
     """Solve min ||Theta_masked w - dx||^2 + lam ||w||^2 per state dim.
 
     Masking is done by zeroing columns; the ridge term keeps the normal

@@ -22,6 +22,14 @@ the serving-system analogue for a FLEET of dynamical-system streams:
 ``RecoveryService`` is the host-side orchestrator (queue, eviction policy,
 warm-start registry); everything numerical stays inside compiled programs.
 
+With a ``mesh`` (built by ``repro.api.compile_plan`` from
+``RecoverySpec.mesh_slots``), every SlotState leaf's slot axis is SHARDED
+across a ``("slots",)`` device mesh (``shard_slots``): the fused stage makes
+per-slot cost uniform, so the even slot split is a balanced shard map and
+one service scales past a single chip's VMEM/HBM. The single-device path is
+the trivial mesh (``mesh=None``); numerics are identical either way
+(tests/test_api.py pins 2-virtual-device parity).
+
 The per-window recovery stage itself is merinda.mr_forward, so the service
 inherits the stage-fused dataflow for free: an ``MRConfig(fused=True)``
 routes every tick's encode + norm + head through the single fused
@@ -35,6 +43,7 @@ gate AND head weights) — the paper's serving configuration end to end.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import functools
 from typing import Any, NamedTuple
@@ -43,6 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import encoders
 from repro.core.engine import WARMUP_STEPS
 from repro.core.merinda import (
     MRConfig,
@@ -53,6 +63,14 @@ from repro.core.merinda import (
 )
 from repro.data.windows import buffer_stats, n_buffer_windows, roll_buffer, window_views
 from repro.optim import adamw_init
+from repro.parallel import named_sharding, use_mesh_rules
+
+# Slot-axis sharding rule table for the parallel/ spec resolver: the leading
+# (slot) axis of every SlotState leaf shards over the "slots" mesh axis; the
+# divisibility fallback in partition_spec replicates any leaf whose slot
+# count doesn't divide the mesh, so an odd configuration degrades safely
+# instead of forcing GSPMD padding.
+SLOT_RULES: dict[str, list[tuple[str, ...]]] = {"slots": [("slots",)]}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,6 +119,25 @@ class SlotState(NamedTuple):
     steps: jnp.ndarray  # [S] int32 optimizer steps since admission
     active: jnp.ndarray  # [S] bool
     stream_id: jnp.ndarray  # [S] int32 (-1 = empty slot)
+
+
+def shard_slots(state: SlotState, mesh) -> SlotState:
+    """Shard every SlotState leaf's slot axis across ``mesh`` ("slots" axis).
+
+    The fused stage makes per-slot cost uniform, so an even slot split IS the
+    balanced shard map — one service then scales past a single chip's
+    VMEM/HBM. Placement goes through the ``parallel/`` rule table
+    (``named_sharding`` + SLOT_RULES) so the mesh-shim and divisibility
+    safety properties apply; the jitted ``tick``/``admit`` programs see the
+    sharded pytree as inputs and XLA's SPMD partitioner keeps every per-slot
+    computation on the slot's device.
+    """
+
+    def put(leaf):
+        axes = ("slots",) + (None,) * (leaf.ndim - 1)
+        return jax.device_put(leaf, named_sharding(mesh, leaf.shape, axes, SLOT_RULES))
+
+    return jax.tree.map(put, state)
 
 
 def cold_start(key: jax.Array, cfg: MRConfig) -> tuple[MRParams, Any]:
@@ -327,15 +364,32 @@ class RecoveryService:
         n_slots: int,
         seed: int = 0,
         quant: bool = False,
+        mesh=None,
+        tick_program=None,
     ):
+        encoders.validate_config(cfg)  # fused x fusable fails HERE, not mid-trace
         self.cfg, self.scfg, self.n_slots = cfg, scfg, n_slots
         self.quant = quant
+        self.mesh = mesh  # jax Mesh over ("slots",) | None = single device
+        # the compiled tick: a RecoveryPlan passes its pre-bound program so
+        # the service runs EXACTLY what the plan compiled; standalone
+        # construction binds the module-level program with this config
+        self._tick = tick_program or functools.partial(tick, cfg=cfg, scfg=scfg)
         self.key = jax.random.key(seed)
         self.state = init_slots(self.key, cfg, scfg, n_slots)
+        if mesh is not None:
+            self.state = shard_slots(self.state, mesh)
         self.queue: collections.deque = collections.deque()
         self.warm: dict[int, MRParams] = {}  # stream_id -> evicted params
         self.results: dict[int, StreamResult] = {}
         self.ticks = 0
+
+    def _mesh_ctx(self):
+        """Activate the slot mesh (jax.set_mesh shim via parallel/) around
+        every compiled-program call; a no-op on the trivial mesh."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        return use_mesh_rules(self.mesh, SLOT_RULES)
 
     # -- admission ----------------------------------------------------------
     def submit(self, stream_id: int, history_y: np.ndarray, history_u: np.ndarray | None = None):
@@ -349,7 +403,12 @@ class RecoveryService:
 
     def _admit_into(self, slot: int):
         if not self.queue:
-            self.state = deactivate(self.state, jnp.int32(slot))
+            with self._mesh_ctx():
+                self.state = deactivate(self.state, jnp.int32(slot))
+            if self.mesh is not None:
+                # same propagation hazard as the admit path below: the
+                # update mixes in replicated scalars, so re-pin the shard
+                self.state = shard_slots(self.state, self.mesh)
             return None
         stream_id, buf_y, buf_u = self.queue.popleft()
         if stream_id in self.warm:
@@ -357,15 +416,20 @@ class RecoveryService:
             opt = adamw_init(params)
         else:
             params, opt = cold_start(jax.random.fold_in(self.key, 1000 + stream_id), self.cfg)
-        self.state = admit(
-            self.state,
-            jnp.int32(slot),
-            jnp.int32(stream_id),
-            jnp.asarray(buf_y),
-            jnp.asarray(buf_u),
-            params,
-            opt,
-        )
+        with self._mesh_ctx():
+            self.state = admit(
+                self.state,
+                jnp.int32(slot),
+                jnp.int32(stream_id),
+                jnp.asarray(buf_y),
+                jnp.asarray(buf_u),
+                params,
+                opt,
+            )
+        if self.mesh is not None:
+            # admission mixes replicated single-slot operands into the update;
+            # re-pin the slot shard so every later tick sees the same layout
+            self.state = shard_slots(self.state, self.mesh)
         return stream_id
 
     def fill_slots(self) -> list[int]:
@@ -411,14 +475,13 @@ class RecoveryService:
         S, C, m = self.n_slots, self.scfg.chunk, self.cfg.input_dim
         if chunks_u is None:
             chunks_u = np.zeros((S, C, m), np.float32)
-        self.state = tick(
-            self.state,
-            jnp.asarray(chunks_y, jnp.float32),
-            jnp.asarray(chunks_u, jnp.float32),
-            jax.random.fold_in(self.key, self.ticks),
-            cfg=self.cfg,
-            scfg=self.scfg,
-        )
+        with self._mesh_ctx():
+            self.state = self._tick(
+                self.state,
+                jnp.asarray(chunks_y, jnp.float32),
+                jnp.asarray(chunks_u, jnp.float32),
+                jax.random.fold_in(self.key, self.ticks),
+            )
         self.ticks += 1
         delta = np.asarray(self.state.delta)
         steps = np.asarray(self.state.steps)

@@ -71,7 +71,15 @@ def _lorenz_coef():
 # --- F-8 Crusader (cubic short-period model, SINDY-MPC ref [18]) ------------
 def _f8(y, u, t, args):
     x1, x2, x3 = y[..., 0], y[..., 1], y[..., 2]
-    dx1 = -0.877 * x1 + x3 - 0.088 * x1 * x3 + 0.47 * x1**2 - 0.019 * x2**2 - x1**2 * x3 + 3.846 * x1**3
+    dx1 = (
+        -0.877 * x1
+        + x3
+        - 0.088 * x1 * x3
+        + 0.47 * x1**2
+        - 0.019 * x2**2
+        - x1**2 * x3
+        + 3.846 * x1**3
+    )
     dx2 = x3
     dx3 = -4.208 * x1 - 0.396 * x3 - 0.47 * x1**2 - 3.564 * x1**3
     return jnp.stack([dx1, dx2, dx3], axis=-1)
@@ -86,7 +94,12 @@ def _f8_coef():
     c[ix["x1*x3"], 0], c[ix["x1^2"], 0], c[ix["x2^2"], 0] = -0.088, 0.47, -0.019
     c[ix["x1^2*x3"], 0], c[ix["x1^3"], 0] = -1.0, 3.846
     c[ix["x3"], 1] = 1.0
-    c[ix["x1"], 2], c[ix["x3"], 2], c[ix["x1^2"], 2], c[ix["x1^3"], 2] = -4.208, -0.396, -0.47, -3.564
+    c[ix["x1"], 2], c[ix["x3"], 2], c[ix["x1^2"], 2], c[ix["x1^3"], 2] = (
+        -4.208,
+        -0.396,
+        -0.47,
+        -3.564,
+    )
     return c
 
 
@@ -213,27 +226,38 @@ def _pendulum_coef():
 
 
 SYSTEMS: dict[str, SystemSpec] = {
-    "lorenz": SystemSpec("lorenz", 3, 0, 2, _lorenz, (-8.0, 7.0, 27.0), 0.01, 10.0, None, _lorenz_coef),
+    "lorenz": SystemSpec(
+        "lorenz", 3, 0, 2, _lorenz, (-8.0, 7.0, 27.0), 0.01, 10.0, None, _lorenz_coef
+    ),
     "f8": SystemSpec("f8", 3, 0, 3, _f8, (0.3, 0.0, 0.2), 0.01, 12.0, None, _f8_coef),
     "lotka_volterra": SystemSpec(
         "lotka_volterra", 2, 0, 2, _lotka, (30.0, 4.0), 0.05, 40.0, None, _lotka_coef
     ),
-    "pathogen": SystemSpec("pathogen", 2, 0, 2, _pathogen, (0.5, 0.3), 0.02, 30.0, None, _pathogen_coef),
+    "pathogen": SystemSpec(
+        "pathogen", 2, 0, 2, _pathogen, (0.5, 0.3), 0.02, 30.0, None, _pathogen_coef
+    ),
     "aid": SystemSpec("aid", 3, 1, 2, _aid, (7.0, 0.0, 18.0), 5.0, 1000.0, _aid_input, _aid_coef),
     "damped_oscillator": SystemSpec(
         "damped_oscillator", 2, 0, 2, _damped_osc, (1.2, 0.0), 0.01, 20.0, None, _damped_osc_coef
     ),
     "controlled_pendulum": SystemSpec(
-        "controlled_pendulum", 2, 1, 2, _pendulum, (0.6, 0.0), 0.01, 20.0, _pend_input, _pendulum_coef
+        "controlled_pendulum",
+        2,
+        1,
+        2,
+        _pendulum,
+        (0.6, 0.0),
+        0.01,
+        20.0,
+        _pend_input,
+        _pendulum_coef,
     ),
 }
 
 
 def get_system(name: str) -> SystemSpec:
     if name not in SYSTEMS:
-        raise KeyError(
-            f"unknown system {name!r}; available: {', '.join(sorted(SYSTEMS))}"
-        )
+        raise KeyError(f"unknown system {name!r}; available: {', '.join(sorted(SYSTEMS))}")
     return SYSTEMS[name]
 
 

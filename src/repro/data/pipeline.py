@@ -69,12 +69,8 @@ class SyntheticLM:
         cfg = self.cfg
         assert cfg.global_batch % n_hosts == 0
         rows_per_host = cfg.global_batch // n_hosts
-        rng = np.random.default_rng(
-            np.random.SeedSequence([cfg.seed, step, host_id])
-        )
-        toks = np.stack(
-            [self._tokens(rng, cfg.seq_len + 1) for _ in range(rows_per_host)]
-        )
+        rng = np.random.default_rng(np.random.SeedSequence([cfg.seed, step, host_id]))
+        toks = np.stack([self._tokens(rng, cfg.seq_len + 1) for _ in range(rows_per_host)])
         return {
             "tokens": toks[:, :-1].astype(np.int32),
             "labels": toks[:, 1:].astype(np.int32),
@@ -100,6 +96,4 @@ def device_put_batch(batch: dict, shardings: dict | None):
     """Host numpy batch -> global jax Arrays under the given shardings."""
     if shardings is None:
         return jax.tree.map(jnp.asarray, batch)
-    return jax.tree.map(
-        lambda x, s: jax.make_array_from_process_local_data(s, x), batch, shardings
-    )
+    return jax.tree.map(lambda x, s: jax.make_array_from_process_local_data(s, x), batch, shardings)

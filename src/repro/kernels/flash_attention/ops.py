@@ -21,8 +21,14 @@ from repro.kernels.flash_attention import ref as _ref
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
 def _fa_kernel_cvjp(q, k, v, causal, window, q_offset, block_q, block_k):
     return _k.flash_attention_pallas(
-        q, k, v, causal=causal, window=window, q_offset=q_offset,
-        block_q=block_q, block_k=block_k,
+        q,
+        k,
+        v,
+        causal=causal,
+        window=window,
+        q_offset=q_offset,
+        block_q=block_q,
+        block_k=block_k,
         interpret=not rt.on_tpu(),
     )
 
@@ -37,7 +43,9 @@ def _fa_bwd(causal, window, q_offset, block_q, block_k, res, ct):
         lambda q, k, v: _ref.attention_reference(
             q, k, v, causal=causal, window=window, q_offset=q_offset
         ),
-        q, k, v,
+        q,
+        k,
+        v,
     )
     return vjp(ct)
 

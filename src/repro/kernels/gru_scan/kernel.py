@@ -51,7 +51,9 @@ def _gru_step_math(x, h, wx, wh, b, time_scale, dt, *, flow: bool, hidden: int):
     r = jax.nn.sigmoid(gx[:, :hidden] + gh[:, :hidden] + b[:hidden])
     z = jax.nn.sigmoid(gx[:, hidden : 2 * hidden] + gh[:, hidden:] + b[hidden : 2 * hidden])
     ch = jax.lax.dot_general(
-        (r * h).astype(wh.dtype), wh[:, 2 * hidden :], (((1,), (0,)), ((), ())),
+        (r * h).astype(wh.dtype),
+        wh[:, 2 * hidden :],
+        (((1,), (0,)), ((), ())),
         preferred_element_type=f32,
     )
     c = jnp.tanh(gx[:, 2 * hidden :] + ch + b[2 * hidden :])
@@ -101,9 +103,7 @@ def _gru_scan_kernel(
     hs_ref[:, 0, :] = h_new.astype(hs_ref.dtype)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("flow", "block_b", "interpret")
-)
+@functools.partial(jax.jit, static_argnames=("flow", "block_b", "interpret"))
 def gru_scan_pallas(
     xs: jnp.ndarray,  # [B, T, D]
     h0: jnp.ndarray,  # [B, H]

@@ -23,8 +23,16 @@ from repro.kernels.gru_scan import ref as _ref
 @_functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8))
 def _gru_kernel_cvjp(xs, h0, wx, wh, b, time_scale, dts, flow, block_b):
     return _k.gru_scan_pallas(
-        xs, h0, wx, wh, b, time_scale, dts,
-        flow=flow, block_b=block_b, interpret=not rt.on_tpu(),
+        xs,
+        h0,
+        wx,
+        wh,
+        b,
+        time_scale,
+        dts,
+        flow=flow,
+        block_b=block_b,
+        interpret=not rt.on_tpu(),
     )
 
 
@@ -68,8 +76,15 @@ def gru_scan(
         )
     else:
         hs = _gru_kernel_cvjp(
-            xs, h0, params.w[:D], params.w[D:], params.b, params.time_scale, dts,
-            flow, block_b,
+            xs,
+            h0,
+            params.w[:D],
+            params.w[D:],
+            params.b,
+            params.time_scale,
+            dts,
+            flow,
+            block_b,
         )
     return hs[:, -1, :], hs
 

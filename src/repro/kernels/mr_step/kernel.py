@@ -108,9 +108,7 @@ def _mr_step_kernel(
         out_ref[...] = out.astype(out_ref.dtype)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("flow", "act_bits", "block_b", "interpret")
-)
+@functools.partial(jax.jit, static_argnames=("flow", "act_bits", "block_b", "interpret"))
 def mr_step_pallas(
     xs: jnp.ndarray,  # [B, T, D]
     h0: jnp.ndarray,  # [B, H]
@@ -137,9 +135,7 @@ def mr_step_pallas(
     assert B % bb == 0, f"batch {B} not divisible by block_b {bb}"
     nb = B // bb
 
-    kernel = functools.partial(
-        _mr_step_kernel, flow=flow, hidden=H, act_bits=act_bits
-    )
+    kernel = functools.partial(_mr_step_kernel, flow=flow, hidden=H, act_bits=act_bits)
     return rt.pallas_call_compat(
         kernel,
         grid=(nb, T),

@@ -30,8 +30,21 @@ from repro.kernels.mr_step import ref as _ref
 @_functools.partial(jax.custom_vjp, nondiff_argnums=(11, 12, 13))
 def _mr_step_cvjp(xs, h0, wx, wh, b, time_scale, dts, w1, b1, w2, b2, flow, act_bits, block_b):
     return _k.mr_step_pallas(
-        xs, h0, wx, wh, b, time_scale, dts, w1, b1, w2, b2,
-        flow=flow, act_bits=act_bits, block_b=block_b, interpret=not rt.on_tpu(),
+        xs,
+        h0,
+        wx,
+        wh,
+        b,
+        time_scale,
+        dts,
+        w1,
+        b1,
+        w2,
+        b2,
+        flow=flow,
+        act_bits=act_bits,
+        block_b=block_b,
+        interpret=not rt.on_tpu(),
     )
 
 
@@ -41,9 +54,7 @@ def _mr_fwd(xs, h0, wx, wh, b, time_scale, dts, w1, b1, w2, b2, flow, act_bits, 
 
 
 def _mr_bwd(flow, act_bits, block_b, res, ct):
-    _, vjp = jax.vjp(
-        lambda *a: _ref.mr_step_reference(*a, flow=flow, act_bits=act_bits), *res
-    )
+    _, vjp = jax.vjp(lambda *a: _ref.mr_step_reference(*a, flow=flow, act_bits=act_bits), *res)
     return vjp(ct)
 
 
@@ -86,6 +97,15 @@ def _split_out(out, cfg):
     return theta, out[..., cfg.n_coef :]
 
 
+def _legal_block_b(block_b: int | None, B: int) -> int | None:
+    """Drop a tile the batch can't take. A plan resolves ``block_b`` against
+    its COMPILE-TIME batch (e.g. the training minibatch), but the same config
+    also serves full-window readouts whose batch differs; the kernel asserts
+    ``B % block_b == 0``, so a non-dividing tile falls back to full batch
+    here (a per-shape static decision — jit retraces per batch shape)."""
+    return block_b if block_b and B % block_b == 0 else None
+
+
 def mr_step(
     params,  # merinda.MRParams (GRU-family encoder)
     cfg,  # merinda.MRConfig
@@ -102,6 +122,7 @@ def mr_step(
     """
     spec = _fusable_spec(cfg, int8=False)
     B, T, _ = xs.shape
+    block_b = _legal_block_b(block_b, B)
     h0 = jnp.zeros((B, cfg.hidden), xs.dtype)
     if dts is None:
         dts = jnp.ones((T,), xs.dtype)
@@ -112,13 +133,36 @@ def mr_step(
         act_bits = (cfg.quant.act_int_bits, cfg.quant.act_frac_bits)
     if rt.resolve_dispatch(force_reference, interpret) is rt.Dispatch.REFERENCE:
         out = _ref.mr_step_reference(
-            xs, h0, wx, wh, b, time_scale, dts, w1, b1, w2, b2,
-            flow=spec.flow, act_bits=act_bits,
+            xs,
+            h0,
+            wx,
+            wh,
+            b,
+            time_scale,
+            dts,
+            w1,
+            b1,
+            w2,
+            b2,
+            flow=spec.flow,
+            act_bits=act_bits,
         )
     else:
         out = _mr_step_cvjp(
-            xs, h0, wx, wh, b, time_scale, dts, w1, b1, w2, b2,
-            spec.flow, act_bits, block_b,
+            xs,
+            h0,
+            wx,
+            wh,
+            b,
+            time_scale,
+            dts,
+            w1,
+            b1,
+            w2,
+            b2,
+            spec.flow,
+            act_bits,
+            block_b,
         )
     return _split_out(out, cfg)
 
@@ -141,6 +185,7 @@ def mr_step_int8(
     """
     _fusable_spec(cfg, int8=True)
     B, T, _ = xs.shape
+    block_b = _legal_block_b(block_b, B)
     d_in = cfg.state_dim + cfg.input_dim
     h0 = jnp.zeros((B, cfg.hidden), xs.dtype)
     if dts is None:
@@ -152,11 +197,22 @@ def mr_step_int8(
     sig_t, tanh_t = make_sigmoid_table(n_seg), make_tanh_table(n_seg)
     if rt.resolve_dispatch(force_reference, interpret) is rt.Dispatch.REFERENCE:
         out = _ref.mr_step_int8_reference(
-            xs, h0, wxq.values, whq.values, wxq.scale, whq.scale,
-            params.encoder.b, dts,
-            w1q.values, w1q.scale, params.head_b1,
-            w2q.values, w2q.scale, params.head_b2,
-            sig_t, tanh_t,
+            xs,
+            h0,
+            wxq.values,
+            whq.values,
+            wxq.scale,
+            whq.scale,
+            params.encoder.b,
+            dts,
+            w1q.values,
+            w1q.scale,
+            params.head_b1,
+            w2q.values,
+            w2q.scale,
+            params.head_b2,
+            sig_t,
+            tanh_t,
         )
     else:
         out = _k.mr_step_pallas_int8(

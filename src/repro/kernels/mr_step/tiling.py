@@ -1,0 +1,104 @@
+"""VMEM residency model + batch-tile (``block_b``) auto-selection.
+
+One model of what the stage-fused ``mr_step`` kernel pins in VMEM — gate
+weights, head weights, the per-tile activation blocks, PWL tables when int8
+— shared by two consumers:
+
+- ``benchmarks/bench_stagemap._vmem_bytes`` (the paper Table 7 analogue)
+  delegates here, so the design-space sweep and the runtime tiling decision
+  can never disagree about residency;
+- ``repro.api.compile_plan`` resolves ``RecoverySpec.block_b="auto"`` by
+  walking the divisor tiles of the batch and picking the largest one whose
+  residency fits the configured VMEM budget (the ROADMAP "pick block_b from
+  ``_vmem_bytes`` against the VMEM budget" item). Without a budget the full
+  batch is used — the pre-auto behaviour.
+
+The numbers mirror the kernel's actual BlockSpecs (kernel.py): weights are
+resident across the whole grid, activations are tiled by ``block_b`` rows.
+"""
+
+from __future__ import annotations
+
+# ~16 MB of VMEM per TPU core (v4/v5 family); the auto policy budgets
+# against a caller-supplied fraction of this, never the constant directly.
+VMEM_BYTES_PER_CORE = 16 * 1024 * 1024
+
+
+def vmem_bytes(
+    B: int,
+    D: int,
+    H: int,
+    Dh: int = 128,
+    K: int = 32,
+    *,
+    int8: bool,
+    n_seg: int,
+    block_b: int,
+    fused: bool = True,
+) -> int:
+    """Exact VMEM residency of the fused kernel's BlockSpecs (kernel.py).
+
+    ``block_b=0`` means the full batch is one tile. ``fused=False`` models
+    the bare gru_scan kernel (no head residency) — the configuration the
+    unfused two-dispatch pipeline runs.
+    """
+    wbytes = 1 if int8 else 4
+    bb = block_b or B
+    vm = (D * 3 * H + H * 3 * H) * wbytes  # resident gate weights
+    vm += 3 * H * 4 * (3 if int8 else 1)  # bias (+2 scale rows when int8)
+    vm += bb * D * 4 + bb * H * 4 * 2  # x_t block + h scratch + h_t/out tile
+    vm += H * 4 + 4  # time_scale + dt
+    if int8:
+        vm += 2 * 2 * n_seg * 4  # sigmoid/tanh PWL tables (slopes+intercepts)
+    if fused:
+        # head weights are VMEM-resident next to the gate weights
+        vm += (H * Dh + Dh * K) * wbytes  # w1 + w2
+        vm += (Dh + K) * 4  # b1 + b2
+        vm += bb * K * 4  # out tile (theta ++ shifts)
+        if int8:
+            vm += (Dh + K) * 4  # per-channel dequant scale rows
+    return vm
+
+
+def config_vmem_bytes(cfg, batch: int, *, block_b: int | None = None, n_seg: int = 16) -> int:
+    """Residency of the fused stage for one ``MRConfig`` at a given batch."""
+    return vmem_bytes(
+        batch,
+        cfg.state_dim + cfg.input_dim,
+        cfg.hidden,
+        cfg.dense_hidden,
+        cfg.n_coef + cfg.n_shifts,
+        int8=cfg.quant is not None,
+        n_seg=n_seg,
+        block_b=block_b or 0,
+    )
+
+
+def auto_block_b(
+    cfg,
+    batch: int | None,
+    vmem_budget_bytes: int | None,
+    *,
+    min_block: int = 8,
+    n_seg: int = 16,
+) -> int | None:
+    """Largest batch tile whose fused-stage residency fits the VMEM budget.
+
+    Walks the proper divisors of ``batch`` from largest to smallest (down to
+    ``min_block``) — the tile must divide the batch exactly (kernel.py
+    asserts ``B % block_b == 0``) — and returns the first one that fits.
+    ``None`` (= full batch, no tiling) when no budget is configured OR the
+    batch is unknown at compile time OR the full batch already fits; the
+    smallest legal divisor when nothing fits, so a too-tight budget degrades
+    to maximum tiling instead of failing.
+    """
+    if vmem_budget_bytes is None or batch is None:
+        return None  # documented fallback: full batch
+    if config_vmem_bytes(cfg, batch, block_b=None, n_seg=n_seg) <= vmem_budget_bytes:
+        return None
+    divisors = [d for d in range(min_block, batch) if batch % d == 0]
+    for bb in reversed(divisors):
+        if config_vmem_bytes(cfg, batch, block_b=bb, n_seg=n_seg) <= vmem_budget_bytes:
+            return bb  # largest fitting divisor: first hit walking downward
+    # nothing fits: the smallest legal tile is the best we can do
+    return divisors[0] if divisors else None

@@ -60,9 +60,7 @@ def resolve_compiler_params_cls(ns: Any = pltpu) -> type:
     )
 
 
-def compiler_params(
-    dimension_semantics: Sequence[str] | None = None, ns: Any = pltpu, **kw
-) -> Any:
+def compiler_params(dimension_semantics: Sequence[str] | None = None, ns: Any = pltpu, **kw) -> Any:
     """Version-correct compiler-params object (CompilerParams/TPUCompilerParams)."""
     if dimension_semantics is not None:
         kw["dimension_semantics"] = tuple(dimension_semantics)
@@ -81,9 +79,7 @@ def blockspec_block_shape_first(cls: type = pl.BlockSpec) -> bool:
 _BLOCK_SHAPE_FIRST = blockspec_block_shape_first()
 
 
-def block_spec(
-    block_shape: tuple[int, ...], index_map: Callable | None = None
-) -> pl.BlockSpec:
+def block_spec(block_shape: tuple[int, ...], index_map: Callable | None = None) -> pl.BlockSpec:
     """BlockSpec with the argument order the installed JAX expects."""
     if _BLOCK_SHAPE_FIRST:
         return pl.BlockSpec(tuple(block_shape), index_map)

@@ -73,8 +73,7 @@ def _ssd_chunk_kernel(
     # inter-chunk: contribution of the state entering this chunk
     s_in = s_scr[...]
     c_dec = cm * jnp.exp(cum)[:, None]  # [L, N]
-    y = y + jax.lax.dot_general(c_dec, s_in, (((1,), (0,)), ((), ())),
-                                preferred_element_type=f32)
+    y = y + jax.lax.dot_general(c_dec, s_in, (((1,), (0,)), ((), ())), preferred_element_type=f32)
 
     # state update: S = exp(total) * S_in + sum_j exp(total - cum_j) dt_j b_j (x) x_j
     w = jnp.exp(total - cum) * dt  # [L]

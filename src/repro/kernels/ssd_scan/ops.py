@@ -20,9 +20,7 @@ from repro.kernels.ssd_scan import ref as _ref
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
 def _ssd_kernel_cvjp(x, dt, A, bm, cm, D, chunk):
-    return _k.ssd_scan_pallas(
-        x, dt, A, bm, cm, D, chunk=chunk, interpret=not rt.on_tpu()
-    )
+    return _k.ssd_scan_pallas(x, dt, A, bm, cm, D, chunk=chunk, interpret=not rt.on_tpu())
 
 
 def _ssd_fwd(x, dt, A, bm, cm, D, chunk):

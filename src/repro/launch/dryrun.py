@@ -214,9 +214,19 @@ def _run_subprocess(cell_args) -> tuple[str, bool]:
     """Run one cell in a fresh interpreter (isolation: one compile per proc)."""
     arch, shape, mesh, variant, rules_name = cell_args
     cmd = [
-        sys.executable, "-m", "repro.launch.dryrun",
-        "--arch", arch, "--shape", shape, "--mesh", mesh,
-        "--variant", variant, "--rules", rules_name,
+        sys.executable,
+        "-m",
+        "repro.launch.dryrun",
+        "--arch",
+        arch,
+        "--shape",
+        shape,
+        "--mesh",
+        mesh,
+        "--variant",
+        variant,
+        "--rules",
+        rules_name,
     ]
     env = dict(os.environ)
     env["PYTHONPATH"] = str(pathlib.Path(__file__).resolve().parents[2])
@@ -255,7 +265,11 @@ def main() -> int:
         failures = []
         with mp.Pool(args.jobs) as pool:
             for tag, ok in pool.imap_unordered(_run_subprocess, todo):
-                rec = json.loads((ART / f"{tag}.json").read_text()) if (ART / f"{tag}.json").exists() else {}
+                rec = (
+                    json.loads((ART / f"{tag}.json").read_text())
+                    if (ART / f"{tag}.json").exists()
+                    else {}
+                )
                 status = rec.get("status", "missing")
                 print(f"  {tag}: {status}")
                 if status not in ("ok", "skipped"):

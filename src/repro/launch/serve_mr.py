@@ -19,27 +19,37 @@ CPU demo (the CI acceptance configuration):
     PYTHONPATH=src python -m repro.launch.serve_mr \
         --streams 12 --slots 4 --steps-per-tick 8
 
+``--plan`` builds the service through the declarative surface instead of
+hand-plumbed configs: one ``repro.api.RecoverySpec`` (encoder, precision,
+fusion, slots, mesh) is compiled by ``api.compile_plan`` into a
+``RecoveryPlan``, and this driver becomes a thin consumer. ``--mesh D``
+(requires ``--plan``) shards ``SlotState`` over a D-device mesh along the
+slot axis; ``--virtual-devices N`` exports
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` BEFORE jax loads, so
+the sharded service runs on CPU virtual devices in CI:
+
+    PYTHONPATH=src python -m repro.launch.serve_mr \
+        --plan --mesh 2 --virtual-devices 2 --streams 12 --slots 4
+
 ``--fused`` runs every tick's per-window recovery stage through the
 stage-fused kernels/mr_step step (encode + RMS-norm + dense head as ONE
-dispatch with VMEM-resident hidden state; reference math off-TPU) — the
-same fused code path the engine's epoch scan uses.
-
+dispatch with VMEM-resident hidden state; reference math off-TPU);
 ``--quant`` additionally serves every evicted stream's coefficients through
 the fused fixed-point stage (kernels/mr_step int8: quantized gate + head
-weights, PWL activations; interpret mode off-TPU) — the paper's fixed-point
-serving configuration end to end.
+weights, PWL activations) — the paper's fixed-point serving configuration
+end to end.
+
+Heavy imports happen inside the entry points (after ``--virtual-devices``
+has set XLA_FLAGS), never at module import time.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import numpy as np
-
-from repro.core.merinda import MRConfig
-from repro.core.stream import RecoveryService, StreamConfig
-from repro.data.dynamics import SystemSpec, embed_true_coef, generate_trajectory, get_system
 
 DEFAULT_SYSTEMS = "lorenz,damped_oscillator,controlled_pendulum"
 
@@ -50,7 +60,7 @@ def build_stream_fleet(
     n_samples: int,
     noise: float = 0.01,
     seed: int = 0,
-) -> tuple[list[SystemSpec], np.ndarray, np.ndarray, tuple[int, int, int]]:
+):
     """Generate ``n_streams`` trajectories cycling over ``names``, zero-padded
     to the fleet's common (n_state, n_input) dims.
 
@@ -58,6 +68,8 @@ def build_stream_fleet(
     (n_state, n_input, order)). Each stream gets its own noise seed, so two
     streams of the same system are distinct tenants.
     """
+    from repro.data.dynamics import generate_trajectory, get_system
+
     specs = [get_system(n) for n in names]
     dts = {s.dt for s in specs}
     if len(dts) > 1:
@@ -89,7 +101,7 @@ def _theta_mse(theta_phys: np.ndarray, theta_true: np.ndarray) -> float:
 
 
 def run_service(
-    service: RecoveryService,
+    service,
     ys: np.ndarray,  # [R, T_total, n]
     us: np.ndarray,  # [R, T_total, m]
     max_ticks: int,
@@ -131,7 +143,7 @@ def run_service(
     return {"ticks": service.ticks, "wall_s": time.time() - t0, "evictions": evictions}
 
 
-def main() -> int:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
     ap.add_argument("--systems", default=DEFAULT_SYSTEMS, metavar="SYS[,SYS...]")
     ap.add_argument("--streams", type=int, default=12)
@@ -155,6 +167,23 @@ def main() -> int:
         help="stage-fused per-window recovery step (kernels/mr_step) in every tick",
     )
     ap.add_argument(
+        "--plan",
+        action="store_true",
+        help="build the service through repro.api (RecoverySpec -> compile_plan)",
+    )
+    ap.add_argument(
+        "--mesh",
+        type=int,
+        default=1,
+        help="devices sharding the slot axis (requires --plan; 1 = single device)",
+    )
+    ap.add_argument(
+        "--virtual-devices",
+        type=int,
+        default=0,
+        help="set XLA_FLAGS host-platform device count before jax loads (CPU CI)",
+    )
+    ap.add_argument(
         "--tol-factor",
         type=float,
         default=3.0,
@@ -162,23 +191,29 @@ def main() -> int:
     )
     ap.add_argument("--tol-abs", type=float, default=0.05)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    return ap
+
+
+def main() -> int:
+    args = build_parser().parse_args()
+    if args.virtual_devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.virtual_devices} "
+            + os.environ.get("XLA_FLAGS", "")
+        ).strip()
+    if args.mesh > 1 and not args.plan:
+        raise SystemExit("--mesh requires --plan (the sharded service is plan-compiled)")
+
+    # jax loads HERE, after the virtual-device environment is pinned
+    from repro import api
+    from repro.core.stream import RecoveryService, StreamConfig
+    from repro.data.dynamics import embed_true_coef
 
     names = [s.strip() for s in args.systems.split(",") if s.strip()]
     # enough samples that max_steps' worth of ticks never wraps mid-stream
     n_samples = args.buf_len + args.chunk * (args.max_steps // args.steps_per_tick + 2)
     specs, ys, us, (n_state, n_input, order) = build_stream_fleet(
         names, args.streams, n_samples, noise=args.noise, seed=args.seed
-    )
-    cfg = MRConfig(
-        state_dim=n_state,
-        input_dim=n_input,
-        order=order,
-        hidden=args.hidden,
-        dense_hidden=2 * args.hidden,
-        dt=specs[0].dt,
-        encoder="gru",
-        fused=args.fused,
     )
     scfg = StreamConfig(
         buf_len=args.buf_len,
@@ -191,11 +226,39 @@ def main() -> int:
         min_steps=args.min_steps,
         max_steps=args.max_steps,
     )
-    service = RecoveryService(cfg, scfg, args.slots, seed=args.seed, quant=args.quant)
+    spec = api.RecoverySpec(
+        state_dim=n_state,
+        input_dim=n_input,
+        order=order,
+        hidden=args.hidden,
+        dense_hidden=2 * args.hidden,
+        dt=specs[0].dt,
+        encoder="gru",
+        precision="int8_pwl" if args.quant else "fp32",
+        fused=args.fused,
+        mode="stream",
+        lr=args.lr,
+        seed=args.seed,
+        n_slots=args.slots,
+        stream=scfg,
+        mesh_slots=args.mesh,
+    )
+    if args.plan:
+        plan = api.compile_plan(spec)
+        service = plan.make_service()
+        print(f"[serve_mr] plan lowering: {plan.lowering}")
+    else:
+        # legacy construction path (deprecated; kept for compatibility) —
+        # same declarative record, direct service construction
+        service = RecoveryService(
+            spec.to_mr_config(), scfg, args.slots, seed=args.seed, quant=args.quant
+        )
+    cfg = service.cfg
     print(
         f"[serve_mr] streams={args.streams} slots={args.slots} "
         f"K={args.steps_per_tick} windows/slot={scfg.n_windows} "
-        f"library={cfg.n_terms}x{cfg.state_dim} fused={args.fused} quant={args.quant}"
+        f"library={cfg.n_terms}x{cfg.state_dim} fused={args.fused} "
+        f"quant={args.quant} mesh={args.mesh if args.plan else 1}"
     )
     stats = run_service(service, ys, us, args.max_ticks)
     n_done = len(service.results)
@@ -207,39 +270,42 @@ def main() -> int:
         print(f"[serve_mr] FAIL: {args.streams - n_done} streams never recovered")
         return 1
 
-    # one-shot baseline: recover_many on each stream's initial history, same
-    # step budget — the quality bar streaming ingestion must not fall below
-    from repro.core import engine
+    # one-shot baseline: a batch-mode plan over each stream's initial history,
+    # same step budget — the quality bar streaming ingestion must not fall below
+    import dataclasses
+
     from repro.core.library import denormalize_theta
     from repro.data.windows import make_windows
 
     yw_b, uw_b, norms = [], [], []
-    for i, spec in enumerate(specs):
-        hist_y = ys[i, : scfg.buf_len, : spec.state_dim]
+    for i, sysspec in enumerate(specs):
+        hist_y = ys[i, : scfg.buf_len, : sysspec.state_dim]
         hist_u = us[i, : scfg.buf_len] if n_input else None
         yw, uw, norm = make_windows(hist_y, hist_u, window=scfg.window, stride=scfg.stride)
-        yw = np.pad(yw, ((0, 0), (0, 0), (0, n_state - spec.state_dim)))
+        yw = np.pad(yw, ((0, 0), (0, 0), (0, n_state - sysspec.state_dim)))
         yw_b.append(yw)
         if n_input:
             uw_b.append(uw if uw is not None else np.zeros(yw.shape[:2] + (n_input,), np.float32))
         norms.append(norm)
+    base_spec = dataclasses.replace(
+        spec,
+        mode="batch",
+        precision="fp32",
+        steps=scfg.max_steps,
+        stream=None,
+        mesh_slots=1,
+    )
+    base_plan = api.compile_plan(base_spec)
     t0 = time.time()
     theta_base = np.asarray(
-        engine.recover_many(
-            cfg,
-            np.stack(yw_b),
-            np.stack(uw_b) if n_input else None,
-            steps=scfg.max_steps,
-            lr=args.lr,
-            seed=args.seed,
-        )
+        base_plan.run_batch(np.stack(yw_b), np.stack(uw_b) if n_input else None)
     )
-    print(f"[serve_mr] one-shot recover_many baseline: {time.time() - t0:.1f}s")
+    print(f"[serve_mr] one-shot batch-plan baseline: {time.time() - t0:.1f}s")
 
     n_vars = n_state + n_input
     failures = 0
-    for i, spec in enumerate(specs):
-        truth = embed_true_coef(spec, n_state, n_input, order)
+    for i, sysspec in enumerate(specs):
+        truth = embed_true_coef(sysspec, n_state, n_input, order)
         res = service.results[i]
         th_srv = denormalize_theta(
             res.theta, res.mean, res.scale, n_vars=n_vars, order=order, n_state=n_state
@@ -257,7 +323,7 @@ def main() -> int:
         ok = mse_s <= tol
         failures += not ok
         print(
-            f"  stream {i:3d} {spec.name:22s} mse={mse_s:8.4f} "
+            f"  stream {i:3d} {sysspec.name:22s} mse={mse_s:8.4f} "
             f"baseline={mse_b:8.4f} tol={tol:8.4f} steps={res.steps:4d} "
             f"{res.reason:9s} {'ok' if ok else 'FAIL'}"
         )

@@ -52,8 +52,11 @@ def run_recover(systems: list[str], steps: int, lr: float) -> int:
         # report in PHYSICAL units — spurious terms can hide in z-scored
         # coordinates (see merinda.recover_physical_coefficients)
         th_phys = denormalize_theta(
-            th, norm["mean"], norm["scale"],
-            n_vars=cfg.state_dim + cfg.input_dim, order=cfg.order,
+            th,
+            norm["mean"],
+            norm["scale"],
+            n_vars=cfg.state_dim + cfg.input_dim,
+            order=cfg.order,
             n_state=cfg.state_dim,
         )
         nz = int((np.abs(th_phys) > 0.05).sum())

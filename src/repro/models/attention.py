@@ -29,15 +29,35 @@ def attn_specs(a: AttentionConfig, d: int, dtype: str) -> dict:
     s = 1.0 / (d**0.5)
     so = 1.0 / ((a.num_heads * a.head_dim) ** 0.5)
     specs = {
-        "wq": ParamSpec((d, a.num_heads, a.head_dim), ("embed", "heads", "head_dim"), dtype=dtype, scale=s),
-        "wk": ParamSpec((d, a.num_kv_heads, a.head_dim), ("embed", "kv_heads", "head_dim"), dtype=dtype, scale=s),
-        "wv": ParamSpec((d, a.num_kv_heads, a.head_dim), ("embed", "kv_heads", "head_dim"), dtype=dtype, scale=s),
-        "wo": ParamSpec((a.num_heads, a.head_dim, d), ("heads", "head_dim", "embed"), dtype=dtype, scale=so),
+        "wq": ParamSpec(
+            (d, a.num_heads, a.head_dim), ("embed", "heads", "head_dim"), dtype=dtype, scale=s
+        ),
+        "wk": ParamSpec(
+            (d, a.num_kv_heads, a.head_dim),
+            ("embed", "kv_heads", "head_dim"),
+            dtype=dtype,
+            scale=s,
+        ),
+        "wv": ParamSpec(
+            (d, a.num_kv_heads, a.head_dim),
+            ("embed", "kv_heads", "head_dim"),
+            dtype=dtype,
+            scale=s,
+        ),
+        "wo": ParamSpec(
+            (a.num_heads, a.head_dim, d), ("heads", "head_dim", "embed"), dtype=dtype, scale=so
+        ),
     }
     if a.qkv_bias:
-        specs["bq"] = ParamSpec((a.num_heads, a.head_dim), ("heads", "head_dim"), dtype=dtype, init="zeros")
-        specs["bk"] = ParamSpec((a.num_kv_heads, a.head_dim), ("kv_heads", "head_dim"), dtype=dtype, init="zeros")
-        specs["bv"] = ParamSpec((a.num_kv_heads, a.head_dim), ("kv_heads", "head_dim"), dtype=dtype, init="zeros")
+        specs["bq"] = ParamSpec(
+            (a.num_heads, a.head_dim), ("heads", "head_dim"), dtype=dtype, init="zeros"
+        )
+        specs["bk"] = ParamSpec(
+            (a.num_kv_heads, a.head_dim), ("kv_heads", "head_dim"), dtype=dtype, init="zeros"
+        )
+        specs["bv"] = ParamSpec(
+            (a.num_kv_heads, a.head_dim), ("kv_heads", "head_dim"), dtype=dtype, init="zeros"
+        )
     return specs
 
 

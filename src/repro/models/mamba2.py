@@ -34,7 +34,9 @@ def mamba_specs(cfg: ModelConfig, dtype: str) -> dict:
         "dt_bias": ParamSpec((H,), ("ssm_heads",), dtype="float32", init="const", scale=-2.0),
         "a_log": ParamSpec((H,), ("ssm_heads",), dtype="float32", init="zeros"),
         "d_skip": ParamSpec((H,), ("ssm_heads",), dtype="float32", init="ones"),
-        "conv": ParamSpec((s.conv_width, H, P), ("conv", "ssm_heads", "head_dim"), dtype=dtype, scale=0.5),
+        "conv": ParamSpec(
+            (s.conv_width, H, P), ("conv", "ssm_heads", "head_dim"), dtype=dtype, scale=0.5
+        ),
         "norm": ParamSpec((H, P), ("ssm_heads", "head_dim"), dtype=dtype, init="ones"),
         "out": ParamSpec((H, P, d), ("ssm_heads", "head_dim", "embed"), dtype=dtype, scale=si),
     }

@@ -114,7 +114,9 @@ def param_specs(cfg: ModelConfig) -> dict:
             "attn": attn_mod.attn_specs(cfg.attn, d, dt),
             "mlp": mlp_specs(d, cfg.d_ff, dt),
         }
-        specs["enc_layers"] = tree_map_specs(lambda s: stack_layer(s, cfg.encoder_layers), enc_layer)
+        specs["enc_layers"] = tree_map_specs(
+            lambda s: stack_layer(s, cfg.encoder_layers), enc_layer
+        )
         specs["enc_norm"] = rmsnorm_specs(d, dt)
         dec_layer = {
             "ln1": rmsnorm_specs(d, dt),
@@ -145,7 +147,9 @@ def _residual_constraint(x, cfg: ModelConfig):
 
 
 def _dense_layer_fwd(lp, x, positions, cfg: ModelConfig):
-    h = attn_mod.attention(lp["attn"], rmsnorm(lp["ln1"], x, cfg.norm_eps), positions, cfg.attn, chunk=cfg.attn_chunk)
+    h = attn_mod.attention(
+        lp["attn"], rmsnorm(lp["ln1"], x, cfg.norm_eps), positions, cfg.attn, chunk=cfg.attn_chunk
+    )
     x = _residual_constraint(x + h, cfg)
     if cfg.family == "moe":
         h, aux = moe_mod.moe_ffn(lp["moe"], rmsnorm(lp["ln2"], x, cfg.norm_eps), cfg.moe)
@@ -161,7 +165,9 @@ def _ssm_layer_fwd(lp, x, cfg: ModelConfig):
 
 
 def _shared_block_fwd(sp, x, positions, cfg: ModelConfig):
-    h = attn_mod.attention(sp["attn"], rmsnorm(sp["ln1"], x, cfg.norm_eps), positions, cfg.attn, chunk=cfg.attn_chunk)
+    h = attn_mod.attention(
+        sp["attn"], rmsnorm(sp["ln1"], x, cfg.norm_eps), positions, cfg.attn, chunk=cfg.attn_chunk
+    )
     x = _residual_constraint(x + h, cfg)
     h = mlp(sp["mlp"], rmsnorm(sp["ln2"], x, cfg.norm_eps))
     return _residual_constraint(x + h, cfg)
@@ -256,8 +262,12 @@ def _encode_audio(params, frames, cfg: ModelConfig):
 
     def body(lp, x):
         h = attn_mod.attention(
-            lp["attn"], rmsnorm(lp["ln1"], x, cfg.norm_eps), positions, cfg.attn,
-            causal=False, chunk=cfg.attn_chunk,
+            lp["attn"],
+            rmsnorm(lp["ln1"], x, cfg.norm_eps),
+            positions,
+            cfg.attn,
+            causal=False,
+            chunk=cfg.attn_chunk,
         )
         x = _residual_constraint(x + h, cfg)
         h = mlp(lp["mlp"], rmsnorm(lp["ln2"], x, cfg.norm_eps))
@@ -269,10 +279,18 @@ def _encode_audio(params, frames, cfg: ModelConfig):
 
 def _decoder_audio(params, x, enc_out, positions, cfg: ModelConfig):
     def body(lp, x):
-        h = attn_mod.attention(lp["attn"], rmsnorm(lp["ln1"], x, cfg.norm_eps), positions, cfg.attn, chunk=cfg.attn_chunk)
+        h = attn_mod.attention(
+            lp["attn"],
+            rmsnorm(lp["ln1"], x, cfg.norm_eps),
+            positions,
+            cfg.attn,
+            chunk=cfg.attn_chunk,
+        )
         x = _residual_constraint(x + h, cfg)
         kv = attn_mod.cross_kv(lp["cross"], enc_out, cfg.attn)
-        h = attn_mod.cross_attention(lp["cross"], rmsnorm(lp["ln2"], x, cfg.norm_eps), kv, cfg.attn, chunk=cfg.attn_chunk)
+        h = attn_mod.cross_attention(
+            lp["cross"], rmsnorm(lp["ln2"], x, cfg.norm_eps), kv, cfg.attn, chunk=cfg.attn_chunk
+        )
         x = _residual_constraint(x + h, cfg)
         h = mlp(lp["mlp"], rmsnorm(lp["ln3"], x, cfg.norm_eps))
         return _residual_constraint(x + h, cfg), jnp.zeros((), jnp.float32)
@@ -354,7 +372,9 @@ def cache_specs(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
     elif cfg.family == "gru":
         h = cfg.gru_hidden or cfg.d_model
         specs["layers"] = {
-            "state": ParamSpec((L, batch, h), ("layers", "batch", None), dtype="float32", init="zeros")
+            "state": ParamSpec(
+                (L, batch, h), ("layers", "batch", None), dtype="float32", init="zeros"
+            )
         }
     else:
         raise ValueError(cfg.family)
@@ -371,13 +391,19 @@ def prefill(params, batch, cfg: ModelConfig, cache_len: int):
         def body(carry, lp):
             x = carry
             h, kv = attn_mod.prefill_attention(
-                lp["attn"], rmsnorm(lp["ln1"], x, cfg.norm_eps), positions, cfg.attn,
-                cache_len, chunk=cfg.attn_chunk,
+                lp["attn"],
+                rmsnorm(lp["ln1"], x, cfg.norm_eps),
+                positions,
+                cfg.attn,
+                cache_len,
+                chunk=cfg.attn_chunk,
             )
             x = _residual_constraint(x + h, cfg)
             if cfg.family == "moe":
                 # dropless: prefill must route like decode (see moe_ffn)
-                h, _ = moe_mod.moe_ffn(lp["moe"], rmsnorm(lp["ln2"], x, cfg.norm_eps), cfg.moe, dropless=True)
+                h, _ = moe_mod.moe_ffn(
+                    lp["moe"], rmsnorm(lp["ln2"], x, cfg.norm_eps), cfg.moe, dropless=True
+                )
             else:
                 h = mlp(lp["mlp"], rmsnorm(lp["ln2"], x, cfg.norm_eps))
             x = _residual_constraint(x + h, cfg)
@@ -403,8 +429,12 @@ def prefill(params, batch, cfg: ModelConfig, cache_len: int):
                 if with_attn:
                     sp = params["shared_attn"]
                     h, kv = attn_mod.prefill_attention(
-                        sp["attn"], rmsnorm(sp["ln1"], x, cfg.norm_eps), positions, cfg.attn,
-                        cache_len, chunk=cfg.attn_chunk,
+                        sp["attn"],
+                        rmsnorm(sp["ln1"], x, cfg.norm_eps),
+                        positions,
+                        cfg.attn,
+                        cache_len,
+                        chunk=cfg.attn_chunk,
                     )
                     x = _residual_constraint(x + h, cfg)
                     h = mlp(sp["mlp"], rmsnorm(sp["ln2"], x, cfg.norm_eps))
@@ -418,12 +448,22 @@ def prefill(params, batch, cfg: ModelConfig, cache_len: int):
         def body(carry, lp):
             x = carry
             h, kv = attn_mod.prefill_attention(
-                lp["attn"], rmsnorm(lp["ln1"], x, cfg.norm_eps), positions, cfg.attn,
-                cache_len, chunk=cfg.attn_chunk,
+                lp["attn"],
+                rmsnorm(lp["ln1"], x, cfg.norm_eps),
+                positions,
+                cfg.attn,
+                cache_len,
+                chunk=cfg.attn_chunk,
             )
             x = _residual_constraint(x + h, cfg)
             ckv = attn_mod.cross_kv(lp["cross"], enc_out, cfg.attn)
-            h = attn_mod.cross_attention(lp["cross"], rmsnorm(lp["ln2"], x, cfg.norm_eps), ckv, cfg.attn, chunk=cfg.attn_chunk)
+            h = attn_mod.cross_attention(
+                lp["cross"],
+                rmsnorm(lp["ln2"], x, cfg.norm_eps),
+                ckv,
+                cfg.attn,
+                chunk=cfg.attn_chunk,
+            )
             x = _residual_constraint(x + h, cfg)
             h = mlp(lp["mlp"], rmsnorm(lp["ln3"], x, cfg.norm_eps))
             x = _residual_constraint(x + h, cfg)
@@ -462,10 +502,14 @@ def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
         def body(carry, scan_in):
             x = carry
             lp, kv = scan_in
-            h, kv = attn_mod.decode_attention(lp["attn"], rmsnorm(lp["ln1"], x, cfg.norm_eps), pos, kv, cfg.attn)
+            h, kv = attn_mod.decode_attention(
+                lp["attn"], rmsnorm(lp["ln1"], x, cfg.norm_eps), pos, kv, cfg.attn
+            )
             x = x + h
             if cfg.family == "moe":
-                h, _ = moe_mod.moe_ffn(lp["moe"], rmsnorm(lp["ln2"], x, cfg.norm_eps), cfg.moe, dropless=True)
+                h, _ = moe_mod.moe_ffn(
+                    lp["moe"], rmsnorm(lp["ln2"], x, cfg.norm_eps), cfg.moe, dropless=True
+                )
             else:
                 h = mlp(lp["mlp"], rmsnorm(lp["ln2"], x, cfg.norm_eps))
             return x + h, kv
@@ -489,7 +533,9 @@ def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
             app = 0
             for lo, hi, with_attn in segs:
                 x, c = jax.lax.scan(
-                    body, x, (_tree_slice(params["layers"], lo, hi), _tree_slice(cache["layers"], lo, hi))
+                    body,
+                    x,
+                    (_tree_slice(params["layers"], lo, hi), _tree_slice(cache["layers"], lo, hi)),
                 )
                 new_layer_caches.append(c)
                 if with_attn:
@@ -513,11 +559,21 @@ def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
             x = carry
             lp, c = scan_in
             h, kv = attn_mod.decode_attention(
-                lp["attn"], rmsnorm(lp["ln1"], x, cfg.norm_eps), pos, {"k": c["k"], "v": c["v"]}, cfg.attn
+                lp["attn"],
+                rmsnorm(lp["ln1"], x, cfg.norm_eps),
+                pos,
+                {"k": c["k"], "v": c["v"]},
+                cfg.attn,
             )
             x = x + h
             ckv = {"k": c["cross_k"], "v": c["cross_v"]}
-            h = attn_mod.cross_attention(lp["cross"], rmsnorm(lp["ln2"], x, cfg.norm_eps), ckv, cfg.attn, chunk=cfg.attn_chunk)
+            h = attn_mod.cross_attention(
+                lp["cross"],
+                rmsnorm(lp["ln2"], x, cfg.norm_eps),
+                ckv,
+                cfg.attn,
+                chunk=cfg.attn_chunk,
+            )
             x = x + h
             x = x + mlp(lp["mlp"], rmsnorm(lp["ln3"], x, cfg.norm_eps))
             return x, dict(c, k=kv["k"], v=kv["v"])

@@ -27,9 +27,13 @@ def moe_specs(m: MoEConfig, d: int, f: int, dtype: str) -> dict:
     si, sf = 1.0 / (d**0.5), 1.0 / (f**0.5)
     return {
         "router": ParamSpec((d, m.num_experts), ("embed", "expert"), dtype="float32", scale=si),
-        "w_gate": ParamSpec((m.num_experts, d, f), ("expert", "embed", "mlp"), dtype=dtype, scale=si),
+        "w_gate": ParamSpec(
+            (m.num_experts, d, f), ("expert", "embed", "mlp"), dtype=dtype, scale=si
+        ),
         "w_up": ParamSpec((m.num_experts, d, f), ("expert", "embed", "mlp"), dtype=dtype, scale=si),
-        "w_down": ParamSpec((m.num_experts, f, d), ("expert", "mlp", "embed"), dtype=dtype, scale=sf),
+        "w_down": ParamSpec(
+            (m.num_experts, f, d), ("expert", "mlp", "embed"), dtype=dtype, scale=sf
+        ),
     }
 
 

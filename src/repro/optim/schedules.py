@@ -14,7 +14,9 @@ def cosine_schedule(base_lr: float, total_steps: int, final_frac: float = 0.1):
     return lr
 
 
-def linear_warmup_cosine(base_lr: float, warmup_steps: int, total_steps: int, final_frac: float = 0.1):
+def linear_warmup_cosine(
+    base_lr: float, warmup_steps: int, total_steps: int, final_frac: float = 0.1
+):
     cos = cosine_schedule(base_lr, max(total_steps - warmup_steps, 1), final_frac)
 
     def lr(step):

@@ -33,7 +33,9 @@ from jax.sharding import Mesh, PartitionSpec as P
 try:  # jax >= 0.6 moved shard_map out of experimental
     from jax import shard_map as _shard_map_mod  # type: ignore
 
-    _shard_map = _shard_map_mod.shard_map if hasattr(_shard_map_mod, "shard_map") else _shard_map_mod
+    _shard_map = (
+        _shard_map_mod.shard_map if hasattr(_shard_map_mod, "shard_map") else _shard_map_mod
+    )
 except Exception:  # pragma: no cover
     from jax.experimental.shard_map import shard_map as _shard_map  # type: ignore
 
@@ -115,18 +117,14 @@ def pipeline_spmd(layer_fn, stacked, x_mb: jnp.ndarray, mesh: Mesh, axis: str = 
         (state, outs), _ = jax.lax.scan(tick, (state, outs), jnp.arange(M + S - 1))
         # outputs live on the last stage; broadcast to every stage so the
         # caller (loss on replicated head) sees the full tensor
-        outs = jax.lax.psum(
-            jnp.where(idx == S - 1, outs, jnp.zeros_like(outs)), axis
-        )
+        outs = jax.lax.psum(jnp.where(idx == S - 1, outs, jnp.zeros_like(outs)), axis)
         return outs
 
     in_specs = (
         jax.tree.map(lambda _: P(axis), staged),
         P(),  # microbatches replicated across stages
     )
-    fn = shard_map(
-        per_stage, mesh=mesh, in_specs=in_specs, out_specs=P(), check_replication=False
-    )
+    fn = shard_map(per_stage, mesh=mesh, in_specs=in_specs, out_specs=P(), check_replication=False)
     return fn(staged, x_mb)
 
 

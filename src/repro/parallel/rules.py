@@ -251,6 +251,4 @@ constraint_vjp.defvjp(_cvjp_fwd, _cvjp_bwd)
 
 def sp_gather(x: jax.Array) -> jax.Array:
     """Sequence-parallel boundary: gather seq shards fwd, reduce-scatter bwd."""
-    return constraint_vjp(
-        x, ("batch", "seq", "act_embed"), ("batch", "seq_sharded", "act_embed")
-    )
+    return constraint_vjp(x, ("batch", "seq", "act_embed"), ("batch", "seq_sharded", "act_embed"))

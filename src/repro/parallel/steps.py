@@ -154,7 +154,9 @@ def make_prefill_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, rules=No
     return jitted, param_sh, batch_sh, abstract_args
 
 
-def make_decode_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, rules=None, donate: bool = True):
+def make_decode_step(
+    cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, rules=None, donate: bool = True
+):
     """serve_step: ONE new token against a cache of seq_len (decode_*/long_*)."""
     in_specs = M.input_specs(cfg, shape)  # tokens, pos, cache
     param_specs_tree = M.param_specs(cfg)

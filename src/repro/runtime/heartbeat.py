@@ -52,9 +52,7 @@ class HeartbeatRegistry:
     def dead(self, now: float | None = None) -> list[str]:
         now = time.time() if now is None else now
         with self._lock:
-            return sorted(
-                w for w, st in self._workers.items() if now - st.last_seen > self.timeout
-            )
+            return sorted(w for w, st in self._workers.items() if now - st.last_seen > self.timeout)
 
     def mean_times(self) -> dict[str, float]:
         with self._lock:

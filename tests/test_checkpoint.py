@@ -82,7 +82,9 @@ def test_async_manager(tmp_path):
         mgr.maybe_save(step, s)
     mgr.wait()
     assert mgr.latest() == 4
-    r, manifest = mgr.restore_latest(jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), s))
+    r, manifest = mgr.restore_latest(
+        jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), s)
+    )
     assert manifest["step"] == 4
 
 

@@ -56,9 +56,7 @@ def test_kernel_variant_shares_init_and_forward(base):
     p_ref = init_mr(jax.random.key(0), mk(base))
     p_ker = init_mr(jax.random.key(0), mk(base + "_kernel"))
     jax.tree.map(
-        lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
-        p_ref,
-        p_ker,
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)), p_ref, p_ker
     )
     xs = jax.random.normal(jax.random.key(1), (2, 6, 3), jnp.float32)
     th_r, _ = mr_forward(p_ref, mk(base), xs, None)
@@ -81,9 +79,7 @@ def test_register_encoder_roundtrip():
     """Custom rows plug into init_mr/mr_forward with no other changes."""
     spec = encoders.EncoderSpec(
         name="mean_pool_test",
-        init=lambda key, d_in, hidden, dtype=jnp.float32: {
-            "w": jnp.ones((d_in, hidden), dtype)
-        },
+        init=lambda key, d_in, hidden, dtype=jnp.float32: {"w": jnp.ones((d_in, hidden), dtype)},
         encode=lambda p, cfg, xs: jnp.mean(xs, axis=1) @ p["w"],
         flow=None,
         fusable=False,

@@ -80,14 +80,21 @@ def test_recover_many_matches_sequential():
     keys = engine.system_keys(0, len(SYSTEM_SET))
     for i, name in enumerate(SYSTEM_SET):
         th_seq = engine.recover_one(
-            cfg, ys_b[i], None if us_b is None else us_b[i], keys[i],
-            steps=steps, batch_size=bs,
+            cfg,
+            ys_b[i],
+            None if us_b is None else us_b[i],
+            keys[i],
+            steps=steps,
+            batch_size=bs,
         )
         # identical key streams + identical program; vmap may reassociate
         # reductions, and 60 optimizer steps amplify ulp-level noise, so the
         # bound is loose-ish but far below any coefficient scale of interest
         np.testing.assert_allclose(
-            np.asarray(thetas[i]), np.asarray(th_seq), atol=2e-2, rtol=0.0,
+            np.asarray(thetas[i]),
+            np.asarray(th_seq),
+            atol=2e-2,
+            rtol=0.0,
             err_msg=name,
         )
 
@@ -106,8 +113,16 @@ def test_recover_many_learns_each_system():
 
         loss0, _ = mr_loss(params, cfg, ys_b[i], us_i)
         params2, _, metrics = engine.run_epoch(
-            params, adamw_init(params), ys_b[i], us_i, keys[i], 3e-3, None,
-            cfg=cfg, steps=120, batch_size=64,
+            params,
+            adamw_init(params),
+            ys_b[i],
+            us_i,
+            keys[i],
+            3e-3,
+            None,
+            cfg=cfg,
+            steps=120,
+            batch_size=64,
         )
         final = float(np.asarray(metrics["recon_mse"])[-1])
         assert final < 0.5 * float(loss0), (name, final, float(loss0))

@@ -62,8 +62,12 @@ def test_flash_grads_match_reference():
     k = jax.random.normal(jax.random.key(1), (1, 128, 1, 32))
     v = jax.random.normal(jax.random.key(2), (1, 128, 1, 32))
 
-    gk = jax.grad(lambda q, k, v: jnp.sum(flash_attention(q, k, v, interpret=True) ** 2), (0, 1, 2))(q, k, v)
-    gr = jax.grad(lambda q, k, v: jnp.sum(flash_attention(q, k, v, force_reference=True) ** 2), (0, 1, 2))(q, k, v)
+    gk = jax.grad(
+        lambda q, k, v: jnp.sum(flash_attention(q, k, v, interpret=True) ** 2), (0, 1, 2)
+    )(q, k, v)
+    gr = jax.grad(
+        lambda q, k, v: jnp.sum(flash_attention(q, k, v, force_reference=True) ** 2), (0, 1, 2)
+    )(q, k, v)
     for a, b in zip(gk, gr):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-4, rtol=5e-4)
 

@@ -42,9 +42,7 @@ def test_gru_scan_dtypes(dtype):
     _, hs_k = gru_scan(p, xs, h0, interpret=True)
     _, hs_r = gru_scan_ref(p, xs.astype(jnp.float32), h0.astype(jnp.float32))
     tol = 5e-2 if dtype == jnp.bfloat16 else 2e-5
-    np.testing.assert_allclose(
-        np.asarray(hs_k, np.float32), np.asarray(hs_r), atol=tol, rtol=tol
-    )
+    np.testing.assert_allclose(np.asarray(hs_k, np.float32), np.asarray(hs_r), atol=tol, rtol=tol)
 
 
 def test_gru_scan_variable_dt():

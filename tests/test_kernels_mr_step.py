@@ -32,8 +32,7 @@ SHAPES = [
 
 
 def _setup(B, T, n, H, Dh, encoder="gru_flow", seed=0, **kw):
-    cfg = MRConfig(state_dim=n, order=2, hidden=H, dense_hidden=Dh, dt=0.01,
-                   encoder=encoder, **kw)
+    cfg = MRConfig(state_dim=n, order=2, hidden=H, dense_hidden=Dh, dt=0.01, encoder=encoder, **kw)
     params = init_mr(jax.random.key(seed), cfg)
     xs = jax.random.normal(jax.random.key(seed + 1), (B, T, n), jnp.float32)
     return cfg, params, xs

@@ -75,10 +75,7 @@ def test_block_spec_builds_on_installed_jax():
 def test_dispatch_force_reference_wins_everywhere():
     for backend in ("cpu", "tpu", "gpu"):
         for interp in (None, False, True):
-            assert (
-                rt.resolve_dispatch(True, interp, backend=backend)
-                is rt.Dispatch.REFERENCE
-            )
+            assert rt.resolve_dispatch(True, interp, backend=backend) is rt.Dispatch.REFERENCE
 
 
 def test_dispatch_tpu_runs_kernel():

@@ -74,8 +74,14 @@ def test_initial_state_carry():
         x[:, :64], dt[:, :64], A, bm[:, :64], cm[:, :64], D, chunk=32, force_reference=True
     )
     y2, s2 = ssd_scan(
-        x[:, 64:], dt[:, 64:], A, bm[:, 64:], cm[:, 64:], D,
-        chunk=32, initial_state=s1,
+        x[:, 64:],
+        dt[:, 64:],
+        A,
+        bm[:, 64:],
+        cm[:, 64:],
+        D,
+        chunk=32,
+        initial_state=s1,
     )
     np.testing.assert_allclose(np.asarray(y2), np.asarray(y_full[:, 64:]), atol=2e-4, rtol=2e-4)
     np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full), atol=2e-4, rtol=2e-4)

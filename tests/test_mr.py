@@ -43,8 +43,7 @@ def _train(cfg, yw, steps=150, lr=3e-3, seed=0):
 
 def test_merinda_gru_flow_learns_lorenz(lorenz_windows):
     yw, _ = lorenz_windows
-    cfg = MRConfig(state_dim=3, order=2, hidden=32, dense_hidden=64, dt=0.01,
-                   encoder="gru_flow")
+    cfg = MRConfig(state_dim=3, order=2, hidden=32, dense_hidden=64, dt=0.01, encoder="gru_flow")
     params, hist = _train(cfg, yw)
     assert hist[-1]["recon_mse"] < 0.1 * hist[0]["recon_mse"], hist
     assert hist[-1]["recon_mse"] < 0.08
@@ -54,8 +53,7 @@ def test_merinda_gru_flow_learns_lorenz(lorenz_windows):
 def test_baseline_encoders_train(lorenz_windows, encoder):
     """All comparison encoders run and reduce the loss (paper Table 5 set)."""
     yw, _ = lorenz_windows
-    cfg = MRConfig(state_dim=3, order=2, hidden=32, dense_hidden=64, dt=0.01,
-                   encoder=encoder)
+    cfg = MRConfig(state_dim=3, order=2, hidden=32, dense_hidden=64, dt=0.01, encoder=encoder)
     params, hist = _train(cfg, yw, steps=100)
     assert np.isfinite(hist[-1]["loss"])
     assert hist[-1]["recon_mse"] < 0.6 * hist[0]["recon_mse"], (encoder, hist)
@@ -125,7 +123,9 @@ def test_sindy_dynamics_forward():
     f = sindy_dynamics(order=2)
     t = jnp.asarray(ts[:200])
     y_sim = odeint(f, jnp.asarray(ys[0]), t, args=fit.coef, method="rk4")
-    rel = float(jnp.mean((y_sim - jnp.asarray(ys[:200])) ** 2) / jnp.mean(jnp.asarray(ys[:200]) ** 2))
+    rel = float(
+        jnp.mean((y_sim - jnp.asarray(ys[:200])) ** 2) / jnp.mean(jnp.asarray(ys[:200]) ** 2)
+    )
     assert rel < 0.05, rel
 
 
@@ -157,11 +157,10 @@ def test_recover_physical_coefficients_lotka():
     ts, ys, us = generate_trajectory("lotka_volterra")
     yw, uw, norm = make_windows(ys, us, window=32, stride=4)
     cfg = MRConfig(state_dim=2, order=2, hidden=32, dense_hidden=64, dt=spec.dt)
-    params, hist = train_mr(cfg, jnp.asarray(yw), None, steps=250, lr=3e-3,
-                            batch_size=64, log_every=249, norm=norm)
-    theta = recover_physical_coefficients(
-        params, cfg, jnp.asarray(yw), None, norm, n_active=4
+    params, hist = train_mr(
+        cfg, jnp.asarray(yw), None, steps=250, lr=3e-3, batch_size=64, log_every=249, norm=norm
     )
+    theta = recover_physical_coefficients(params, cfg, jnp.asarray(yw), None, norm, n_active=4)
     true = spec.true_coef()
     # the two dominant linear terms must be recovered with the right sign
     # and within 50% magnitude (h -> dh/dt positive, l -> dl/dt negative)

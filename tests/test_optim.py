@@ -16,8 +16,7 @@ def test_adamw_matches_reference_formula():
     g = {"w": jnp.asarray([0.1, 0.2]), "b": jnp.asarray([-0.3])}
     lr, b1, b2, eps, wd = 1e-2, 0.9, 0.999, 1e-8, 0.1
     st = adamw_init(p)
-    new_p, new_st = adamw_update(g, st, p, lr=lr, b1=b1, b2=b2, eps=eps,
-                                 weight_decay=wd)
+    new_p, new_st = adamw_update(g, st, p, lr=lr, b1=b1, b2=b2, eps=eps, weight_decay=wd)
     for k in p:
         m = (1 - b1) * np.asarray(g[k])
         v = (1 - b2) * np.asarray(g[k]) ** 2

@@ -37,7 +37,8 @@ def test_library_term_count(n_vars, order):
 
 
 @given(
-    st.integers(1, 4), st.integers(1, 3),
+    st.integers(1, 4),
+    st.integers(1, 3),
     st.lists(st.floats(-3, 3, allow_nan=False), min_size=4, max_size=4),
 )
 def test_library_features_match_exponents(n_vars, order, vals):
@@ -49,7 +50,8 @@ def test_library_features_match_exponents(n_vars, order, vals):
 
 
 @given(
-    st.integers(1, 3), st.integers(1, 3),
+    st.integers(1, 3),
+    st.integers(1, 3),
     st.lists(st.floats(-2, 2, allow_nan=False), min_size=3, max_size=3),
     st.lists(st.floats(0.3, 3, allow_nan=False), min_size=3, max_size=3),
 )
@@ -152,16 +154,30 @@ MESHES = [
     {"data": 4, "model": 2},
 ]
 
+AXIS_NAMES = [
+    None,
+    "batch",
+    "seq",
+    "embed",
+    "heads",
+    "kv_heads",
+    "mlp",
+    "vocab",
+    "expert",
+    "cache_seq",
+    "seq_sharded",
+]
+
 
 @given(
     st.sampled_from(MESHES),
     st.lists(
         st.tuples(
-            st.sampled_from([None, "batch", "seq", "embed", "heads", "kv_heads",
-                             "mlp", "vocab", "expert", "cache_seq", "seq_sharded"]),
+            st.sampled_from(AXIS_NAMES),
             st.sampled_from([1, 2, 3, 8, 16, 32, 64, 256, 4096]),
         ),
-        min_size=1, max_size=4,
+        min_size=1,
+        max_size=4,
     ),
 )
 def test_partition_spec_invariants(mesh_sizes, dims):

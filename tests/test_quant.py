@@ -78,9 +78,7 @@ def test_quantize_fixed_rounds_to_grid():
 
 def test_fake_quant_ste_gradient_is_identity():
     """Straight-through estimator: d(fake_quant)/dx == 1 even at clip."""
-    g = jax.grad(lambda x: jnp.sum(fake_quant_ste(x, 2, 2)))(
-        jnp.asarray([0.3, -5.0, 100.0])
-    )
+    g = jax.grad(lambda x: jnp.sum(fake_quant_ste(x, 2, 2)))(jnp.asarray([0.3, -5.0, 100.0]))
     np.testing.assert_array_equal(np.asarray(g), 1.0)
 
 

@@ -35,12 +35,10 @@ def test_serving_driver_completes_all_requests():
 
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC
-    p = subprocess.run(
-        [sys.executable, "-m", "repro.launch.serve", "--arch", "qwen2.5-3b",
-         "--requests", "6", "--slots", "2", "--prompt-len", "8",
-         "--max-new", "6", "--cache-len", "32"],
-        capture_output=True, text=True, env=env, timeout=560, cwd=REPO,
-    )
+    cmd = [sys.executable, "-m", "repro.launch.serve", "--arch", "qwen2.5-3b"]
+    cmd += ["--requests", "6", "--slots", "2", "--prompt-len", "8"]
+    cmd += ["--max-new", "6", "--cache-len", "32"]
+    p = subprocess.run(cmd, capture_output=True, text=True, env=env, timeout=560, cwd=REPO)
     assert p.returncode == 0, p.stderr[-2000:]
     assert "requests=6" in p.stdout
 
