@@ -224,7 +224,13 @@ def ticks_per_sec(mesh_slots, slots, n_ticks, repeats):
         for t in range(1, n_ticks):
             svc.tick_once(chunks[t])
         best = max(best, (n_ticks - 1) / (time.perf_counter() - t0))
-    return best
+    # host-boundary accounting (deterministic): every device->host readback
+    # is a sync point, every post-admission shard re-pin is a reshard
+    return {{
+        "tps": best,
+        "host_syncs_per_tick": svc.counters["host_syncs"] / svc.ticks,
+        "reshards": svc.counters["reshards"],
+    }}
 
 
 out = {{
@@ -274,13 +280,16 @@ def run_mesh_scaling(
             f"mesh-scaling subprocess failed (rc={p.returncode})\n"
             f"stdout:\n{p.stdout[-2000:]}\nstderr:\n{p.stderr[-2000:]}"
         )
-    tps = {int(k): v for k, v in json.loads(marker[0][len("MESHBENCH ") :]).items()}
+    stats = {int(k): v for k, v in json.loads(marker[0][len("MESHBENCH ") :]).items()}
+    tps = {m: s["tps"] for m, s in stats.items()}
     scaling = tps[2] / tps[1]
     rows = [
         (
             f"stream/mesh{m}_ticks_per_sec",
             1e6 / tps[m],
-            f"slots={slots};{slots * tps[m]:.1f} slots/s;{device_count} virtual devices",
+            f"slots={slots};{slots * tps[m]:.1f} slots/s;{device_count} virtual devices;"
+            f"host_syncs/tick={stats[m]['host_syncs_per_tick']:.1f};"
+            f"reshards={stats[m]['reshards']}",
         )
         for m in sorted(tps)
     ]
@@ -302,6 +311,15 @@ def run_mesh_scaling(
                 f"mesh{m}_slots_per_sec": round(slots * tps[m], 2) for m in sorted(tps)
             },
             "mesh4_over_mesh1": round(tps[4] / tps[1], 3),
+            # host-boundary baseline for the phase-2 per-device-admission
+            # work (ROADMAP): ALL admissions funnel through one host queue,
+            # so every readback/reshard is a cross-mesh sync the sharded
+            # service pays; these counters are what that redesign must cut.
+            **{
+                f"mesh{m}_host_syncs_per_tick": round(stats[m]["host_syncs_per_tick"], 2)
+                for m in sorted(stats)
+            },
+            **{f"mesh{m}_reshards": stats[m]["reshards"] for m in sorted(stats)},
         },
     }
     return rows, metrics

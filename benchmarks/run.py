@@ -65,6 +65,7 @@ def run_smoke() -> int:
         "cycles",
         gated={
             "ltc_over_kernel_interval_ratio": m_cycles["ltc_over_kernel_interval_ratio"],
+            "ltc_fused_over_ode_speedup": m_cycles["ltc_fused_over_ode_speedup"],
             "engine_loop_over_scan_speedup": m_engine["loop_over_scan_speedup"],
         },
         info={

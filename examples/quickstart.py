@@ -31,6 +31,8 @@ def main():
         dense_hidden=64,
         dt=spec_sys.dt,
         encoder="gru_flow",
+        fused=True,  # stage-fused per-window step (kernels/mr_step)
+        block_b="auto",  # batch tile fitted to the auto-detected VMEM budget
         mode="offline",
         steps=300,
         lr=3e-3,

@@ -35,14 +35,18 @@ def main():
     print(f"AID traces: {ys.shape} (5-min CGM samples), windows {yw.shape}")
 
     results = {}
-    for name, encoder, qat in (
-        ("MERINDA (gru_flow)", "gru_flow", None),
+    for name, encoder, qat, fused in (
+        ("MERINDA (gru_flow)", "gru_flow", None, False),
         (
             "MERINDA int8-QAT",
             "gru_flow",
             QuantConfig(act_int_bits=4, act_frac_bits=10, weight_int_bits=2, weight_frac_bits=12),
+            False,
         ),
-        ("LTC (iterative ODE)", "ltc", None),
+        # the paper's primary baseline runs through the fused multi-substep
+        # mr_step variant: solver substeps + head in ONE stage (reference
+        # math off-TPU; the fused-solver Pallas kernel on TPU)
+        ("LTC (fused substeps)", "ltc", None, True),
     ):
         plan = api.compile_plan(
             api.RecoverySpec(
@@ -54,6 +58,7 @@ def main():
                 dt=0.1,
                 encoder=encoder,
                 qat=qat,
+                fused=fused,
                 mode="offline",
                 steps=args.steps,
                 lr=3e-3,

@@ -64,6 +64,7 @@ class Lowering:
     qat: bool  # fixed-point fake-quant during training
     block_b: int | None  # resolved fused-stage batch tile (None = full batch)
     vmem_bytes: int | None  # modeled fused-stage VMEM residency at block_b
+    vmem_budget_bytes: int | None  # resolved budget the "auto" tile fit into
     mesh_shape: tuple[int, ...]  # device mesh over the slot axis (stream mode)
 
 
@@ -192,11 +193,20 @@ def _resolve_lowering(spec: RecoverySpec, row: encoders.EncoderSpec) -> Lowering
         dispatch = "pallas" if rt.on_tpu() else "reference"
     else:
         dispatch = "xla"
-    block_b, vmem = None, None
+    block_b, vmem, budget = None, None, None
     if spec.fused:
         batch = _compile_time_batch(spec)
         if spec.block_b == "auto":
-            block_b = tiling.auto_block_b(spec.to_mr_config(), batch, spec.vmem_budget_bytes)
+            # explicit override wins; otherwise the budget is auto-detected
+            # from the local device (platform table + memory_stats when the
+            # runtime exposes a VMEM figure) — ROADMAP "auto-detect the
+            # budget" item. The resolved figure lands in the Lowering record.
+            budget = (
+                spec.vmem_budget_bytes
+                if spec.vmem_budget_bytes is not None
+                else tiling.detect_vmem_budget()
+            )
+            block_b = tiling.auto_block_b(spec.to_mr_config(), batch, budget)
         elif isinstance(spec.block_b, int):
             if batch is not None and batch % spec.block_b != 0:
                 # the kernel would silently drop a non-dividing tile at run
@@ -218,6 +228,7 @@ def _resolve_lowering(spec: RecoverySpec, row: encoders.EncoderSpec) -> Lowering
         qat=spec.qat is not None,
         block_b=block_b,
         vmem_bytes=vmem,
+        vmem_budget_bytes=budget,
         mesh_shape=(spec.mesh_slots,) if spec.mode == "stream" else (),
     )
 
@@ -238,10 +249,11 @@ def _compile_time_batch(spec: RecoverySpec) -> int | None:
 def compile_plan(spec: RecoverySpec) -> RecoveryPlan:
     """Validate + lower a RecoverySpec; see the module docstring."""
     row = encoders.get_encoder(spec.encoder)  # unknown name fails here
-    if spec.precision == "int8_pwl" and row.flow is not False:
+    if spec.precision == "int8_pwl" and not row.int8:
         raise ValueError(
-            f"precision='int8_pwl' serves through the fixed-point GRU stage "
-            f"(paper Eq. 12-15) and requires encoder='gru', got {spec.encoder!r}"
+            f"precision='int8_pwl' serves through a fixed-point fused stage, "
+            f"implemented for the families with a PWL activation mapping "
+            f"({encoders.int8_names()}); got {spec.encoder!r}"
         )
     if spec.qat is not None and row.flow is None:
         raise ValueError(

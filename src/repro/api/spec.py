@@ -60,7 +60,10 @@ class RecoverySpec:
     qat: QuantConfig | None = None  # fixed-point fake-quant during training
     fused: bool = False  # stage-fused per-window step (kernels/mr_step)
     block_b: int | str | None = None  # fused batch tile: int, None, or "auto"
-    vmem_budget_bytes: int | None = None  # budget the "auto" tile fits into
+    # budget the "auto" tile fits into; None = auto-detect from the local
+    # device (kernels/mr_step/tiling.detect_vmem_budget: platform table +
+    # memory_stats when available) — the explicit override always wins
+    vmem_budget_bytes: int | None = None
 
     # -- execution ----------------------------------------------------------
     mode: str = "offline"  # "offline" | "batch" | "stream"

@@ -29,6 +29,12 @@ An ``EncoderSpec`` is a frozen record:
     flow      time-gated flow update (None for non-GRU families)
     fusable   the fused mr_step kernel family implements this encoder
     kernel    encode routes through a Pallas kernel family
+    int8      the fixed-point fused serving stage (int8 weights + PWL
+              activations) implements this family — the standard GRU
+              (paper Eq. 12-15) and the LTC substep cell (whose only
+              nonlinearity is the recurrent sigmoid); the flow gate's
+              softplus/tanh-of-dt chain has no PWL mapping, so the flow
+              families stay float-serving
 
 ``encode`` owns the per-family quantization-aware weight treatment (the QAT
 fake-quant previously inlined in merinda._encode), so callers never touch
@@ -56,6 +62,12 @@ class EncoderSpec(NamedTuple):
     flow: bool | None  # GRU families: time-gated flow update?
     fusable: bool  # kernels/mr_step implements this encoder
     kernel: bool  # encode routes through a Pallas kernel
+    int8: bool = False  # fixed-point fused serving stage exists
+    # which mr_step kernel family (and VMEM residency model) a fusable row
+    # lowers to: "gru" (single gated update), "ltc" (semi-implicit solver
+    # substeps) or "node" (Euler substeps). Custom fusable rows default to
+    # "gru" and must match its GRUParams layout.
+    family: str = "gru"
 
 
 _REGISTRY: dict[str, EncoderSpec] = {}
@@ -81,15 +93,22 @@ def fusable_names() -> list[str]:
     return [n for n in encoder_names() if _REGISTRY[n].fusable]
 
 
+def int8_names() -> list[str]:
+    """Encoders with a fixed-point (int8 + PWL) fused serving stage."""
+    return [n for n in encoder_names() if _REGISTRY[n].int8]
+
+
 def validate_config(cfg) -> EncoderSpec:
     """Eager (compile-time) validation of an MRConfig's encoder request.
 
     Raises ValueError for an unregistered encoder name AND for
-    ``fused=True`` with a non-fusable encoder (``ltc``, ``node``) — the
-    entry points (engine, streaming service, ``repro.api.compile_plan``)
-    call this so a bad combination fails before any tracing, not as an
-    opaque error deep inside a jitted scan (and never silently falls back
-    to the unfused stage sequence).
+    ``fused=True`` with a non-fusable encoder (a custom registry row
+    without an mr_step lowering — every built-in family, including the
+    multi-substep ``ltc``/``node`` cells, now has one) — the entry points
+    (engine, streaming service, ``repro.api.compile_plan``) call this so a
+    bad combination fails before any tracing, not as an opaque error deep
+    inside a jitted scan (and never silently falls back to the unfused
+    stage sequence).
     """
     spec = get_encoder(cfg.encoder)
     if getattr(cfg, "fused", False) and not spec.fusable:
@@ -150,6 +169,7 @@ def _gru_row(name: str, *, flow: bool, kernel: bool) -> EncoderSpec:
         flow=flow,
         fusable=True,
         kernel=kernel,
+        int8=not flow,  # the int8 stage implements the standard cell only
     )
 
 
@@ -163,8 +183,10 @@ register_encoder(
         init=init_ltc,
         encode=_encode_ltc,
         flow=None,
-        fusable=False,
+        fusable=True,  # multi-substep fused-solver mr_step variant
         kernel=False,
+        int8=True,  # substep nonlinearity is one sigmoid -> PWL-able
+        family="ltc",
     )
 )
 register_encoder(
@@ -173,7 +195,8 @@ register_encoder(
         init=_init_node,
         encode=_encode_node,
         flow=None,
-        fusable=False,
+        fusable=True,  # multi-substep Euler mr_step variant
         kernel=False,
+        family="node",
     )
 )

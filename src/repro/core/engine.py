@@ -142,7 +142,13 @@ def train_mr_scan(
     history-of-dicts format.
     """
     from repro import api
+    from repro.deprecation import warn_deprecated_once
 
+    warn_deprecated_once(
+        "engine.train_mr_scan",
+        "engine.train_mr_scan is deprecated; build a RecoverySpec(mode='offline') "
+        "and run api.compile_plan(spec).run_offline(...) instead",
+    )
     spec = api.RecoverySpec.from_mr_config(
         cfg, mode="offline", steps=steps, lr=lr, seed=seed, batch_size=batch_size
     )
@@ -222,7 +228,13 @@ def recover_many(
     ``stack_systems`` to zero-pad a heterogeneous set to common dims.
     """
     from repro import api
+    from repro.deprecation import warn_deprecated_once
 
+    warn_deprecated_once(
+        "engine.recover_many",
+        "engine.recover_many is deprecated; build a RecoverySpec(mode='batch') "
+        "and run api.compile_plan(spec).run_batch(...) instead",
+    )
     spec = api.RecoverySpec.from_mr_config(
         cfg,
         mode="batch",

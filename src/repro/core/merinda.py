@@ -23,8 +23,11 @@ estimates plus q input-shift values; sparsity is induced by an L1 penalty and
 ``MRConfig.fused=True`` replaces the encode -> head stage sequence with the
 stage-FUSED per-window kernel family (kernels/mr_step): scan + RMS-norm +
 dense head execute as one ``pallas_call`` with the hidden state resident in
-VMEM (the paper's BRAM-tiling dataflow). The fused and unfused paths share
-identical math; off-TPU the fused op resolves to the same reference program
+VMEM (the paper's BRAM-tiling dataflow). Every registry encoder has a fused
+lowering — the GRU(-flow) single-update kernels and the multi-substep
+LTC/NODE fused-solver variants (K solver substeps per input step, unrolled
+in-kernel). The fused and unfused paths share identical math; off-TPU the
+fused op resolves to the same reference program
 (kernels/runtime.resolve_dispatch).
 """
 

@@ -40,8 +40,19 @@ def init_node_encoder(
     )
 
 
-def node_encode(params: NodeEncoderParams, xs: jnp.ndarray, cfg) -> jnp.ndarray:
-    """xs: [B, T, d_in] -> h_T [B, hidden]. cfg provides dt and ltc_substeps."""
+def node_scan(
+    params: NodeEncoderParams,
+    xs: jnp.ndarray,
+    h0: jnp.ndarray,
+    dt: float | jnp.ndarray = 1.0,
+    n_substeps: int = 6,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """ODE-RNN over a sequence. xs: [B, T, d_in] -> (h_T, hs [B, T, H]).
+
+    Single source of truth for the NODE step math — ``node_encode`` (the
+    registry row) and the fused mr_step oracle (kernels/mr_step/ref.py)
+    both delegate here, mirroring ``ltc.ltc_scan``.
+    """
 
     def field(h, u, t, args):
         z = jnp.tanh(h @ params.w_f1 + params.b_f1)
@@ -49,12 +60,18 @@ def node_encode(params: NodeEncoderParams, xs: jnp.ndarray, cfg) -> jnp.ndarray:
 
     def step(h, x_t):
         h = multi_step_solver_cell(
-            field, h, x_t, jnp.asarray(cfg.dt, h.dtype), method="euler", n_substeps=cfg.ltc_substeps
+            field, h, x_t, jnp.asarray(dt, h.dtype), method="euler", n_substeps=n_substeps
         )
         h = h + x_t @ params.w_in + params.b_in
-        return h, None
+        return h, h
 
+    h_T, hs = jax.lax.scan(step, h0, jnp.swapaxes(xs, 0, 1))
+    return h_T, jnp.swapaxes(hs, 0, 1)
+
+
+def node_encode(params: NodeEncoderParams, xs: jnp.ndarray, cfg) -> jnp.ndarray:
+    """xs: [B, T, d_in] -> h_T [B, hidden]. cfg provides dt and ltc_substeps."""
     B = xs.shape[0]
     h0 = jnp.zeros((B, params.w_f1.shape[0]), xs.dtype)
-    h_T, _ = jax.lax.scan(step, h0, jnp.swapaxes(xs, 0, 1))
+    h_T, _ = node_scan(params, xs, h0, dt=cfg.dt, n_substeps=cfg.ltc_substeps)
     return h_T

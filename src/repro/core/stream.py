@@ -324,10 +324,10 @@ def readout_theta(
     """Serving readout: mean-over-windows Theta (normalized coordinates).
 
     quant=True serves through the stage-FUSED fixed-point step
-    (kernels/mr_step int8: int8 gate + head weights with per-channel scales,
-    PWL sigmoid/tanh; interpret mode off-TPU) — the paper's serving
-    configuration as one kernel. Requires a standard-GRU encoder
-    (the int8 kernel implements paper Eq. 12-15, i.e. encoder='gru').
+    (kernels/mr_step int8: int8 cell + head weights with per-channel scales,
+    PWL activations; interpret mode off-TPU) — the paper's serving
+    configuration as one kernel. Requires an encoder whose cell has a PWL
+    mapping: 'gru' (paper Eq. 12-15) or 'ltc' (sigmoid-only substep).
     """
     if not quant:
         theta, _ = mr_forward(params, cfg, yw, uw)
@@ -371,9 +371,24 @@ class RecoveryService:
         self.cfg, self.scfg, self.n_slots = cfg, scfg, n_slots
         self.quant = quant
         self.mesh = mesh  # jax Mesh over ("slots",) | None = single device
+        # Host-boundary accounting for the mesh-scaling work (phase 2 of the
+        # ROADMAP multi-device item): every device->host readback is a sync
+        # point the sharded service pays ACROSS the mesh, and every re-pin of
+        # the slot shard after admission is a reshard. bench_stream reports
+        # these per tick so the per-device-admission redesign has a baseline.
+        self.counters = {"host_syncs": 0, "reshards": 0}
         # the compiled tick: a RecoveryPlan passes its pre-bound program so
         # the service runs EXACTLY what the plan compiled; standalone
         # construction binds the module-level program with this config
+        if tick_program is None:
+            from repro.deprecation import warn_deprecated_once
+
+            warn_deprecated_once(
+                "stream.RecoveryService",
+                "direct RecoveryService(...) construction is deprecated; build a "
+                "RecoverySpec(mode='stream') and use api.compile_plan(spec)"
+                ".make_service() instead",
+            )
         self._tick = tick_program or functools.partial(tick, cfg=cfg, scfg=scfg)
         self.key = jax.random.key(seed)
         self.state = init_slots(self.key, cfg, scfg, n_slots)
@@ -390,6 +405,17 @@ class RecoveryService:
         if self.mesh is None:
             return contextlib.nullcontext()
         return use_mesh_rules(self.mesh, SLOT_RULES)
+
+    def _host_read(self, leaf) -> np.ndarray:
+        """Counted device->host readback (each is one host-sync point; on a
+        sharded service it gathers the slot axis across the whole mesh)."""
+        self.counters["host_syncs"] += 1
+        return np.asarray(leaf)
+
+    def _reshard(self):
+        """Re-pin the slot shard after a host-driven state update."""
+        self.counters["reshards"] += 1
+        self.state = shard_slots(self.state, self.mesh)
 
     # -- admission ----------------------------------------------------------
     def submit(self, stream_id: int, history_y: np.ndarray, history_u: np.ndarray | None = None):
@@ -408,7 +434,7 @@ class RecoveryService:
             if self.mesh is not None:
                 # same propagation hazard as the admit path below: the
                 # update mixes in replicated scalars, so re-pin the shard
-                self.state = shard_slots(self.state, self.mesh)
+                self._reshard()
             return None
         stream_id, buf_y, buf_u = self.queue.popleft()
         if stream_id in self.warm:
@@ -429,13 +455,13 @@ class RecoveryService:
         if self.mesh is not None:
             # admission mixes replicated single-slot operands into the update;
             # re-pin the slot shard so every later tick sees the same layout
-            self.state = shard_slots(self.state, self.mesh)
+            self._reshard()
         return stream_id
 
     def fill_slots(self) -> list[int]:
         """Bootstrap: admit queued streams into every empty slot."""
         admitted = []
-        active = np.asarray(self.state.active)
+        active = self._host_read(self.state.active)
         for s in range(self.n_slots):
             if not active[s] and self.queue:
                 sid = self._admit_into(s)
@@ -446,11 +472,11 @@ class RecoveryService:
     # -- the tick loop ------------------------------------------------------
     def slot_streams(self) -> list[int]:
         """stream_id per slot (-1 = empty); the driver feeds chunks by this."""
-        return [int(i) for i in np.asarray(self.state.stream_id)]
+        return [int(i) for i in self._host_read(self.state.stream_id)]
 
     def _evict(self, slot: int, reason: str) -> StreamResult:
         st = self.state
-        sid = int(np.asarray(st.stream_id[slot]))
+        sid = int(self._host_read(st.stream_id[slot]))
         theta = st.theta[slot]
         if self.quant:
             yw, uw = _slot_windows(
@@ -460,10 +486,10 @@ class RecoveryService:
             theta = readout_theta(slot_params, self.cfg, yw, uw, quant=True)
         res = StreamResult(
             stream_id=sid,
-            theta=np.asarray(theta),
-            mean=np.asarray(st.mean[slot]),
-            scale=np.asarray(st.scale[slot]),
-            steps=int(np.asarray(st.steps[slot])),
+            theta=self._host_read(theta),
+            mean=self._host_read(st.mean[slot]),
+            scale=self._host_read(st.scale[slot]),
+            steps=int(self._host_read(st.steps[slot])),
             reason=reason,
         )
         self.results[sid] = res
@@ -483,9 +509,9 @@ class RecoveryService:
                 jax.random.fold_in(self.key, self.ticks),
             )
         self.ticks += 1
-        delta = np.asarray(self.state.delta)
-        steps = np.asarray(self.state.steps)
-        active = np.asarray(self.state.active)
+        delta = self._host_read(self.state.delta)
+        steps = self._host_read(self.state.steps)
+        active = self._host_read(self.state.active)
         evicted = []
         for s in range(S):
             if not active[s]:
@@ -499,12 +525,12 @@ class RecoveryService:
         return {
             "tick": self.ticks,
             "evicted": evicted,
-            "active": int(np.asarray(self.state.active).sum()),
+            "active": int(self._host_read(self.state.active).sum()),
             "delta": delta,
-            "loss": np.asarray(self.state.loss),
+            "loss": self._host_read(self.state.loss),
             "steps": steps,
         }
 
     @property
     def done(self) -> bool:
-        return not self.queue and not bool(np.asarray(self.state.active).any())
+        return not self.queue and not bool(self._host_read(self.state.active).any())

@@ -1,0 +1,29 @@
+"""Once-per-process DeprecationWarnings for the legacy entry points.
+
+The deprecated wrappers (``engine.train_mr_scan``, ``engine.recover_many``,
+direct ``RecoveryService(...)`` construction) sit on hot paths — a streaming
+service tick loop or a benchmark sweep calls them hundreds of times — so a
+plain ``warnings.warn`` floods the logs with identical lines (Python's
+default ``__main__`` filter dedupes per call SITE and module, which resets
+under pytest and still repeats across differing stacklevels). This registry
+dedupes by KEY: the first call per process warns, every later one is free.
+"""
+
+from __future__ import annotations
+
+import warnings
+
+_WARNED: set[str] = set()
+
+
+def warn_deprecated_once(key: str, message: str, *, stacklevel: int = 3) -> None:
+    """Emit ``DeprecationWarning(message)`` once per process for ``key``."""
+    if key in _WARNED:
+        return
+    _WARNED.add(key)
+    warnings.warn(message, DeprecationWarning, stacklevel=stacklevel)
+
+
+def reset_warned() -> None:
+    """Clear the registry (tests use this to re-arm the warnings)."""
+    _WARNED.clear()

@@ -1,20 +1,24 @@
 """Pure-jnp oracle for the fused MR per-window step (scan + norm + head).
 
 Single source of truth for the stage math: the GRU(-flow) scan delegates to
-core.neural_flow.gru_scan_ref and the head block IS merinda.head_math (one
-shared function — RMS-normalize, optional activation fake-quant, relu MLP —
-not a hand-synced copy). The Pallas kernel (kernel.py) is tested against
-this module; the weight-side QAT fake-quant is applied by ops.py BEFORE
-either path so both consume identical weights.
+core.neural_flow.gru_scan_ref, the multi-substep variants delegate to
+core.ltc.ltc_scan / core.node_mr.node_scan, and the head block IS
+merinda.head_math (one shared function — RMS-normalize, optional activation
+fake-quant, relu MLP — not a hand-synced copy). The Pallas kernels
+(kernel.py) are tested against this module; the weight-side QAT fake-quant
+is applied by ops.py BEFORE either path so both consume identical weights.
 """
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
+from repro.core.ltc import LTCParams, ltc_scan
 from repro.core.merinda import head_math
 from repro.core.neural_flow import GRUParams, gru_scan_ref
-from repro.core.quant import PWLTable
+from repro.core.node_mr import NodeEncoderParams, node_scan
+from repro.core.quant import PWLTable, pwl_apply
 from repro.kernels.gru_scan.ref import gru_scan_int8_reference
 
 # the head stage of the fused oracle is literally the unfused head math
@@ -40,6 +44,143 @@ def mr_step_reference(
     params = GRUParams(w=jnp.concatenate([wx, wh], axis=0), b=b, time_scale=time_scale)
     h_T, _ = gru_scan_ref(params, xs, h0, dts=dts, flow=flow)
     return head_math(h_T, w1, b1, w2, b2, act_bits=act_bits)
+
+
+def mr_step_ltc_reference(
+    xs: jnp.ndarray,  # [B, T, D] (already normalized)
+    h0: jnp.ndarray,  # [B, H]
+    w_in: jnp.ndarray,  # [D, H]
+    w_rec: jnp.ndarray,  # [H, H]
+    bias: jnp.ndarray,  # [H]
+    a: jnp.ndarray,  # [H]   equilibrium target
+    inv_tau: jnp.ndarray,  # [H]
+    w1: jnp.ndarray,  # [H, Dh]
+    b1: jnp.ndarray,  # [Dh]
+    w2: jnp.ndarray,  # [Dh, K]
+    b2: jnp.ndarray,  # [K]
+    *,
+    dt: float = 1.0,
+    n_substeps: int = 6,
+    act_bits: tuple[int, int] | None = None,
+) -> jnp.ndarray:
+    """Fused multi-substep LTC oracle (semi-implicit fused-solver substeps).
+
+    Delegates the substep math to core.ltc.ltc_scan — identical semantics to
+    the unfused ``encoder="ltc"`` stage sequence. Returns the raw head
+    output [B, K].
+    """
+    params = LTCParams(w_in=w_in, w_rec=w_rec, bias=bias, a=a, inv_tau=inv_tau)
+    h_T, _ = ltc_scan(params, xs, h0, dt=dt, n_substeps=n_substeps)
+    return head_math(h_T, w1, b1, w2, b2, act_bits=act_bits)
+
+
+def mr_step_node_reference(
+    xs: jnp.ndarray,  # [B, T, D]
+    h0: jnp.ndarray,  # [B, H]
+    w_f1: jnp.ndarray,  # [H, H]  vector-field MLP
+    b_f1: jnp.ndarray,  # [H]
+    w_f2: jnp.ndarray,  # [H, H]
+    b_f2: jnp.ndarray,  # [H]
+    w_in: jnp.ndarray,  # [D, H]  observation injection
+    b_in: jnp.ndarray,  # [H]
+    w1: jnp.ndarray,  # [H, Dh]
+    b1: jnp.ndarray,  # [Dh]
+    w2: jnp.ndarray,  # [Dh, K]
+    b2: jnp.ndarray,  # [K]
+    *,
+    dt: float = 1.0,
+    n_substeps: int = 6,
+    act_bits: tuple[int, int] | None = None,
+) -> jnp.ndarray:
+    """Fused multi-substep NODE (ODE-RNN) oracle: fixed-step Euler substeps.
+
+    Delegates to core.node_mr.node_scan — identical semantics to the unfused
+    ``encoder="node"`` stage sequence. Returns the raw head output [B, K].
+    """
+    params = NodeEncoderParams(
+        w_f1=w_f1, b_f1=b_f1, w_f2=w_f2, b_f2=b_f2, w_in=w_in, b_in=b_in
+    )
+    h_T, _ = node_scan(params, xs, h0, dt=dt, n_substeps=n_substeps)
+    return head_math(h_T, w1, b1, w2, b2, act_bits=act_bits)
+
+
+def ltc_scan_int8_reference(
+    xs: jnp.ndarray,  # [B, T, D]
+    h0: jnp.ndarray,  # [B, H]
+    w_inq: jnp.ndarray,  # int8 [D, H]
+    w_in_scale: jnp.ndarray,
+    w_recq: jnp.ndarray,  # int8 [H, H]
+    w_rec_scale: jnp.ndarray,
+    bias: jnp.ndarray,
+    a: jnp.ndarray,
+    inv_tau: jnp.ndarray,
+    sig_table: PWLTable,
+    *,
+    dt: float = 1.0,
+    n_substeps: int = 6,
+) -> jnp.ndarray:
+    """Int8-dequant + PWL-sigmoid LTC scan oracle (float32 math)."""
+    f32 = jnp.float32
+    w_in = w_inq.astype(f32) * w_in_scale
+    w_rec = w_recq.astype(f32) * w_rec_scale
+    sub_dt = dt / n_substeps
+
+    def cell(h, x):
+        drive = x.astype(f32) @ w_in + bias
+
+        def substep(h, _):
+            f = pwl_apply(sig_table, drive + h @ w_rec)
+            num = h + sub_dt * f * a
+            den = 1.0 + sub_dt * (inv_tau + f)
+            return num / den, None
+
+        h, _ = jax.lax.scan(substep, h, None, length=n_substeps)
+        return h, None
+
+    h_T, _ = jax.lax.scan(cell, h0.astype(f32), jnp.swapaxes(xs, 0, 1))
+    return h_T
+
+
+def mr_step_ltc_int8_reference(
+    xs: jnp.ndarray,
+    h0: jnp.ndarray,
+    w_inq: jnp.ndarray,  # int8 [D, H]
+    w_in_scale: jnp.ndarray,
+    w_recq: jnp.ndarray,  # int8 [H, H]
+    w_rec_scale: jnp.ndarray,
+    bias: jnp.ndarray,
+    a: jnp.ndarray,
+    inv_tau: jnp.ndarray,
+    w1q: jnp.ndarray,  # int8 [H, Dh]
+    w1_scale: jnp.ndarray,
+    b1: jnp.ndarray,
+    w2q: jnp.ndarray,  # int8 [Dh, K]
+    w2_scale: jnp.ndarray,
+    b2: jnp.ndarray,
+    sig_table: PWLTable,
+    *,
+    dt: float = 1.0,
+    n_substeps: int = 6,
+) -> jnp.ndarray:
+    """Fixed-point fused LTC oracle: int8 substep AND head weights + PWL."""
+    f32 = jnp.float32
+    h_T = ltc_scan_int8_reference(
+        xs,
+        h0,
+        w_inq,
+        w_in_scale,
+        w_recq,
+        w_rec_scale,
+        bias,
+        a,
+        inv_tau,
+        sig_table,
+        dt=dt,
+        n_substeps=n_substeps,
+    )
+    w1 = w1q.astype(f32) * w1_scale
+    w2 = w2q.astype(f32) * w2_scale
+    return head_math(h_T, w1, b1, w2, b2)
 
 
 def mr_step_int8_reference(

@@ -1,27 +1,85 @@
 """VMEM residency model + batch-tile (``block_b``) auto-selection.
 
-One model of what the stage-fused ``mr_step`` kernel pins in VMEM — gate
-weights, head weights, the per-tile activation blocks, PWL tables when int8
-— shared by two consumers:
+One model of what the stage-fused ``mr_step`` kernels pin in VMEM — encoder
+weights, head weights, the per-tile activation blocks, the per-substep
+working set of the multi-substep cells, PWL tables when int8 — shared by
+two consumers:
 
 - ``benchmarks/bench_stagemap._vmem_bytes`` (the paper Table 7 analogue)
   delegates here, so the design-space sweep and the runtime tiling decision
   can never disagree about residency;
 - ``repro.api.compile_plan`` resolves ``RecoverySpec.block_b="auto"`` by
   walking the divisor tiles of the batch and picking the largest one whose
-  residency fits the configured VMEM budget (the ROADMAP "pick block_b from
-  ``_vmem_bytes`` against the VMEM budget" item). Without a budget the full
-  batch is used — the pre-auto behaviour.
+  residency fits the VMEM budget (the ROADMAP "pick block_b from
+  ``_vmem_bytes`` against the VMEM budget" item). The budget is the spec's
+  explicit ``vmem_budget_bytes`` when given, else :func:`detect_vmem_budget`
+  resolves it from the local device (platform table + ``memory_stats()``
+  when the runtime exposes a VMEM figure).
 
-The numbers mirror the kernel's actual BlockSpecs (kernel.py): weights are
-resident across the whole grid, activations are tiled by ``block_b`` rows.
+``config_vmem_bytes`` dispatches on the encoder family: the GRU(-flow)
+model (``vmem_bytes``), the LTC fused-solver model (``ltc_vmem_bytes``) or
+the NODE/ODE-RNN model (``node_vmem_bytes``). The numbers mirror each
+kernel's actual BlockSpecs (kernel.py): weights are resident across the
+whole grid, activations are tiled by ``block_b`` rows, and the substep
+loops REUSE their temporaries (residency is substep-count-invariant — the
+kernels unroll the loop over one working set, they do not allocate K
+copies).
 """
 
 from __future__ import annotations
 
 # ~16 MB of VMEM per TPU core (v4/v5 family); the auto policy budgets
-# against a caller-supplied fraction of this, never the constant directly.
+# against a fraction of this, never the constant directly.
 VMEM_BYTES_PER_CORE = 16 * 1024 * 1024
+
+# Conservative fraction of raw VMEM the auto tile may claim: Mosaic
+# double-buffers the streamed x_t blocks and needs headroom for spills, so
+# budgeting the full physical size would thrash.
+VMEM_BUDGET_FRACTION = 0.5
+
+# device_kind substring -> VMEM bytes/core (first match wins, checked in
+# order). Every currently-shipping TPU core carries 16 MiB of VMEM except
+# Trillium-class parts; unknown kinds (CPU hosts, GPUs) fall back to the
+# v4/v5 figure so CPU CI resolves the same budget a v5e deployment would.
+PLATFORM_VMEM_BYTES: tuple[tuple[str, int], ...] = (
+    ("v6", 32 * 1024 * 1024),  # Trillium
+    ("v5", VMEM_BYTES_PER_CORE),
+    ("v4", VMEM_BYTES_PER_CORE),
+)
+
+
+def detect_vmem_budget(device=None, *, fraction: float = VMEM_BUDGET_FRACTION) -> int:
+    """Usable fused-stage VMEM budget for the local accelerator, in bytes.
+
+    Resolution order: ``device.memory_stats()``'s VMEM figure when the
+    runtime exposes one, else the platform table keyed on ``device_kind``,
+    else the v4/v5 default. The result is ``fraction`` of the raw size
+    (headroom for Mosaic double-buffering). Deterministic on CPU: no entry
+    matches, so the default applies.
+    """
+    import jax
+
+    if device is None:
+        devices = jax.local_devices()
+        device = devices[0] if devices else None
+    size = None
+    if device is not None:
+        stats_fn = getattr(device, "memory_stats", None)
+        if callable(stats_fn):
+            try:
+                stats = stats_fn() or {}
+            except Exception:  # backends without stats raise, not return {}
+                stats = {}
+            size = stats.get("vmem_size_bytes")
+        if size is None:
+            kind = (getattr(device, "device_kind", "") or "").lower()
+            for key, nbytes in PLATFORM_VMEM_BYTES:
+                if key in kind:
+                    size = nbytes
+                    break
+    if size is None:
+        size = VMEM_BYTES_PER_CORE
+    return int(size * fraction)
 
 
 def vmem_bytes(
@@ -60,14 +118,124 @@ def vmem_bytes(
     return vm
 
 
+def _head_vmem_bytes(H: int, Dh: int, K: int, bb: int, *, int8: bool) -> int:
+    """Head-stage residency shared by every fused variant (see vmem_bytes)."""
+    wbytes = 1 if int8 else 4
+    vm = (H * Dh + Dh * K) * wbytes  # w1 + w2, resident
+    vm += (Dh + K) * 4  # b1 + b2
+    vm += bb * K * 4  # out tile (theta ++ shifts)
+    if int8:
+        vm += (Dh + K) * 4  # per-channel dequant scale rows
+    return vm
+
+
+def ltc_vmem_bytes(
+    B: int,
+    D: int,
+    H: int,
+    Dh: int = 128,
+    K: int = 32,
+    *,
+    int8: bool,
+    n_seg: int,
+    block_b: int,
+    n_substeps: int = 6,
+) -> int:
+    """VMEM residency of the fused multi-substep LTC kernel's BlockSpecs.
+
+    ``n_substeps`` does NOT scale the residency: the unrolled substep loop
+    reuses one [bb, H] working set (drive is loop-invariant, f/num/den are
+    rewritten every substep) — which is exactly why the fused variant fits
+    where K separate XLA substep dispatches would each re-stream operands.
+    """
+    del n_substeps  # residency is substep-count-invariant (see docstring)
+    wbytes = 1 if int8 else 4
+    bb = block_b or B
+    vm = (D * H + H * H) * wbytes  # w_in + w_rec, resident
+    vm += 3 * H * 4  # bias + a + inv_tau rows
+    if int8:
+        vm += 2 * H * 4  # per-channel dequant scale rows (w_in, w_rec)
+        vm += 2 * n_seg * 4  # sigmoid PWL table (slopes + intercepts)
+    vm += bb * D * 4  # x_t block
+    vm += bb * H * 4 * 2  # h scratch + the per-substep drive/f working set
+    vm += _head_vmem_bytes(H, Dh, K, bb, int8=int8)
+    return vm
+
+
+def node_vmem_bytes(
+    B: int,
+    D: int,
+    H: int,
+    Dh: int = 128,
+    K: int = 32,
+    *,
+    block_b: int,
+    n_substeps: int = 6,
+) -> int:
+    """VMEM residency of the fused multi-substep NODE (ODE-RNN) kernel.
+
+    fp32 only (no int8 variant: the tanh-MLP vector field has no PWL
+    serving mapping). Substep temporaries are reused (see ltc_vmem_bytes).
+    """
+    del n_substeps
+    vm = (2 * H * H + D * H) * 4  # w_f1 + w_f2 + w_in, resident
+    vm += 3 * H * 4  # b_f1 + b_f2 + b_in rows
+    bb = block_b or B
+    vm += bb * D * 4  # x_t block
+    vm += bb * H * 4 * 2  # h scratch + the per-substep z working set
+    vm += _head_vmem_bytes(H, Dh, K, bb, int8=False)
+    return vm
+
+
+def _encoder_family(name: str) -> str:
+    """The mr_step kernel family a registry row lowers to (see EncoderSpec)."""
+    from repro.core import encoders
+
+    try:
+        return encoders.get_encoder(name).family
+    except ValueError:
+        return "gru"  # unregistered name: the model the default rows use
+
+
 def config_vmem_bytes(cfg, batch: int, *, block_b: int | None = None, n_seg: int = 16) -> int:
-    """Residency of the fused stage for one ``MRConfig`` at a given batch."""
+    """Residency of the fused stage for one ``MRConfig`` at a given batch.
+
+    Dispatches on the registry row's ``family`` — the SAME field
+    ``kernels/mr_step/ops.py`` dispatches the kernels on — so
+    ``block_b="auto"`` budgets against the variant the config actually
+    lowers to.
+    """
+    family = _encoder_family(cfg.encoder)
+    D = cfg.state_dim + cfg.input_dim
+    K = cfg.n_coef + cfg.n_shifts
+    if family == "ltc":
+        return ltc_vmem_bytes(
+            batch,
+            D,
+            cfg.hidden,
+            cfg.dense_hidden,
+            K,
+            int8=cfg.quant is not None,
+            n_seg=n_seg,
+            block_b=block_b or 0,
+            n_substeps=cfg.ltc_substeps,
+        )
+    if family == "node":
+        return node_vmem_bytes(
+            batch,
+            D,
+            cfg.hidden,
+            cfg.dense_hidden,
+            K,
+            block_b=block_b or 0,
+            n_substeps=cfg.ltc_substeps,
+        )
     return vmem_bytes(
         batch,
-        cfg.state_dim + cfg.input_dim,
+        D,
         cfg.hidden,
         cfg.dense_hidden,
-        cfg.n_coef + cfg.n_shifts,
+        K,
         int8=cfg.quant is not None,
         n_seg=n_seg,
         block_b=block_b or 0,

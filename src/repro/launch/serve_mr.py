@@ -11,8 +11,10 @@ registry.
 
 On exit, every recovered Theta is scored against the system's ground truth
 (physical units, data/dynamics.embed_true_coef) and must beat the one-shot
-``recover_many`` baseline tolerance — streaming ingestion must not cost
-recovery quality.
+baseline tolerance — streaming ingestion must not cost recovery quality.
+The tolerance anchors on the per-system MEDIAN one-shot MSE (a single
+baseline draw spreads ~10x on chaotic systems, which would flip the check
+on baseline luck rather than streaming quality).
 
 CPU demo (the CI acceptance configuration):
 
@@ -37,7 +39,12 @@ dispatch with VMEM-resident hidden state; reference math off-TPU);
 ``--quant`` additionally serves every evicted stream's coefficients through
 the fused fixed-point stage (kernels/mr_step int8: quantized gate + head
 weights, PWL activations) — the paper's fixed-point serving configuration
-end to end.
+end to end. ``--encoder`` picks the registry row; the multi-substep
+families take their fused-solver mr_step variants under ``--fused``, so the
+paper's headline LTC baseline runs the acceptance scenario fused:
+
+    PYTHONPATH=src python -m repro.launch.serve_mr \
+        --plan --fused --encoder ltc --streams 12 --slots 4
 
 Heavy imports happen inside the entry points (after ``--virtual-devices``
 has set XLA_FLAGS), never at module import time.
@@ -154,6 +161,13 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--buf-len", type=int, default=160)
     ap.add_argument("--chunk", type=int, default=16)
     ap.add_argument("--hidden", type=int, default=32)
+    ap.add_argument(
+        "--encoder",
+        default="gru",
+        help="any core/encoders.py registry row (gru, gru_flow, ltc, node, ...); "
+        "with --fused the multi-substep families run the fused-solver "
+        "kernels/mr_step variants",
+    )
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--noise", type=float, default=0.01)
     ap.add_argument("--delta-tol", type=float, default=0.015)
@@ -187,7 +201,7 @@ def build_parser() -> argparse.ArgumentParser:
         "--tol-factor",
         type=float,
         default=3.0,
-        help="pass if stream MSE <= factor * one-shot baseline MSE + tol-abs",
+        help="pass if stream MSE <= factor * per-system MEDIAN one-shot MSE + tol-abs",
     )
     ap.add_argument("--tol-abs", type=float, default=0.05)
     ap.add_argument("--seed", type=int, default=0)
@@ -233,7 +247,7 @@ def main() -> int:
         hidden=args.hidden,
         dense_hidden=2 * args.hidden,
         dt=specs[0].dt,
-        encoder="gru",
+        encoder=args.encoder,
         precision="int8_pwl" if args.quant else "fp32",
         fused=args.fused,
         mode="stream",
@@ -257,8 +271,8 @@ def main() -> int:
     print(
         f"[serve_mr] streams={args.streams} slots={args.slots} "
         f"K={args.steps_per_tick} windows/slot={scfg.n_windows} "
-        f"library={cfg.n_terms}x{cfg.state_dim} fused={args.fused} "
-        f"quant={args.quant} mesh={args.mesh if args.plan else 1}"
+        f"library={cfg.n_terms}x{cfg.state_dim} encoder={args.encoder} "
+        f"fused={args.fused} quant={args.quant} mesh={args.mesh if args.plan else 1}"
     )
     stats = run_service(service, ys, us, args.max_ticks)
     n_done = len(service.results)
@@ -303,7 +317,7 @@ def main() -> int:
     print(f"[serve_mr] one-shot batch-plan baseline: {time.time() - t0:.1f}s")
 
     n_vars = n_state + n_input
-    failures = 0
+    mse_srv, mse_base = [], []
     for i, sysspec in enumerate(specs):
         truth = embed_true_coef(sysspec, n_state, n_input, order)
         res = service.results[i]
@@ -318,8 +332,21 @@ def main() -> int:
             order=order,
             n_state=n_state,
         )
-        mse_s, mse_b = _theta_mse(th_srv, truth), _theta_mse(th_base, truth)
-        tol = args.tol_factor * mse_b + args.tol_abs
+        mse_srv.append(_theta_mse(th_srv, truth))
+        mse_base.append(_theta_mse(th_base, truth))
+    # tolerance anchors on the PER-SYSTEM MEDIAN baseline: one-shot MSE on a
+    # chaotic system spreads ~10x across noise draws (measured 3.6-46 for
+    # lorenz), so a per-stream anchor flips the check on a single lucky
+    # baseline draw even when the streaming estimates are tightly clustered
+    med_base = {
+        s.name: float(np.median([b for sp, b in zip(specs, mse_base) if sp.name == s.name]))
+        for s in specs
+    }
+    failures = 0
+    for i, sysspec in enumerate(specs):
+        res = service.results[i]
+        mse_s, mse_b = mse_srv[i], mse_base[i]
+        tol = args.tol_factor * med_base[sysspec.name] + args.tol_abs
         ok = mse_s <= tol
         failures += not ok
         print(

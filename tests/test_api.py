@@ -69,14 +69,50 @@ def test_compile_validation_unknown_encoder():
 
 
 @pytest.mark.parametrize("encoder", ["ltc", "node"])
-def test_compile_validation_fused_requires_fusable(encoder):
-    with pytest.raises(ValueError, match="fusable"):
-        api.compile_plan(small_spec(encoder=encoder, fused=True))
+def test_compile_validation_fused_substep_families_lower(encoder):
+    """fused=True is legal for every registry encoder now: the multi-substep
+    families lower to their fused-solver mr_step variants with no new call
+    sites (Lowering.dispatch routes through the kernel family)."""
+    plan = api.compile_plan(small_spec(encoder=encoder, fused=True))
+    assert plan.lowering.fused
+    assert plan.lowering.dispatch in ("pallas", "reference")
+    assert plan.cfg.fused
 
 
-def test_compile_validation_int8_requires_gru():
+def test_compile_validation_fused_requires_fusable():
+    """A custom registry row without an mr_step lowering still fails
+    eagerly at compile time with the actionable fusable list."""
+    from repro.core import encoders
+
+    row = encoders.EncoderSpec(
+        name="mean_pool_nofuse_api",
+        init=lambda key, d_in, hidden, dtype=None: {},
+        encode=lambda p, cfg, xs: xs.mean(axis=1),
+        flow=None,
+        fusable=False,
+        kernel=False,
+    )
+    encoders.register_encoder(row)
+    try:
+        with pytest.raises(ValueError, match="fusable"):
+            api.compile_plan(small_spec(encoder="mean_pool_nofuse_api", fused=True))
+    finally:
+        encoders._REGISTRY.pop("mean_pool_nofuse_api", None)
+
+
+@pytest.mark.parametrize("encoder", ["gru_flow", "node"])
+def test_compile_validation_int8_requires_pwl_mappable_cell(encoder):
+    """int8 + flow encoder (and int8 + node) is a genuinely unsupported
+    combo: no PWL mapping exists, so it still raises the actionable list."""
     with pytest.raises(ValueError, match="int8_pwl"):
-        api.compile_plan(small_spec(encoder="gru_flow", precision="int8_pwl"))
+        api.compile_plan(small_spec(encoder=encoder, precision="int8_pwl"))
+
+
+def test_compile_int8_ltc_serving_lowers():
+    """The LTC substep cell is sigmoid-only, so its fixed-point fused stage
+    exists and int8_pwl serving compiles."""
+    plan = api.compile_plan(small_spec(encoder="ltc", precision="int8_pwl"))
+    assert plan.lowering.quant_serving
 
 
 def test_compile_validation_mesh_exceeds_devices():
@@ -97,16 +133,58 @@ def test_mode_mismatch_raises(lorenz_windows):
 def test_legacy_entry_points_validate_eagerly(lorenz_windows):
     """The deprecated wrappers + service fail BEFORE tracing on a fused
     request with a non-fusable encoder (no silent unfused fallback)."""
+    from repro.core import encoders
+
     yw, _ = lorenz_windows
-    cfg = MRConfig(
-        state_dim=3, order=2, hidden=8, dense_hidden=16, dt=0.01, encoder="ltc", fused=True
+    row = encoders.EncoderSpec(
+        name="mean_pool_nofuse_legacy",
+        init=lambda key, d_in, hidden, dtype=None: {},
+        encode=lambda p, cfg, xs: xs.mean(axis=1),
+        flow=None,
+        fusable=False,
+        kernel=False,
     )
-    with pytest.raises(ValueError, match="fusable"):
-        engine.train_mr_scan(cfg, yw, steps=1)
-    with pytest.raises(ValueError, match="fusable"):
-        engine.recover_many(cfg, yw[None], steps=1)
-    with pytest.raises(ValueError, match="fusable"):
-        RecoveryService(cfg, SCFG, n_slots=1)
+    encoders.register_encoder(row)
+    try:
+        cfg = MRConfig(
+            state_dim=3,
+            order=2,
+            hidden=8,
+            dense_hidden=16,
+            dt=0.01,
+            encoder="mean_pool_nofuse_legacy",
+            fused=True,
+        )
+        with pytest.raises(ValueError, match="fusable"):
+            engine.train_mr_scan(cfg, yw, steps=1)
+        with pytest.raises(ValueError, match="fusable"):
+            engine.recover_many(cfg, yw[None], steps=1)
+        with pytest.raises(ValueError, match="fusable"):
+            RecoveryService(cfg, SCFG, n_slots=1)
+    finally:
+        encoders._REGISTRY.pop("mean_pool_nofuse_legacy", None)
+
+
+def test_legacy_entry_points_warn_deprecated_once(lorenz_windows):
+    """The deprecated wrappers warn ONCE per process, not per call — the
+    service-tick/benchmark loops call them hundreds of times."""
+    import warnings
+
+    from repro.deprecation import reset_warned
+
+    yw, _ = lorenz_windows
+    cfg = MRConfig(state_dim=3, order=2, hidden=8, dense_hidden=16, dt=0.01, encoder="gru")
+    reset_warned()
+    try:
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            for _ in range(3):
+                engine.train_mr_scan(cfg, yw, steps=1)
+                RecoveryService(cfg, SCFG, n_slots=1)
+        dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+        assert len(dep) == 2, [str(w.message) for w in dep]  # one per entry point
+    finally:
+        reset_warned()
 
 
 # ---------------------------------------------------------------------------
@@ -124,9 +202,78 @@ def test_block_b_auto_resolves_against_budget():
     assert plan.cfg.block_b == bb  # the tile reaches the fused kernel config
 
 
-def test_block_b_auto_without_budget_is_full_batch():
+def test_block_b_auto_without_budget_detects_device_budget():
+    """No explicit vmem_budget_bytes: the budget is auto-detected from the
+    device (platform table; CPU resolves the v4/v5 default) and recorded in
+    the lowering. The tiny config fits, so the tile stays full-batch."""
+    from repro.kernels.mr_step import tiling
+
     plan = api.compile_plan(small_spec(mode="batch", batch_size=32, fused=True, block_b="auto"))
-    assert plan.lowering.block_b is None  # documented no-budget fallback
+    assert plan.lowering.block_b is None  # full batch fits the detected budget
+    assert plan.lowering.vmem_budget_bytes == tiling.detect_vmem_budget()
+    assert plan.lowering.vmem_bytes <= plan.lowering.vmem_budget_bytes
+
+
+def test_block_b_auto_explicit_budget_overrides_detection():
+    spec = small_spec(
+        mode="batch", batch_size=32, fused=True, block_b="auto", vmem_budget_bytes=6000
+    )
+    plan = api.compile_plan(spec)
+    assert plan.lowering.vmem_budget_bytes == 6000  # override wins, recorded
+
+
+def test_detect_vmem_budget_platform_table():
+    from repro.kernels.mr_step import tiling
+
+    class FakeDev:
+        device_kind = "TPU v6e"
+
+        def memory_stats(self):
+            return {}
+
+    assert tiling.detect_vmem_budget(FakeDev()) == int(32 * 1024 * 1024 * 0.5)
+
+    class StatsDev:
+        device_kind = "weird"
+
+        def memory_stats(self):
+            return {"vmem_size_bytes": 4 * 1024 * 1024}
+
+    assert tiling.detect_vmem_budget(StatsDev()) == int(4 * 1024 * 1024 * 0.5)
+
+
+@pytest.mark.parametrize("encoder", ["ltc", "node"])
+def test_substep_vmem_model_and_auto_tile(encoder):
+    """config_vmem_bytes dispatches to the substep-cell residency models and
+    the auto tile budgets against them (block_b="auto" stays correct)."""
+    from repro.kernels.mr_step import tiling
+
+    cfg = small_spec(encoder=encoder, fused=True, hidden=64, dense_hidden=128).to_mr_config()
+    full = tiling.config_vmem_bytes(cfg, 32)
+    tiled = tiling.config_vmem_bytes(cfg, 32, block_b=8)
+    assert tiled < full  # activation rows tile; weights stay resident
+    # residency is substep-count-invariant: the kernels reuse one working set
+    import dataclasses
+
+    cfg12 = dataclasses.replace(cfg, ltc_substeps=12)
+    assert tiling.config_vmem_bytes(cfg12, 32) == full
+    budget = tiled
+    bb = tiling.auto_block_b(cfg, 32, budget)
+    assert bb is not None and 32 % bb == 0
+    assert tiling.config_vmem_bytes(cfg, 32, block_b=bb) <= budget
+    plan = api.compile_plan(
+        small_spec(
+            encoder=encoder,
+            fused=True,
+            hidden=64,
+            dense_hidden=128,
+            mode="batch",
+            batch_size=32,
+            block_b="auto",
+            vmem_budget_bytes=budget,
+        )
+    )
+    assert plan.lowering.block_b == bb
 
 
 def test_block_b_must_divide_compile_time_batch():
@@ -210,10 +357,13 @@ def test_int8_readout_parity(lorenz_windows):
     np.testing.assert_array_equal(theta, theta_l)
 
 
-def test_fused_plan_runs_and_matches_unfused(lorenz_windows):
+@pytest.mark.parametrize("encoder", ["gru", "ltc", "node"])
+def test_fused_plan_runs_and_matches_unfused(lorenz_windows, encoder):
     yw, _ = lorenz_windows
-    fused = api.compile_plan(small_spec(mode="offline", steps=15, batch_size=16, fused=True))
-    unfused = api.compile_plan(small_spec(mode="offline", steps=15, batch_size=16))
+    fused = api.compile_plan(
+        small_spec(mode="offline", steps=15, batch_size=16, encoder=encoder, fused=True)
+    )
+    unfused = api.compile_plan(small_spec(mode="offline", steps=15, batch_size=16, encoder=encoder))
     assert fused.lowering.fused and fused.lowering.dispatch == "reference"
     pf, mf = fused.run_offline(yw)
     pu, mu = unfused.run_offline(yw)

@@ -25,15 +25,22 @@ def test_unknown_encoder_lists_registered_names():
 
 
 def test_registry_flags():
-    """fusable/kernel/flow flags drive mr_step + dispatch decisions."""
+    """fusable/kernel/flow/int8 flags drive mr_step + dispatch decisions."""
     for name in PAPER_SET | KERNEL_SET:
         spec = encoders.get_encoder(name)
         assert spec.name == name
-        assert spec.fusable == name.startswith("gru")
+        # every built-in family has a fused mr_step lowering (the GRU
+        # single-update kernels or the multi-substep LTC/NODE variants)
+        assert spec.fusable
         assert spec.kernel == name.endswith("_kernel")
+        # the fixed-point serving stage exists exactly where the cell's
+        # nonlinearities have a PWL mapping: standard GRU + LTC substep
+        assert spec.int8 == (name in {"gru", "gru_kernel", "ltc"})
     assert encoders.get_encoder("gru_flow").flow is True
     assert encoders.get_encoder("gru").flow is False
     assert encoders.get_encoder("ltc").flow is None
+    assert set(encoders.fusable_names()) >= PAPER_SET | KERNEL_SET
+    assert set(encoders.int8_names()) == {"gru", "gru_kernel", "ltc"}
 
 
 @pytest.mark.parametrize("name", sorted(PAPER_SET | KERNEL_SET))

@@ -1,7 +1,8 @@
-"""mr_step fused-stage kernel vs references: CPU interpret-mode parity sweep.
+"""mr_step fused-stage kernels vs references: CPU interpret-mode parity sweep.
 
-Mirrors test_kernels_gru.py for the 4th kernel family. Tolerances
-(acceptance criteria for the stage-fused refactor):
+Mirrors test_kernels_gru.py for the 4th kernel family — all four encoder
+variants (GRU-flow, GRU, and the multi-substep LTC/NODE fused-solver
+kernels). Tolerances (acceptance criteria for the stage-fused refactor):
 
   fp32  fused kernel (interpret) vs unfused reference path:  <= 1e-4
         (observed ~3e-8 — one extra f32 rounding at the stage handoff)
@@ -18,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import encoders
 from repro.core.merinda import MRConfig, head_from_hidden, init_mr, mr_forward
 from repro.core.neural_flow import gru_scan_ref
 from repro.kernels.mr_step.ops import mr_step, mr_step_int8
@@ -121,13 +123,110 @@ def test_mr_step_qat_parity():
 
 
 def test_mr_step_rejects_non_fusable_encoders():
-    cfg, params, xs = _setup(2, 6, 3, 8, 16, encoder="ltc")
-    with pytest.raises(ValueError, match="fusable"):
-        mr_step(params, cfg, xs)
+    """Every built-in family is fusable now; a custom row without an
+    mr_step lowering must still fail eagerly with the registered names."""
+    spec = encoders.EncoderSpec(
+        name="mean_pool_nofuse",
+        init=lambda key, d_in, hidden, dtype=jnp.float32: {"w": jnp.ones((d_in, hidden), dtype)},
+        encode=lambda p, cfg, xs: jnp.mean(xs, axis=1) @ p["w"],
+        flow=None,
+        fusable=False,
+        kernel=False,
+    )
+    encoders.register_encoder(spec)
+    try:
+        cfg, params, xs = _setup(2, 6, 3, 8, 16, encoder="mean_pool_nofuse")
+        with pytest.raises(ValueError, match="fusable"):
+            mr_step(params, cfg, xs)
+    finally:
+        encoders._REGISTRY.pop("mean_pool_nofuse", None)
 
 
 # ---------------------------------------------------------------------------
-# int8 + PWL variant
+# multi-substep variants: LTC (fused-solver) and NODE (Euler substeps)
+# ---------------------------------------------------------------------------
+SUBSTEP_SHAPES = [
+    # (B, T, n_state, hidden, dense_hidden)
+    (1, 4, 2, 8, 16),
+    (2, 12, 3, 32, 64),
+    (4, 9, 3, 16, 32),  # odd T
+]
+
+
+@pytest.mark.parametrize("B,T,n,H,Dh", SUBSTEP_SHAPES)
+@pytest.mark.parametrize("encoder", ["ltc", "node"])
+def test_mr_step_substep_interpret_matches_unfused(B, T, n, H, Dh, encoder):
+    """Fused multi-substep kernel body (interpreter) vs the unfused
+    encode -> head stage sequence (core/ltc.py / core/node_mr.py)."""
+    cfg, params, xs = _setup(B, T, n, H, Dh, encoder)
+    th_u, sh_u = mr_forward(params, cfg, xs, None)
+    th_k, sh_k = mr_step(params, cfg, xs, interpret=True)
+    np.testing.assert_allclose(np.asarray(th_k), np.asarray(th_u), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(sh_k), np.asarray(sh_u), atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("encoder", ["ltc", "node"])
+def test_mr_step_substep_reference_dispatch_is_exact(encoder):
+    """force_reference delegates to ltc_scan/node_scan — bit-identical to
+    the unfused stage sequence."""
+    cfg, params, xs = _setup(4, 8, 3, 16, 32, encoder)
+    th_u, _ = mr_forward(params, cfg, xs, None)
+    th_r, _ = mr_step(params, cfg, xs, force_reference=True)
+    np.testing.assert_array_equal(np.asarray(th_r), np.asarray(th_u))
+
+
+@pytest.mark.parametrize("encoder", ["ltc", "node"])
+def test_mr_step_substep_count_changes_result(encoder):
+    """The kernels must actually run cfg.ltc_substeps solver substeps."""
+    import dataclasses
+
+    cfg, params, xs = _setup(2, 6, 3, 16, 32, encoder)
+    cfg2 = dataclasses.replace(cfg, ltc_substeps=2)
+    th6, _ = mr_step(params, cfg, xs, interpret=True)
+    th2, _ = mr_step(params, cfg2, xs, interpret=True)
+    assert float(jnp.max(jnp.abs(th6 - th2))) > 0.0
+
+
+@pytest.mark.parametrize("encoder", ["ltc", "node"])
+def test_mr_step_substep_batch_blocking_invariance(encoder):
+    cfg, params, xs = _setup(8, 7, 3, 16, 32, encoder)
+    th_full, _ = mr_step(params, cfg, xs, interpret=True)
+    th_tiled, _ = mr_step(params, cfg, xs, block_b=2, interpret=True)
+    np.testing.assert_allclose(np.asarray(th_full), np.asarray(th_tiled), atol=1e-6)
+
+
+@pytest.mark.parametrize("encoder", ["ltc", "node"])
+def test_mr_step_substep_grads_match_unfused(encoder):
+    """Training through the fused substep stage == the unfused one (the
+    interpret=True leg exercises the custom_vjp reference backward)."""
+    cfg, params, xs = _setup(4, 6, 3, 16, 32, encoder)
+    cfg_f = MRConfig(
+        state_dim=3, order=2, hidden=16, dense_hidden=32, dt=0.01, encoder=encoder, fused=True
+    )
+
+    def loss(p, c):
+        th, _ = mr_forward(p, c, xs, None)
+        return jnp.sum(th**2)
+
+    def loss_cvjp(p):
+        th, _ = mr_step(p, cfg, xs, interpret=True)
+        return jnp.sum(th**2)
+
+    gu = jax.grad(loss)(params, cfg)
+    gf = jax.grad(loss)(params, cfg_f)
+    gk = jax.grad(loss_cvjp)(params)
+    for other in (gf, gk):
+        jax.tree.map(
+            lambda a, b: np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), atol=1e-5, rtol=1e-5
+            ),
+            gu,
+            other,
+        )
+
+
+# ---------------------------------------------------------------------------
+# int8 + PWL variants
 # ---------------------------------------------------------------------------
 def test_mr_step_int8_interpret_matches_int8_reference():
     cfg, params, xs = _setup(4, 20, 3, 32, 64, encoder="gru")
@@ -148,7 +247,29 @@ def test_mr_step_int8_accuracy_budget():
     assert err > 1e-7, "int8 path silently ran float math"
 
 
-def test_mr_step_int8_requires_standard_gru():
-    cfg, params, xs = _setup(2, 6, 3, 8, 16, encoder="gru_flow")
-    with pytest.raises(ValueError, match="encoder='gru'"):
-        mr_step_int8(params, cfg, xs)
+def test_mr_step_int8_rejects_flow_and_node():
+    """int8 exists where the cell nonlinearities PWL-map (gru, ltc) — the
+    flow gate and the NODE tanh-MLP field have no fixed-point stage."""
+    for encoder in ("gru_flow", "node"):
+        cfg, params, xs = _setup(2, 6, 3, 8, 16, encoder=encoder)
+        with pytest.raises(ValueError, match="int8-capable"):
+            mr_step_int8(params, cfg, xs)
+
+
+def test_mr_step_ltc_int8_interpret_matches_int8_reference():
+    cfg, params, xs = _setup(4, 12, 3, 32, 64, encoder="ltc")
+    th_k, sh_k = mr_step_int8(params, cfg, xs, interpret=True)
+    th_r, sh_r = mr_step_int8(params, cfg, xs, force_reference=True)
+    np.testing.assert_allclose(np.asarray(th_k), np.asarray(th_r), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(sh_k), np.asarray(sh_r), atol=1e-6)
+
+
+def test_mr_step_ltc_int8_accuracy_budget():
+    """Fixed-point fused LTC (int8 substep + head weights, PWL sigmoid)
+    within the documented 0.1 budget of float — and actually quantized."""
+    cfg, params, xs = _setup(4, 20, 3, 32, 64, encoder="ltc")
+    th_f, _ = mr_forward(params, cfg, xs, None)
+    th_q, _ = mr_step_int8(params, cfg, xs, force_reference=True)
+    err = float(jnp.max(jnp.abs(th_f - th_q)))
+    assert err < 0.1, f"int8+PWL fused LTC stage drifted too far from float: {err}"
+    assert err > 1e-7, "int8 LTC path silently ran float math"
