@@ -150,7 +150,7 @@ def kernel_adjusted_ssd(arch: str = "mamba2-130m", shape: str = "train_4k",
         + (tokens_dev // S) * nchunks * H * N * P * f4  # inter-chunk states
     )
     layer_weights = 0
-    for name, spec_shape in (("inproj", 2 * cfg.d_model * H * P),
+    for _name, spec_shape in (("inproj", 2 * cfg.d_model * H * P),
                              ("bc", 2 * cfg.d_model * G * N),
                              ("dt", cfg.d_model * H),
                              ("out", H * P * cfg.d_model)):

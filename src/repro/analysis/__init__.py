@@ -1,0 +1,14 @@
+"""Static analysis of compiled programs: HLO cost parsing + plan auditing.
+
+- ``analysis.hlo``: trip-count-aware FLOPs/bytes/collective parse of
+  optimized HLO text, plus the contract parses (donation aliases, entry
+  parameters, host-transfer ops) the auditor builds on.
+- ``analysis.rules``: the hardware-contract rules R1-R5, each a pure
+  function from parsed HLO + a prediction to structured Findings.
+- ``analysis.audit``: ``audit_plan`` (drives the rules over a compiled
+  RecoveryPlan's programs) and the ``python -m repro.analysis.audit
+  --matrix`` CLI.
+"""
+
+from repro.analysis.hlo import analyze_module, collective_stats, roofline_terms
+from repro.analysis.rules import RULES, Finding

@@ -493,6 +493,130 @@ def analyze_module(text: str, n_devices: int, f32_as_bf16: bool = False) -> HloC
 
 
 # ---------------------------------------------------------------------------
+# static contract parses (analysis/audit.py rules R1/R3/R4)
+# ---------------------------------------------------------------------------
+_PARAM_NUM_RE = re.compile(r"parameter\((\d+)\)")
+_OP_NAME_RE = re.compile(r'op_name="([^"]*)"')
+# one donation entry: {out_index}: (param_number, {param_tuple_path}, kind)
+_ALIAS_ENTRY_RE = re.compile(
+    r"\{([\d,\s]*)\}:\s*\((\d+),\s*\{[\d,\s]*\},\s*(may-alias|must-alias)\)"
+)
+
+HOST_TRANSFER_KINDS = ("infeed", "outfeed", "send", "recv", "send-done", "recv-done")
+# custom_call_target substrings that mark a python host callback
+# (xla_python_cpu_callback + its FFI variants, io_callback, debug prints)
+_CALLBACK_TARGET_MARKS = ("callback", "host")
+
+
+@dataclasses.dataclass(frozen=True)
+class EntryParam:
+    """One ENTRY-computation parameter of a compiled module."""
+
+    index: int
+    dtype: str  # HLO dtype token ("f32", "s8", ...)
+    dims: tuple[int, ...]
+    op_name: str  # jax argument path from metadata ("state.params.encoder.w")
+
+
+def entry_parameters(text: str) -> list[EntryParam]:
+    """The ENTRY computation's parameters, with their jax argument paths.
+
+    Fusion-interior computations also contain ``parameter(...)`` ops (their
+    region arguments); only the ENTRY computation's parameters correspond to
+    the jitted callable's arguments, so everything else is skipped. Note jit
+    PRUNES unused arguments (keep_unused=False), so the surviving parameters
+    can be a subset of the Python signature. jax stamps each parameter's
+    flattened argument path into ``metadata={op_name=...}``, which is what
+    maps an HLO parameter back to a donated Python argument (rules R1/R4).
+    """
+    comps, entry = parse_hlo(text)
+    c = comps.get(entry)
+    out = []
+    for op in c.ops if c else []:
+        if op.kind != "parameter":
+            continue
+        m = _PARAM_NUM_RE.search(op.line)
+        if not m:
+            continue
+        dm = _SHAPE_RE.search(op.result_type)
+        nm = _OP_NAME_RE.search(op.line)
+        out.append(
+            EntryParam(
+                index=int(m.group(1)),
+                dtype=dm.group(1) if dm else "",
+                dims=tuple(int(d) for d in dm.group(2).split(",") if d) if dm else (),
+                op_name=nm.group(1) if nm else "",
+            )
+        )
+    return sorted(out, key=lambda p: p.index)
+
+
+@dataclasses.dataclass(frozen=True)
+class IoAlias:
+    """One input->output buffer-reuse entry from the module header."""
+
+    output_index: tuple[int, ...]
+    param_number: int
+    kind: str  # "may-alias" | "must-alias"
+
+
+def parse_io_aliases(text: str) -> list[IoAlias]:
+    """Donation results from the module header's ``input_output_alias``.
+
+    jax lowers ``donate_argnums`` into may-alias entries; XLA silently DROPS
+    any entry it cannot honor and falls back to a copy, so the compiled
+    header — not the Python decorator — is the ground truth for which
+    donated buffers are actually reused in place (rule R1).
+    """
+    out = []
+    for line in text.splitlines():
+        if "input_output_alias=" not in line:
+            continue
+        blob = line.split("input_output_alias=", 1)[1]
+        for m in _ALIAS_ENTRY_RE.finditer(blob):
+            out.append(
+                IoAlias(
+                    output_index=tuple(int(d) for d in m.group(1).split(",") if d.strip()),
+                    param_number=int(m.group(2)),
+                    kind=m.group(3),
+                )
+            )
+        break  # one header per module
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class HostTransfer:
+    """One op crossing the device<->host boundary."""
+
+    computation: str
+    kind: str  # HLO opcode ("custom-call" for callbacks)
+    target: str  # custom_call_target ("" for raw transfer opcodes)
+    op: str  # HLO op name
+
+
+def host_transfer_ops(text: str) -> list[HostTransfer]:
+    """Every op that crosses the device<->host boundary (rule R3).
+
+    Raw transfer opcodes (infeed/outfeed/send/recv) plus custom-calls whose
+    target is a python host callback — the form ``jax.pure_callback`` /
+    ``io_callback`` / debug prints lower to on CPU.
+    """
+    comps, _ = parse_hlo(text)
+    out = []
+    for c in comps.values():
+        for op in c.ops:
+            if op.kind in HOST_TRANSFER_KINDS:
+                out.append(HostTransfer(c.name, op.kind, "", op.name))
+            elif op.kind == "custom-call":
+                m = re.search(r'custom_call_target="([^"]*)"', op.line)
+                target = m.group(1) if m else ""
+                if any(s in target.lower() for s in _CALLBACK_TARGET_MARKS):
+                    out.append(HostTransfer(c.name, op.kind, target, op.name))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # legacy surface (kept for tests / callers): collective_stats + roofline_terms
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass

@@ -1,0 +1,283 @@
+"""Hardware-contract rules for the compiled-plan auditor (analysis/audit.py).
+
+MERINDA's recovery speed comes from *structural* properties of the lowered
+program — buffers reused in place, state resident on chip, no host
+round-trips mid-stream, fixed-point datapaths, no cross-mesh chatter. Each
+rule here checks one of those properties statically, against the OPTIMIZED
+HLO of a compiled program (what XLA actually emitted, not what the Python
+decorators requested):
+
+    R1 donation       every donated input is aliased to an output in the
+                      module header — no silent copy fallback
+    R2 residency      the tiling.py VMEM model's predicted bytes is within
+                      a per-family tolerance band of the parsed fused-stage
+                      per-step traffic
+    R3 host-transfer  no infeed/outfeed/host-callback ops inside the tick
+                      program beyond a declared allowlist
+    R4 dtype          the int8/PWL serving path transports gate/head weight
+                      matrices as s8 parameters (no f32 widening on entry)
+    R5 collectives    the collective set (and wire bytes) of sharded-mesh
+                      plans matches the parallel/rules.py prediction
+
+Every rule is a pure function ``(program name, hlo text, prediction) ->
+[Finding]`` — no jax, no plan objects — so rules are unit-testable on
+synthetic HLO and the auditor stays the only place that knows how to lower
+a plan's programs. Rules that match entry parameters by their jax argument
+path (R1, R4) emit a vacuity Finding when NOTHING matches: an auditor whose
+contract silently stopped binding (metadata naming drift) is itself a
+violation, not a pass.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+from repro.analysis import hlo as H
+
+#: rule id -> one-line contract (the README table is generated from this)
+RULES: dict[str, str] = {
+    "R1": "donation: every donated input is aliased to an output (no copy fallback)",
+    "R2": "residency: tiling.py VMEM model within the family band of parsed per-step bytes",
+    "R3": "host-transfer: no device<->host ops in the tick beyond the allowlist",
+    "R4": "dtype: int8 serving path transports gate/head weights as s8 parameters",
+    "R5": "collectives: sharded-plan collective set matches parallel/rules.py prediction",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One structured contract violation."""
+
+    rule: str  # "R1".."R5"
+    program: str  # which compiled program ("tick", "epoch", "fused_step", ...)
+    op: str  # HLO op / parameter the finding anchors on ("" = whole module)
+    expected: str
+    actual: str
+    message: str
+
+    def __str__(self) -> str:
+        anchor = f" @ {self.op}" if self.op else ""
+        return (
+            f"[{self.rule}] {self.program}{anchor}: {self.message} "
+            f"(expected {self.expected}, got {self.actual})"
+        )
+
+
+def _root(op_name: str) -> str:
+    """'state.params.encoder.w' -> 'state' (jax argument-path root)."""
+    return op_name.split(".")[0].split("[")[0] if op_name else ""
+
+
+# -- R1 ----------------------------------------------------------------------
+def check_donation(program: str, text: str, donated: Sequence[str]) -> list[Finding]:
+    """R1: every surviving parameter of a donated argument must be aliased.
+
+    ``donated`` names the donated Python arguments (e.g. ``("state",)`` for
+    the tick, ``("params", "opt_state")`` for the epoch). jit PRUNES unused
+    arguments, so only parameters that survived into the entry computation
+    are held to the contract; XLA dropping an alias entry it could not honor
+    (the silent copy fallback) is exactly what this catches.
+    """
+    if not donated:
+        return []
+    aliased = {a.param_number for a in H.parse_io_aliases(text)}
+    findings, matched = [], 0
+    for p in H.entry_parameters(text):
+        if _root(p.op_name) not in donated:
+            continue
+        matched += 1
+        if p.index not in aliased:
+            findings.append(
+                Finding(
+                    rule="R1",
+                    program=program,
+                    op=f"parameter({p.index})",
+                    expected="input_output_alias entry",
+                    actual="none (copy fallback)",
+                    message=f"donated argument leaf {p.op_name!r} is not aliased to any output",
+                )
+            )
+    if matched == 0:
+        findings.append(
+            Finding(
+                rule="R1",
+                program=program,
+                op="",
+                expected=f"entry parameters named under donated args {list(donated)}",
+                actual="no matching parameters",
+                message="donation audit bound nothing — op_name metadata drifted; "
+                "the rule would be vacuous",
+            )
+        )
+    return findings
+
+
+# -- R2 ----------------------------------------------------------------------
+def check_residency(
+    program: str,
+    text: str,
+    predicted_bytes: int,
+    steps: int,
+    band: tuple[float, float],
+    family: str = "gru",
+) -> list[Finding]:
+    """R2: parsed per-step traffic of the fused stage vs the VMEM model.
+
+    The compiled stage is a ``lax.scan`` over the window's ``steps`` input
+    steps, and the CPU lowering re-streams the (kernel-resident) weights on
+    every trip — so the comparable figure is the parsed bytes-accessed
+    NORMALIZED per input step, held to ``band`` (a per-family tolerance,
+    tiling.residency_tolerance) around the model's predicted residency.
+    Catches order-of-magnitude model drift: a resident buffer the model
+    misses, a dropped term, a tile that silently stopped applying.
+    """
+    findings: list[Finding] = []
+    if predicted_bytes <= 0:
+        findings.append(
+            Finding(
+                rule="R2",
+                program=program,
+                op="",
+                expected="> 0 predicted residency bytes",
+                actual=str(predicted_bytes),
+                message="VMEM model predicted nonpositive residency",
+            )
+        )
+        return findings
+    per_step = H.analyze_module(text, 1).hbm_bytes / max(steps, 1)
+    ratio = per_step / predicted_bytes
+    lo, hi = band
+    if not (lo <= ratio <= hi):
+        findings.append(
+            Finding(
+                rule="R2",
+                program=program,
+                op="",
+                expected=f"per-step/predicted in [{lo}, {hi}] ({family} band)",
+                actual=f"{ratio:.2f} ({per_step:.0f} B/step vs {predicted_bytes} B predicted)",
+                message="compiled fused-stage traffic disagrees with the tiling.py VMEM model",
+            )
+        )
+    return findings
+
+
+# -- R3 ----------------------------------------------------------------------
+def check_host_transfers(program: str, text: str, allowlist: Sequence[str] = ()) -> list[Finding]:
+    """R3: no device<->host boundary crossings inside the compiled program.
+
+    The tick's contract is that ALL host syncs happen in the service layer
+    (RecoveryService counts them); an infeed/outfeed or a python callback
+    custom-call INSIDE the compiled program would stall every tick
+    uncounted. ``allowlist`` entries are substrings matched against the
+    callback target (or opcode) of intentionally-declared crossings.
+    """
+    findings = []
+    for t in H.host_transfer_ops(text):
+        label = t.target or t.kind
+        if any(a and a in label for a in allowlist):
+            continue
+        findings.append(
+            Finding(
+                rule="R3",
+                program=program,
+                op=t.op,
+                expected="no device<->host transfer",
+                actual=label,
+                message=f"{t.kind} in computation {t.computation!r} crosses the host boundary",
+            )
+        )
+    return findings
+
+
+# -- R4 ----------------------------------------------------------------------
+def check_weight_dtypes(program: str, text: str, weights: Mapping[str, str]) -> list[Finding]:
+    """R4: quantized weights enter the serving program at their serving dtype.
+
+    ``weights`` maps jax argument names (or argument-path roots) of the
+    gate/head weight matrices to their contracted HLO dtype (``"s8"``). The
+    int8 path dequantizes per-channel INSIDE the program (scales ride as
+    separate f32 rows), so the transport contract is at the parameter level:
+    a weight matrix arriving as f32 means the serving path silently widened
+    — quadratically more transport bytes than the fixed-point story claims.
+    Every contracted weight must be found; a missing one is a finding, not a
+    pass (pruning a weight from its own serving program is itself a bug).
+    """
+    findings, seen = [], set()
+    for p in H.entry_parameters(text):
+        want = weights.get(p.op_name) or weights.get(_root(p.op_name))
+        if want is None:
+            continue
+        seen.add(p.op_name if p.op_name in weights else _root(p.op_name))
+        if p.dtype != want:
+            findings.append(
+                Finding(
+                    rule="R4",
+                    program=program,
+                    op=f"parameter({p.index})",
+                    expected=want,
+                    actual=p.dtype or "?",
+                    message=f"serving weight {p.op_name!r} enters the program as "
+                    f"{p.dtype or '?'} — f32 widening on the transport path",
+                )
+            )
+    for name in sorted(set(weights) - seen):
+        findings.append(
+            Finding(
+                rule="R4",
+                program=program,
+                op="",
+                expected=f"{weights[name]} parameter {name!r}",
+                actual="not found among entry parameters",
+                message=f"contracted serving weight {name!r} never entered the program",
+            )
+        )
+    return findings
+
+
+# -- R5 ----------------------------------------------------------------------
+def check_collectives(
+    program: str,
+    text: str,
+    n_devices: int,
+    predicted_ops: Mapping[str, int],
+    predicted_wire_bytes: float = 0.0,
+    wire_tol: float = 0.05,
+) -> list[Finding]:
+    """R5: the compiled collective census matches the sharding-rule prediction.
+
+    ``predicted_ops`` maps collective kind -> count (parallel/rules.py
+    ``predict_tick_collectives``: empty for the slot-sharded tick). Counts
+    must match exactly; the wire-byte total is held to ``wire_tol`` relative
+    tolerance (only checked when the census agrees — a census mismatch
+    already explains any wire delta).
+    """
+    stats = H.collective_stats(text, n_devices)
+    findings = []
+    for kind in sorted(set(stats.ops) | set(predicted_ops)):
+        got, want = stats.ops.get(kind, 0), predicted_ops.get(kind, 0)
+        if got != want:
+            findings.append(
+                Finding(
+                    rule="R5",
+                    program=program,
+                    op=kind,
+                    expected=f"{want} x {kind}",
+                    actual=str(got),
+                    message="collective census disagrees with the sharding-rule prediction",
+                )
+            )
+    if not findings:
+        denom = max(predicted_wire_bytes, 1.0)
+        if abs(stats.wire_bytes - predicted_wire_bytes) / denom > wire_tol:
+            findings.append(
+                Finding(
+                    rule="R5",
+                    program=program,
+                    op="",
+                    expected=f"~{predicted_wire_bytes:.0f} collective wire bytes",
+                    actual=f"{stats.wire_bytes:.0f}",
+                    message="collective wire-byte total off the prediction",
+                )
+            )
+    return findings

@@ -66,6 +66,10 @@ class Lowering:
     vmem_bytes: int | None  # modeled fused-stage VMEM residency at block_b
     vmem_budget_bytes: int | None  # resolved budget the "auto" tile fit into
     mesh_shape: tuple[int, ...]  # device mesh over the slot axis (stream mode)
+    # which source resolved vmem_budget_bytes: "explicit" (spec override),
+    # "memory_stats", "platform:<key>" or "default" (tiling.resolve_vmem_budget)
+    vmem_budget_source: str | None = None
+    audit: str | None = None  # audit verdict stamp ("pass:R1,R3,..."/"fail:R2")
 
 
 class RecoveryPlan:
@@ -193,19 +197,19 @@ def _resolve_lowering(spec: RecoverySpec, row: encoders.EncoderSpec) -> Lowering
         dispatch = "pallas" if rt.on_tpu() else "reference"
     else:
         dispatch = "xla"
-    block_b, vmem, budget = None, None, None
+    block_b, vmem, budget, budget_src = None, None, None, None
     if spec.fused:
         batch = _compile_time_batch(spec)
         if spec.block_b == "auto":
             # explicit override wins; otherwise the budget is auto-detected
             # from the local device (platform table + memory_stats when the
             # runtime exposes a VMEM figure) — ROADMAP "auto-detect the
-            # budget" item. The resolved figure lands in the Lowering record.
-            budget = (
-                spec.vmem_budget_bytes
-                if spec.vmem_budget_bytes is not None
-                else tiling.detect_vmem_budget()
-            )
+            # budget" item. The resolved figure AND which source produced it
+            # land in the Lowering record.
+            if spec.vmem_budget_bytes is not None:
+                budget, budget_src = spec.vmem_budget_bytes, "explicit"
+            else:
+                budget, budget_src = tiling.resolve_vmem_budget()
             block_b = tiling.auto_block_b(spec.to_mr_config(), batch, budget)
         elif isinstance(spec.block_b, int):
             if batch is not None and batch % spec.block_b != 0:
@@ -230,6 +234,7 @@ def _resolve_lowering(spec: RecoverySpec, row: encoders.EncoderSpec) -> Lowering
         vmem_bytes=vmem,
         vmem_budget_bytes=budget,
         mesh_shape=(spec.mesh_slots,) if spec.mode == "stream" else (),
+        vmem_budget_source=budget_src,
     )
 
 
@@ -246,8 +251,20 @@ def _compile_time_batch(spec: RecoverySpec) -> int | None:
     return spec.batch_size
 
 
-def compile_plan(spec: RecoverySpec) -> RecoveryPlan:
-    """Validate + lower a RecoverySpec; see the module docstring."""
+AUDIT_MODES = ("off", "warn", "error")
+
+
+def compile_plan(spec: RecoverySpec, audit: str = "off") -> RecoveryPlan:
+    """Validate + lower a RecoverySpec; see the module docstring.
+
+    ``audit`` runs the static HLO-contract auditor (analysis/audit.py) over
+    the compiled programs: ``"off"`` skips it, ``"warn"`` emits a warning
+    per finding, ``"error"`` raises :class:`repro.analysis.audit.AuditError`
+    on any finding. Either audited mode stamps the verdict into
+    ``plan.lowering.audit``.
+    """
+    if audit not in AUDIT_MODES:
+        raise ValueError(f"audit must be one of {AUDIT_MODES}, got {audit!r}")
     row = encoders.get_encoder(spec.encoder)  # unknown name fails here
     if spec.precision == "int8_pwl" and not row.int8:
         raise ValueError(
@@ -295,4 +312,20 @@ def compile_plan(spec: RecoverySpec) -> RecoveryPlan:
         )
     else:  # stream
         programs["tick"] = functools.partial(stream_mod.tick, cfg=cfg, scfg=scfg)
-    return RecoveryPlan(spec, cfg, scfg, lowering, mesh, programs)
+    plan = RecoveryPlan(spec, cfg, scfg, lowering, mesh, programs)
+
+    if audit != "off":
+        # lazy import: the auditor pulls engine/stream/kernels; rules/hlo
+        # stay importable without jax and plan.py stays cheap to import
+        from repro.analysis import audit as audit_mod
+
+        report = audit_mod.audit_plan(plan)
+        plan.lowering = dataclasses.replace(lowering, audit=report.verdict)
+        if report.findings:
+            if audit == "error":
+                raise audit_mod.AuditError(report)
+            import warnings
+
+            for f in report.findings:
+                warnings.warn(f"plan audit: {f}", stacklevel=2)
+    return plan

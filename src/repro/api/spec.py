@@ -61,8 +61,10 @@ class RecoverySpec:
     fused: bool = False  # stage-fused per-window step (kernels/mr_step)
     block_b: int | str | None = None  # fused batch tile: int, None, or "auto"
     # budget the "auto" tile fits into; None = auto-detect from the local
-    # device (kernels/mr_step/tiling.detect_vmem_budget: platform table +
-    # memory_stats when available) — the explicit override always wins
+    # device (kernels/mr_step/tiling.resolve_vmem_budget: platform table +
+    # memory_stats when available) — the explicit override always wins, and
+    # plan.lowering.vmem_budget_source records which source was used
+    # ("explicit" | "memory_stats" | "platform:<key>" | "default")
     vmem_budget_bytes: int | None = None
 
     # -- execution ----------------------------------------------------------

@@ -377,6 +377,11 @@ class RecoveryService:
         # the slot shard after admission is a reshard. bench_stream reports
         # these per tick so the per-device-admission redesign has a baseline.
         self.counters = {"host_syncs": 0, "reshards": 0}
+        # per-tick host-sync deltas (appended by tick_once): the first tick
+        # compiles and the eviction/admission ticks read extra scalars, so
+        # per-tick attribution lets consumers report a MEDIAN instead of a
+        # mean skewed by those outliers (bench_stream mesh rows)
+        self.sync_log: list[int] = []
         # the compiled tick: a RecoveryPlan passes its pre-bound program so
         # the service runs EXACTLY what the plan compiled; standalone
         # construction binds the module-level program with this config
@@ -498,6 +503,7 @@ class RecoveryService:
 
     def tick_once(self, chunks_y: np.ndarray, chunks_u: np.ndarray | None = None) -> dict:
         """Advance the service one tick; returns an info dict of host scalars."""
+        syncs0 = self.counters["host_syncs"]
         S, C, m = self.n_slots, self.scfg.chunk, self.cfg.input_dim
         if chunks_u is None:
             chunks_u = np.zeros((S, C, m), np.float32)
@@ -522,7 +528,7 @@ class RecoveryService:
                 res = self._evict(s, "converged" if converged else "budget")
                 evicted.append(res)
                 self._admit_into(s)
-        return {
+        info = {
             "tick": self.ticks,
             "evicted": evicted,
             "active": int(self._host_read(self.state.active).sum()),
@@ -530,6 +536,8 @@ class RecoveryService:
             "loss": self._host_read(self.state.loss),
             "steps": steps,
         }
+        self.sync_log.append(self.counters["host_syncs"] - syncs0)
+        return info
 
     @property
     def done(self) -> bool:

@@ -48,21 +48,24 @@ PLATFORM_VMEM_BYTES: tuple[tuple[str, int], ...] = (
 )
 
 
-def detect_vmem_budget(device=None, *, fraction: float = VMEM_BUDGET_FRACTION) -> int:
-    """Usable fused-stage VMEM budget for the local accelerator, in bytes.
+def resolve_vmem_budget(device=None, *, fraction: float = VMEM_BUDGET_FRACTION) -> tuple[int, str]:
+    """(budget bytes, source) for the local accelerator's fused-stage VMEM.
 
     Resolution order: ``device.memory_stats()``'s VMEM figure when the
-    runtime exposes one, else the platform table keyed on ``device_kind``,
-    else the v4/v5 default. The result is ``fraction`` of the raw size
-    (headroom for Mosaic double-buffering). Deterministic on CPU: no entry
-    matches, so the default applies.
+    runtime exposes one (source ``"memory_stats"``), else the platform table
+    keyed on ``device_kind`` (source ``"platform:<key>"``), else the v4/v5
+    default (source ``"default"``). The result is ``fraction`` of the raw
+    size (headroom for Mosaic double-buffering). Deterministic on CPU: no
+    entry matches, so the default applies. The source string lands in
+    ``plan.lowering.vmem_budget_source`` so an R2 residency finding is
+    attributable to the budget that produced the tile.
     """
     import jax
 
     if device is None:
         devices = jax.local_devices()
         device = devices[0] if devices else None
-    size = None
+    size, source = None, "default"
     if device is not None:
         stats_fn = getattr(device, "memory_stats", None)
         if callable(stats_fn):
@@ -71,15 +74,43 @@ def detect_vmem_budget(device=None, *, fraction: float = VMEM_BUDGET_FRACTION) -
             except Exception:  # backends without stats raise, not return {}
                 stats = {}
             size = stats.get("vmem_size_bytes")
+            if size is not None:
+                source = "memory_stats"
         if size is None:
             kind = (getattr(device, "device_kind", "") or "").lower()
             for key, nbytes in PLATFORM_VMEM_BYTES:
                 if key in kind:
-                    size = nbytes
+                    size, source = nbytes, f"platform:{key}"
                     break
     if size is None:
         size = VMEM_BYTES_PER_CORE
-    return int(size * fraction)
+    return int(size * fraction), source
+
+
+def detect_vmem_budget(device=None, *, fraction: float = VMEM_BUDGET_FRACTION) -> int:
+    """Usable fused-stage VMEM budget in bytes (see resolve_vmem_budget)."""
+    return resolve_vmem_budget(device, fraction=fraction)[0]
+
+
+# Per-family tolerance bands for the R2 residency audit (analysis/rules.py):
+# the parsed per-input-step traffic of the compiled fused stage, divided by
+# this model's predicted residency, must land inside [lo, hi]. The bands are
+# wide on purpose — the CPU lowering re-streams weights per scan trip where
+# the kernel holds them resident, and the NODE field does two H x H mats per
+# Euler substep — so they catch an order-of-magnitude model drift (a new
+# resident buffer the model misses, a dropped term) without flaking on
+# backend lowering details. Measured per-step ratios on CPU jax 0.4.37:
+# gru 1.40, ltc 1.34, node 3.25.
+RESIDENCY_BANDS: dict[str, tuple[float, float]] = {
+    "gru": (0.25, 8.0),
+    "ltc": (0.25, 8.0),
+    "node": (0.25, 16.0),
+}
+
+
+def residency_tolerance(family: str) -> tuple[float, float]:
+    """(lo, hi) acceptance band for parsed-per-step/predicted residency."""
+    return RESIDENCY_BANDS.get(family, RESIDENCY_BANDS["gru"])
 
 
 def vmem_bytes(

@@ -264,7 +264,7 @@ def main() -> int:
         print(f"[dryrun] {len(todo)} cells to run ({len(cells) - len(todo)} cached)")
         failures = []
         with mp.Pool(args.jobs) as pool:
-            for tag, ok in pool.imap_unordered(_run_subprocess, todo):
+            for tag, _ok in pool.imap_unordered(_run_subprocess, todo):
                 rec = (
                     json.loads((ART / f"{tag}.json").read_text())
                     if (ART / f"{tag}.json").exists()

@@ -192,6 +192,13 @@ def build_parser() -> argparse.ArgumentParser:
         help="devices sharding the slot axis (requires --plan; 1 = single device)",
     )
     ap.add_argument(
+        "--audit",
+        choices=("off", "warn", "error"),
+        default="off",
+        help="static HLO-contract audit of the compiled plan (requires --plan): "
+        "warn prints findings, error refuses to serve a violating plan",
+    )
+    ap.add_argument(
         "--virtual-devices",
         type=int,
         default=0,
@@ -217,6 +224,8 @@ def main() -> int:
         ).strip()
     if args.mesh > 1 and not args.plan:
         raise SystemExit("--mesh requires --plan (the sharded service is plan-compiled)")
+    if args.audit != "off" and not args.plan:
+        raise SystemExit("--audit requires --plan (only compiled plans are auditable)")
 
     # jax loads HERE, after the virtual-device environment is pinned
     from repro import api
@@ -258,7 +267,7 @@ def main() -> int:
         mesh_slots=args.mesh,
     )
     if args.plan:
-        plan = api.compile_plan(spec)
+        plan = api.compile_plan(spec, audit=args.audit)
         service = plan.make_service()
         print(f"[serve_mr] plan lowering: {plan.lowering}")
     else:

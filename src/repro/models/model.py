@@ -210,7 +210,7 @@ def _scan_stack(stacked, x, body, cfg: ModelConfig):
     n = jax.tree.leaves(stacked)[0].shape[0]
     total = jnp.zeros((), jnp.float32)
     for i in range(n):
-        lp = jax.tree.map(lambda a: a[i], stacked)
+        lp = jax.tree.map(lambda a, _i=i: a[_i], stacked)
         x, aux = step(x, lp)
         total = total + aux
     return x, total

@@ -102,7 +102,7 @@ def count_params(cfg, active_only: bool = False) -> int:
     if not active_only or cfg.moe is None:
         return spec_count(tree)
     total = 0
-    for path, s in jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_spec)[0]:
+    for _path, s in jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_spec)[0]:
         n = math.prod(s.shape)
         if "expert" in s.axes:  # routed expert weights: only top_k/E active
             n = n * cfg.moe.top_k // cfg.moe.num_experts

@@ -252,3 +252,20 @@ constraint_vjp.defvjp(_cvjp_fwd, _cvjp_bwd)
 def sp_gather(x: jax.Array) -> jax.Array:
     """Sequence-parallel boundary: gather seq shards fwd, reduce-scatter bwd."""
     return constraint_vjp(x, ("batch", "seq", "act_embed"), ("batch", "seq_sharded", "act_embed"))
+
+
+def predict_tick_collectives(mesh: Mesh | None) -> dict[str, int]:
+    """Predicted collective set of the slot-sharded streaming tick: EMPTY.
+
+    Every SlotState leaf is sharded on its leading slot axis only
+    (stream.SLOT_RULES) and the tick's computation is independent per slot —
+    the vmapped recovery steps, readout and eviction signals never contract
+    or permute across slots — so a correctly-sharded tick compiles with ZERO
+    collectives regardless of mesh size. Rule R5 (analysis/rules.py) holds
+    the compiled HLO to this prediction: any all-reduce/all-gather appearing
+    in a sharded tick means a sharding rule regressed (e.g. a replicated
+    operand forcing a gather) and the service would pay cross-mesh wire
+    bytes on every tick.
+    """
+    del mesh
+    return {}

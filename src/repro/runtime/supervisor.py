@@ -67,13 +67,13 @@ class Supervisor:
         build_step: Callable,
         next_batch: Callable,
         ckpt_dir: str,
-        cfg: SupervisorConfig = SupervisorConfig(),
+        cfg: SupervisorConfig | None = None,
         chaos: Callable[[int], None] | None = None,
         devices: list | None = None,
     ):
         self.build_step = build_step
         self.next_batch = next_batch
-        self.cfg = cfg
+        self.cfg = cfg = cfg if cfg is not None else SupervisorConfig()
         self.chaos = chaos
         self.devices = list(devices if devices is not None else jax.devices())
         self.ckpt = CheckpointManager(ckpt_dir, keep=cfg.keep, save_every=cfg.save_every)

@@ -143,6 +143,48 @@ def test_kernel_adjusted_flash_roofline():
     assert k["dominant_after"] < k["dominant_before"]
 
 
+def test_scanned_mr_step_trip_count_recovery():
+    """While-loop trip-count recovery on a REAL scanned mr_step program.
+
+    Doubling the window length T doubles the fused stage's scan trips, so
+    the analyzer's flop total must scale ~2x — it only can if the while
+    loop's trip count was actually recovered (trip=1 fallback would give a
+    ~1x ratio)."""
+    from repro.core.merinda import MRConfig, init_mr
+    from repro.kernels.mr_step import ops as mr_ops
+
+    cfg = MRConfig(state_dim=2, hidden=8, dense_hidden=16, encoder="gru", fused=True)
+    params = init_mr(jax.random.key(0), cfg)
+    flops = {}
+    for T in (8, 16):
+        xs = jax.ShapeDtypeStruct((4, T, cfg.state_dim), jnp.float32)
+        step = jax.jit(lambda p, x: mr_ops.mr_step(p, cfg, x))
+        flops[T] = analyze_module(step.lower(params, xs).compile().as_text(), 1).flops
+    ratio = flops[16] / flops[8]
+    assert 1.8 <= ratio <= 2.2, (flops, ratio)
+
+
+def test_nonconstant_trip_count_degrades_gracefully():
+    """A while loop whose bound is a TRACED value has no recoverable trip
+    count; the analyzer must not crash and must fall back to trip >= 1."""
+
+    def f(x, n):
+        def cond(c):
+            return c[1] < n
+
+        def body(c):
+            return (jnp.tanh(c[0] @ c[0]), c[1] + 1)
+
+        return jax.lax.while_loop(cond, body, (x, jnp.int32(0)))[0]
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    n = jax.ShapeDtypeStruct((), jnp.int32)
+    txt = jax.jit(f).lower(x, n).compile().as_text()
+    a = analyze_module(txt, 1)
+    # one loop-body matmul counted at least once (conservative trip=1)
+    assert a.flops >= 2 * 64**3, a.flops
+
+
 def test_fusion_byte_model_smaller_than_naive():
     """Chained elementwise ops must not each pay full tensor traffic."""
 

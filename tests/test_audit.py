@@ -1,0 +1,222 @@
+"""Plan auditor: HLO-contract rules R1-R5, injected violations, audit modes."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import audit as audit_mod
+from repro.analysis import rules as R
+from repro.analysis.hlo import entry_parameters, host_transfer_ops, parse_io_aliases
+from repro.api.plan import compile_plan
+from repro.api.spec import RecoverySpec
+from repro.core import engine
+from repro.core.stream import StreamConfig
+from repro.kernels.mr_step import tiling
+
+TINY_STREAM = StreamConfig(buf_len=16, window=8, stride=8, chunk=8, steps_per_tick=2)
+
+
+def _tiny_spec(**kw):
+    base = dict(
+        state_dim=2,
+        hidden=8,
+        dense_hidden=16,
+        mode="stream",
+        n_slots=2,
+        stream=TINY_STREAM,
+    )
+    base.update(kw)
+    return RecoverySpec(**base)
+
+
+# ---------------------------------------------------------------------------
+# contract parsers (analysis/hlo.py additions)
+# ---------------------------------------------------------------------------
+
+
+def test_entry_params_and_alias_parse():
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def f(x, y):
+        return x + y
+
+    text = f.lower(jnp.zeros(4), jnp.zeros(4)).compile().as_text()
+    params = entry_parameters(text)
+    assert [p.index for p in params] == [0, 1]
+    assert all(p.dtype == "f32" for p in params)
+    assert {p.op_name for p in params} == {"x", "y"}
+    aliased = {a.param_number for a in parse_io_aliases(text)}
+    assert 0 in aliased and 1 not in aliased
+
+
+def test_host_transfer_ops_detects_callback():
+    def f(x):
+        y = jax.pure_callback(
+            lambda a: np.asarray(a) * 2.0, jax.ShapeDtypeStruct(x.shape, x.dtype), x
+        )
+        return y + 1.0
+
+    text = jax.jit(f).lower(jnp.zeros(4)).compile().as_text()
+    hits = host_transfer_ops(text)
+    assert hits, "pure_callback custom-call not detected as a host transfer"
+
+
+# ---------------------------------------------------------------------------
+# the acceptance matrix: every encoder x fused x quant cell audits clean
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "label,spec", audit_mod._matrix_specs(), ids=[c[0] for c in audit_mod._matrix_specs()]
+)
+def test_matrix_cell_audits_clean(label, spec):
+    plan = compile_plan(spec, audit="error")  # raises AuditError on violation
+    assert plan.lowering.audit.startswith("pass:"), plan.lowering.audit
+
+
+def test_audit_mode_validation_and_stamp():
+    with pytest.raises(ValueError, match="audit"):
+        compile_plan(_tiny_spec(), audit="loud")
+    plan_off = compile_plan(_tiny_spec())
+    assert plan_off.lowering.audit is None  # off = no stamp
+    plan = compile_plan(_tiny_spec(), audit="warn")
+    assert plan.lowering.audit is not None and plan.lowering.audit.startswith("pass:")
+
+
+# ---------------------------------------------------------------------------
+# injected violations: each rule must actually fire
+# ---------------------------------------------------------------------------
+
+
+def test_r1_detects_missing_donation():
+    """The epoch program compiled WITHOUT donate_argnums must fail R1."""
+    cfg = _tiny_spec(mode="offline").to_mr_config()
+    from repro.core.merinda import init_mr
+    from repro.optim import adamw_init
+
+    params = init_mr(jax.random.key(0), cfg)
+    opt = adamw_init(params)
+    ys = jnp.zeros((4, 8, cfg.state_dim), jnp.float32)
+    key = jax.random.key(0)
+    undonated = jax.jit(engine._epoch, static_argnames=("cfg", "steps", "batch_size"))
+    lowered = undonated.lower(
+        params, opt, ys, None, key, 3e-3, None, cfg=cfg, steps=4, batch_size=None
+    )
+    findings = R.check_donation("epoch", lowered.compile().as_text(), ("params", "opt_state"))
+    assert findings and all(f.rule == "R1" for f in findings)
+    # and the donated build of the same program passes
+    donated = engine.run_epoch.lower(
+        params, opt, ys, None, key, 3e-3, None, cfg=cfg, steps=4, batch_size=None
+    )
+    assert R.check_donation("epoch", donated.compile().as_text(), ("params", "opt_state")) == []
+
+
+def test_r1_vacuous_binding_is_a_finding():
+    """Metadata drift (no parameter matches the donated names) must not pass."""
+    text = jax.jit(lambda x: x + 1).lower(jnp.zeros(4)).compile().as_text()
+    findings = R.check_donation("tick", text, ("state",))
+    assert len(findings) == 1 and "vacuous" in findings[0].message
+
+
+def test_r2_detects_model_drift():
+    """An inflated VMEM-model prediction must push the ratio out of band."""
+    plan = compile_plan(_tiny_spec(encoder="gru", fused=True))
+    text, T = audit_mod._fused_step_text(plan)
+    band = tiling.residency_tolerance("gru")
+    real = tiling.config_vmem_bytes(plan.cfg, audit_mod._fused_batch(plan))
+    assert R.check_residency("fused_step", text, real, T, band) == []
+    findings = R.check_residency("fused_step", text, real * 1000, T, band)
+    assert findings and findings[0].rule == "R2"
+    assert R.check_residency("fused_step", text, 0, T, band)  # nonpositive
+
+
+def test_r3_detects_host_callback_and_allowlist():
+    def f(x):
+        y = jax.pure_callback(
+            lambda a: np.asarray(a) * 2.0, jax.ShapeDtypeStruct(x.shape, x.dtype), x
+        )
+        return y + 1.0
+
+    text = jax.jit(f).lower(jnp.zeros(4)).compile().as_text()
+    findings = R.check_host_transfers("tick", text, ())
+    assert findings and all(f.rule == "R3" for f in findings)
+    allowed = R.check_host_transfers("tick", text, ("callback",))
+    assert allowed == []
+
+
+def test_r4_detects_f32_widening_and_missing_weight():
+    def serve(xs, wxq):
+        return xs @ wxq
+
+    xs = jnp.zeros((4, 8), jnp.float32)
+    w_f32 = jnp.zeros((8, 8), jnp.float32)  # widened: should have been s8
+    text = jax.jit(serve).lower(xs, w_f32).compile().as_text()
+    findings = R.check_weight_dtypes("serving_int8", text, {"wxq": "s8"})
+    assert len(findings) == 1 and findings[0].actual == "f32"
+    missing = R.check_weight_dtypes("serving_int8", text, {"whq": "s8"})
+    assert len(missing) == 1 and "never entered" in missing[0].message
+
+
+_SYN_AR = """
+HloModule syn
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (p0: f32[1024]) -> f32[1024] {
+  %p0 = f32[1024]{0} parameter(0)
+  ROOT %ar = f32[1024]{0} all-reduce(%p0), replica_groups={{0,1}}, to_apply=%add
+}
+"""
+
+
+def test_r5_detects_unpredicted_collective():
+    findings = R.check_collectives("tick", _SYN_AR, 2, {})
+    assert findings and findings[0].rule == "R5" and "all-reduce" in findings[0].op
+    # census + wire both matching -> clean
+    ok = R.check_collectives("tick", _SYN_AR, 2, {"all-reduce": 1}, 4096.0)
+    assert ok == []
+    # census matches but wire prediction is off -> wire finding
+    wire = R.check_collectives("tick", _SYN_AR, 2, {"all-reduce": 1}, 1.0)
+    assert len(wire) == 1 and "wire" in wire[0].message
+
+
+# ---------------------------------------------------------------------------
+# satellites: budget-source provenance, sync_log
+# ---------------------------------------------------------------------------
+
+
+def test_vmem_budget_source_recorded():
+    b, src = tiling.resolve_vmem_budget()
+    assert b == tiling.detect_vmem_budget()
+    assert src == "default" or src == "memory_stats" or src.startswith("platform:")
+    plan = compile_plan(_tiny_spec(encoder="gru", fused=True, block_b="auto"))
+    assert plan.lowering.vmem_budget_source == src
+    explicit = compile_plan(
+        _tiny_spec(encoder="gru", fused=True, block_b="auto", vmem_budget_bytes=1 << 22)
+    )
+    assert explicit.lowering.vmem_budget_source == "explicit"
+    assert explicit.lowering.vmem_budget_bytes == 1 << 22
+    # unfused plans resolve no budget and record no source
+    assert compile_plan(_tiny_spec()).lowering.vmem_budget_source is None
+
+
+def test_service_sync_log_per_tick():
+    plan = compile_plan(_tiny_spec())
+    svc = plan.make_service()
+    rng = np.random.default_rng(0)
+    svc.submit(0, rng.normal(size=(TINY_STREAM.buf_len, 2)).astype(np.float32))
+    svc.fill_slots()
+    for _ in range(3):
+        svc.tick_once(rng.normal(size=(2, TINY_STREAM.chunk, 2)).astype(np.float32))
+    assert len(svc.sync_log) == 3
+    assert all(s >= 0 for s in svc.sync_log)
+    assert sum(svc.sync_log) <= svc.counters["host_syncs"]
+    assert float(np.median(svc.sync_log)) >= 1.0  # every tick reads back scalars

@@ -89,11 +89,11 @@ def test_prefill_decode_parity(arch):
     b0 = dict(full, tokens=toks[:, :S_p])
     lg, cache = M.prefill(params, b0, cfg, cache_len=S)
     got = [lg]
-    for i, t in enumerate(range(S_p, S - 1)):
+    for t in range(S_p, S - 1):
         lg, cache = M.decode_step(params, cache, toks[:, t : t + 1], jnp.asarray(t), cfg)
         got.append(lg)
 
-    for i, (a, b) in enumerate(zip(got, ref_logits)):
+    for a, b in zip(got, ref_logits):
         np.testing.assert_allclose(
             np.asarray(a, np.float32), np.asarray(b, np.float32),
             atol=0.12, rtol=0.12,  # bf16 params; logits O(10)
