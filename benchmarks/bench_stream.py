@@ -17,13 +17,18 @@ Measured:
   stream/latency_*               per-stream recovery latency for a fixed
                                  step budget, service vs the sequential
                                  (one-system-at-a-time) recover_many baseline
-  stream/fused_tick_over_unfused wall ratio of the stage-fused tick
-                                 (cfg.fused=True -> kernels/mr_step) over
-                                 the unfused stage sequence. Info-only: off
-                                 TPU both resolve to the same reference math
-                                 (~1.0x); the gated fused claim is the
-                                 deterministic interval model in
-                                 bench_stagemap.run_fused_ratio.
+  stream/banked_tick_over_composite  wall ratio of the banked one-kernel
+                                 serve tick (TickSpec tick_kernel="banked":
+                                 kernels/mr_step/tick.py ingest + substeps +
+                                 EMA readout as ONE program, one packed host
+                                 readback) over the composite stage-sequence
+                                 tick, both through plan-compiled services
+                                 end to end (run_banked_tick). GATED: this
+                                 replaced the info-only
+                                 fused_tick_over_unfused wall row — the
+                                 banked tick is a structural change (fewer
+                                 programs, fewer host syncs), so the ratio
+                                 is real wall clock even off-TPU.
 
 Sizes are deliberately small (the paper's regime: tiny models, many
 iterative updates) and fixed-seed; timing is best-of-``repeats`` (the
@@ -34,7 +39,6 @@ only dimensionless ratios are gated (benchmarks/gate.py).
 
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import subprocess
@@ -43,6 +47,7 @@ import time
 from pathlib import Path
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
@@ -104,10 +109,6 @@ def run(slots: int = 8, n_ticks: int = 8, repeats: int = 3, smoke: bool = False)
 
     t_batched = min(run_batched() for _ in range(repeats))
     t_serial = min(run_serial() for _ in range(repeats))
-    # stage-fused tick (kernels/mr_step through merinda.mr_forward): same
-    # service, cfg.fused=True. Info-only wall ratio (see module docstring),
-    # so one sweep is enough — no best-of-repeats.
-    t_fused = run_batched(dataclasses.replace(cfg, fused=True))
     timed = n_ticks - 1
     tps_batched = timed / t_batched
     tps_serial = timed / t_serial
@@ -141,12 +142,6 @@ def run(slots: int = 8, n_ticks: int = 8, repeats: int = 3, smoke: bool = False)
         ),
         ("stream/batched_over_serial", 0.0, f"x{speedup:.2f} (claim: >=2x at 4+ slots)"),
         (
-            "stream/fused_tick_over_unfused",
-            1e6 / (timed / t_fused),
-            f"x{t_batched / t_fused:.2f} wall (reference math off-TPU; gated "
-            "fused claim lives in bench_stagemap)",
-        ),
-        (
             "stream/latency_service_per_stream",
             t_service / slots * 1e6,
             f"{lat_steps} steps; {slots} streams concurrent",
@@ -167,11 +162,170 @@ def run(slots: int = 8, n_ticks: int = 8, repeats: int = 3, smoke: bool = False)
             "steps_per_tick": scfg.steps_per_tick,
             "n_ticks": timed,
             "latency_speedup_vs_recover_many": round(t_recover_serial / max(t_service, 1e-9), 3),
-            "fused_tick_over_unfused_wall": round(t_batched / max(t_fused, 1e-9), 3),
             "ticks_per_sec_batched": round(tps_batched, 2),
             "ticks_per_sec_serial": round(tps_serial, 2),
             "latency_service_per_stream_s": round(t_service / slots, 4),
             "latency_recover_many_per_stream_s": round(t_recover_serial / slots, 4),
+        },
+    }
+    return rows, metrics
+
+
+# ---------------------------------------------------------------------------
+# banked one-kernel serve tick vs the composite stage sequence
+# ---------------------------------------------------------------------------
+def run_banked_tick(slots: int = 8, n_ticks: int = 16, repeats: int = 3, smoke: bool = False):
+    """Banked one-kernel serve tick vs the composite stage-sequence serving.
+
+    K = 0 serve/monitor ticks — the configuration the banked ``mr_tick``
+    kernel collapses into ONE program (ring ingest + window substeps + head
+    + EMA readout for ALL slots, one packed [S, 4] status readback).
+
+    The GATED comparator is the composite per-slot stage sequence: ring
+    ingest as its own program, then per slot a windows + ``readout_theta``
+    program dispatch with its own device->host Theta readback and the EMA /
+    delta update on the host — the serving structure a deployment paid
+    before the banked kernel existed (the eviction-path readout, run every
+    tick), and the "no banking, stages composed separately" baseline of the
+    paper's one-kernel claim. At MR sizes each stage's math is microseconds,
+    so S per-slot dispatches + S readbacks dominate and the wall ratio is a
+    REAL structural speedup even on CPU (measured ~4x at 8 slots).
+
+    For transparency the info section also carries the ratio against the
+    one-program composite tick (``TickSpec(tick_kernel="composite")`` with
+    K=0 — added alongside the banked kernel): both are single XLA
+    executables of the same math, so that ratio sits near 1.0 off-TPU and
+    is NOT the gated claim (banked still does it in 1 host sync vs 5).
+
+    Returns (csv_rows, metrics) with gated ``banked_tick_over_composite_wall``.
+    """
+    if smoke:
+        n_ticks, repeats = 10, 2
+    from repro import api
+    from repro.core.stream import _slot_windows, readout_theta, roll_buffer
+    from repro.data.dynamics import generate_trajectory
+
+    scfg = StreamConfig(
+        buf_len=32,
+        window=8,
+        stride=8,
+        chunk=8,
+        steps_per_tick=0,  # pure serve tick: readout only, no optimizer steps
+        min_steps=10**9,
+        max_steps=10**9,
+    )
+    _, ys, _ = generate_trajectory("lorenz", n_samples=32 + 8 * (n_ticks + 2))
+    chunks = [
+        np.repeat(ys[32 + t * 8 : 32 + (t + 1) * 8][None], slots, axis=0) for t in range(n_ticks)
+    ]
+    timed = n_ticks - 1
+
+    def make_plan(kind):
+        return api.compile_plan(
+            api.RecoverySpec(
+                state_dim=3,
+                order=2,
+                hidden=8,
+                dense_hidden=16,
+                dt=0.01,
+                encoder="gru",
+                mode="stream",
+                n_slots=slots,
+                stream=scfg,
+                tick=api.TickSpec(steps_per_tick=0, tick_kernel=kind),
+            )
+        )
+
+    def fresh_service(plan):
+        svc = plan.make_service()
+        for i in range(slots):
+            svc.submit(i, ys[:32])
+        svc.fill_slots()
+        return svc
+
+    def run_service_ticks(plan):
+        """One-program tick loop through the real service (banked or composite)."""
+        best, syncs = float("inf"), 0.0
+        for _ in range(repeats):
+            svc = fresh_service(plan)
+            svc.tick_once(chunks[0])  # compile
+            t0 = time.perf_counter()
+            for t in range(1, n_ticks):
+                svc.tick_once(chunks[t])
+            best = min(best, time.perf_counter() - t0)
+            syncs = float(np.median(svc.sync_log[1:]))
+        return best, syncs
+
+    plan_b, plan_c = make_plan("banked"), make_plan("composite")
+    t_banked, syncs_banked = run_service_ticks(plan_b)
+    t_ctick, syncs_ctick = run_service_ticks(plan_c)
+
+    # composite per-slot stage sequence (the gated baseline): ingest program,
+    # then per slot a windows+readout program and its own Theta readback,
+    # EMA + convergence delta on the host. Per-slot params are hoisted OUT of
+    # the loop (K=0 freezes them) — the baseline is not handicapped with
+    # avoidable per-tick work.
+    cfg = plan_c.cfg
+    ingest = jax.jit(
+        lambda by, bu, ny, nu: (roll_buffer(by, ny), roll_buffer(bu, nu)),
+        donate_argnums=(0, 1),
+    )
+
+    @jax.jit
+    def slot_read(p, by, bu, mu, sd):
+        yw, uw = _slot_windows(by, bu, mu, sd, scfg)
+        return readout_theta(p, cfg, yw, uw)
+
+    no_u = np.zeros((slots, scfg.chunk, cfg.input_dim), np.float32)
+    best_seq = float("inf")
+    for _ in range(repeats):
+        svc = fresh_service(plan_c)
+        st = svc.state
+        slot_params = [jax.tree.map(lambda a: a[s], st.params) for s in range(slots)]
+        mean, scale = st.mean, st.scale
+        buf_y, buf_u, theta_h = st.buf_y, st.buf_u, np.asarray(st.theta)
+
+        def tick_stage_seq(buf_y, buf_u, chunk, theta_h):
+            buf_y, buf_u = ingest(buf_y, buf_u, jnp.asarray(chunk), jnp.asarray(no_u))
+            raw = np.stack(
+                [
+                    np.asarray(slot_read(slot_params[s], buf_y[s], buf_u[s], mean[s], scale[s]))
+                    for s in range(slots)
+                ]
+            )
+            theta_new = scfg.ema * theta_h + (1.0 - scfg.ema) * raw
+            delta = np.max(np.abs(theta_new - theta_h), axis=(1, 2))
+            delta /= np.max(np.abs(theta_new), axis=(1, 2)) + 1e-3  # noqa: F841
+            return buf_y, buf_u, theta_new
+
+        buf_y, buf_u, theta_h = tick_stage_seq(buf_y, buf_u, chunks[0], theta_h)  # compile
+        t0 = time.perf_counter()
+        for t in range(1, n_ticks):
+            buf_y, buf_u, theta_h = tick_stage_seq(buf_y, buf_u, chunks[t], theta_h)
+        best_seq = min(best_seq, time.perf_counter() - t0)
+
+    ratio = best_seq / t_banked
+    rows = [
+        (
+            "stream/banked_tick_over_composite",
+            1e6 / (timed / t_banked),
+            f"x{ratio:.2f} wall, K=0 serve ticks: one banked program + 1 sync "
+            f"vs ingest + {slots} per-slot readout dispatches + {slots} syncs "
+            f"(one-program composite tick: x{t_ctick / t_banked:.2f}, "
+            f"{syncs_ctick:.0f} syncs/tick)",
+        ),
+    ]
+    metrics = {
+        "banked_tick_over_composite_wall": round(ratio, 3),
+        "info": {
+            "slots": slots,
+            "n_ticks": timed,
+            "banked_ticks_per_sec": round(timed / t_banked, 2),
+            "composite_stage_seq_ticks_per_sec": round(timed / best_seq, 2),
+            "composite_tick_ticks_per_sec": round(timed / t_ctick, 2),
+            "banked_over_composite_tick_wall": round(t_ctick / t_banked, 3),
+            "banked_host_syncs_per_tick": syncs_banked,
+            "composite_tick_host_syncs_per_tick": syncs_ctick,
         },
     }
     return rows, metrics
@@ -332,6 +486,10 @@ def main(smoke: bool = False):
     rows, metrics = run(smoke=smoke)
     for name, us, derived in rows:
         emit(name, us, derived)
+    banked_rows, banked_metrics = run_banked_tick(smoke=smoke)
+    for name, us, derived in banked_rows:
+        emit(name, us, derived)
+    metrics["banked_tick"] = banked_metrics
     mesh_rows, mesh_metrics = run_mesh_scaling(smoke=smoke)
     for name, us, derived in mesh_rows:
         emit(name, us, derived)

@@ -88,15 +88,19 @@ def run_smoke() -> int:
     rows, m_stream = bench_stream.run(smoke=True)
     for name, us, derived in rows:
         emit(name, us, derived)
+    rows, m_banked = bench_stream.run_banked_tick(smoke=True)
+    for name, us, derived in rows:
+        emit(name, us, derived)
     rows, m_mesh = bench_stream.run_mesh_scaling(smoke=True)
     for name, us, derived in rows:
         emit(name, us, derived)
     info = m_stream.pop("info")
+    info["banked_tick"] = m_banked.pop("info")
     info["mesh"] = m_mesh.pop("info")
     write_bench_json(
         REPO_ROOT / "BENCH_stream.json",
         "stream",
-        gated={**m_stream, **m_mesh},
+        gated={**m_stream, **m_banked, **m_mesh},
         info=info,
         smoke=True,
     )

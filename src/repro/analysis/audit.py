@@ -246,10 +246,44 @@ def audit_plan(
             state = stream_mod.shard_slots(state, plan.mesh)
         new_y = jnp.zeros((spec.n_slots, scfg.chunk, cfg.state_dim), jnp.float32)
         new_u = jnp.zeros((spec.n_slots, scfg.chunk, cfg.input_dim), jnp.float32)
-        lowered = stream_mod.tick.lower(state, new_y, new_u, key, cfg=cfg, scfg=scfg)
+        banked_tick = plan.lowering.tick_kernel == "banked"
+        quant_tick = plan.lowering.quant_serving and scfg.steps_per_tick == 0
+        if banked_tick:
+            lowered = stream_mod.tick_banked.lower(
+                state,
+                new_y,
+                new_u,
+                key,
+                cfg=cfg,
+                scfg=scfg,
+                quant=quant_tick,
+                slots_per_bank=plan.lowering.tick_slots_per_bank or 1,
+            )
+        else:
+            lowered = stream_mod.tick.lower(state, new_y, new_u, key, cfg=cfg, scfg=scfg)
         text = _compiled_text(lowered)
         run("R1", "tick", R.check_donation, text, ("state",))
         run("R3", "tick", R.check_host_transfers, text, host_allowlist)
+        if banked_tick and not scfg.steps_per_tick:
+            # K=0 serve tick: the compiled program IS the banked mr_tick
+            # serving segment, so its traffic is held to the tick-level VMEM
+            # model directly (training ticks bury the kernel inside the scan
+            # program, where per-step attribution is the scan's, not the
+            # tick kernel's)
+            local_slots = spec.n_slots // max(spec.mesh_slots, 1)
+            predicted = tiling.tick_vmem_bytes(
+                cfg, scfg, slots_per_bank=local_slots, int8=quant_tick
+            )
+            run(
+                "R2",
+                "tick_banked",
+                R.check_residency,
+                text,
+                predicted,
+                scfg.window,
+                tiling.TICK_RESIDENCY_BAND,
+                family=encoders.get_encoder(cfg.encoder).family,
+            )
         if plan.mesh is not None:
             n_dev = int(plan.mesh.devices.size)
             predicted = predict_tick_collectives(plan.mesh)
@@ -307,7 +341,7 @@ _TINY_STREAM = dict(buf_len=16, window=8, stride=8, chunk=8, steps_per_tick=2)
 
 def _matrix_specs():
     """Every encoder x fused x quant cell as a (label, RecoverySpec) pair."""
-    from repro.api.spec import RecoverySpec
+    from repro.api.spec import RecoverySpec, TickSpec
     from repro.core.stream import StreamConfig
 
     cells = []
@@ -326,14 +360,36 @@ def _matrix_specs():
                     **_TINY,
                 )
                 cells.append((label, spec))
+    # banked one-kernel tick cells (kernels/mr_step/tick.py): the supporting
+    # GRU families with a training tick, the K=0 serve tick — where R2 runs
+    # against the tick program's own OPTIMIZED HLO — and its int8 serve twin
+    banked = [
+        ("gru:tick=banked", "gru", 2, "fp32"),
+        ("gru_flow:tick=banked", "gru_flow", 2, "fp32"),
+        ("gru:tick=banked:K=0", "gru", 0, "fp32"),
+        ("gru:tick=banked:K=0:int8=1", "gru", 0, "int8_pwl"),
+    ]
+    for label, name, k, precision in banked:
+        spec = RecoverySpec(
+            encoder=name,
+            precision=precision,
+            stream=StreamConfig(**{**_TINY_STREAM, "steps_per_tick": k}),
+            tick=TickSpec(steps_per_tick=k, tick_kernel="banked"),
+            **_TINY,
+        )
+        cells.append((label, spec))
     return cells
 
 
-def _run_mesh_cell(n_devices: int, rules: tuple[str, ...]) -> dict:
+def _run_mesh_cell(
+    n_devices: int, rules: tuple[str, ...], tick_kernel: str = "composite"
+) -> dict:
     """Audit one slot-sharded plan under ``n_devices`` CPU virtual devices.
 
     XLA_FLAGS must be set before jax initializes, so the meshed cell runs in
     a subprocess (same pattern as tests/conftest.run_devices).
+    ``tick_kernel`` picks the tick structure the sharded cell compiles
+    ("banked" runs R1/R3/R5 against the banked tick program's HLO).
     """
     snippet = textwrap.dedent(
         f"""
@@ -345,12 +401,17 @@ def _run_mesh_cell(n_devices: int, rules: tuple[str, ...]) -> dict:
         import json
         from repro.analysis import audit as audit_mod
         from repro.api.plan import compile_plan
-        from repro.api.spec import RecoverySpec
+        from repro.api.spec import RecoverySpec, TickSpec
         from repro.core.stream import StreamConfig
 
         spec = RecoverySpec(
             encoder="gru", fused=True, mesh_slots={n_devices},
-            stream=StreamConfig(**{_TINY_STREAM!r}), **{_TINY!r},
+            stream=StreamConfig(**{_TINY_STREAM!r}),
+            tick=TickSpec(
+                steps_per_tick={_TINY_STREAM["steps_per_tick"]!r},
+                tick_kernel={tick_kernel!r},
+            ),
+            **{_TINY!r},
         )
         report = audit_mod.audit_plan(compile_plan(spec), rules={rules!r})
         print("AUDITCELL " + json.dumps(report.to_json()))
@@ -437,15 +498,20 @@ def main(argv=None) -> int:
         print(f"{label}: {report.verdict}")
 
     if args.mesh_devices and "R5" in active:
-        cell = _run_mesh_cell(args.mesh_devices, active)
-        label = f"gru:fused=1:mesh={args.mesh_devices}"
-        cells.append({"cell": label, **cell})
-        if cell["verdict"] == "infra-error":
-            # a crashed subprocess is an environment problem, not a contract
-            # violation — surface it loudly but do not fail warn-mode CI
-            n_warn += 1
-            print(f"WARN  {label} mesh cell failed to run:\n{cell.get('stderr', '')}")
-        else:
+        mesh_cells = [
+            (f"gru:fused=1:mesh={args.mesh_devices}", "composite"),
+            (f"gru:tick=banked:mesh={args.mesh_devices}", "banked"),
+        ]
+        for label, tick_kernel in mesh_cells:
+            cell = _run_mesh_cell(args.mesh_devices, active, tick_kernel=tick_kernel)
+            cells.append({"cell": label, **cell})
+            if cell["verdict"] == "infra-error":
+                # a crashed subprocess is an environment problem, not a
+                # contract violation — surface it loudly but do not fail
+                # warn-mode CI
+                n_warn += 1
+                print(f"WARN  {label} mesh cell failed to run:\n{cell.get('stderr', '')}")
+                continue
             for f in cell["findings"]:
                 rule = f["rule"]
                 line = f"[{rule}] {f['program']}: {f['message']}"

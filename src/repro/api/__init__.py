@@ -15,7 +15,7 @@ deprecated wrappers that build a spec internally.
 """
 
 from repro.api.plan import Lowering, RecoveryPlan, compile_plan
-from repro.api.spec import MODES, PRECISIONS, RecoverySpec
+from repro.api.spec import MODES, PRECISIONS, TICK_KERNELS, RecoverySpec, TickSpec
 from repro.core.engine import history_from_metrics
 from repro.core.merinda import prune_theta
 
@@ -25,6 +25,8 @@ __all__ = [
     "Lowering",
     "RecoveryPlan",
     "RecoverySpec",
+    "TICK_KERNELS",
+    "TickSpec",
     "compile_plan",
     "history_from_metrics",
     "prune_theta",

@@ -70,6 +70,11 @@ class Lowering:
     # "memory_stats", "platform:<key>" or "default" (tiling.resolve_vmem_budget)
     vmem_budget_source: str | None = None
     audit: str | None = None  # audit verdict stamp ("pass:R1,R3,..."/"fail:R2")
+    # stream mode: the resolved tick structure — "banked" (one-kernel mr_tick
+    # serving segment) or "composite" (stage-sequence tick), and the bank size
+    # the tick-level VMEM model settled on (None for composite)
+    tick_kernel: str | None = None
+    tick_slots_per_bank: int | None = None
 
 
 class RecoveryPlan:
@@ -138,6 +143,15 @@ class RecoveryPlan:
         return self.programs["recover_many"](ys_batch, us_batch, keys, self.spec.lr)
 
     # -- stream: the slot-based online service --------------------------------
+    @property
+    def tick(self):
+        """The compiled tick program (stream mode): ``(state, new_y, new_u,
+        key)`` with cfg/scfg/kernel choice pre-bound. Composite returns the
+        next SlotState; banked returns ``(state, status[S, 4])`` — the packed
+        per-slot ``[delta, loss, steps, active]`` read back in one sync."""
+        self._require_mode("stream")
+        return self.programs["tick"]
+
     def make_service(self, seed: int | None = None) -> RecoveryService:
         """The online multi-tenant service, with SlotState sharded over the
         plan's mesh (trivial on mesh_slots=1)."""
@@ -238,6 +252,49 @@ def _resolve_lowering(spec: RecoverySpec, row: encoders.EncoderSpec) -> Lowering
     )
 
 
+def _resolve_tick_kernel(
+    spec: RecoverySpec, cfg: MRConfig, scfg: StreamConfig, lowering: Lowering
+) -> tuple[str, int | None]:
+    """Resolve ``TickSpec.tick_kernel`` -> ("banked"|"composite", slots_per_bank).
+
+    ``"composite"`` short-circuits (the bitwise-stable default). ``"banked"``
+    is an explicit request: an unsupported family is a compile-time
+    ValueError, and a budget the model can't fit still runs at bank size 1
+    (the user overrode the heuristic). ``"auto"`` picks banked only when the
+    family supports it AND ``tiling.auto_slots_per_bank`` finds a bank size
+    whose residency fits the resolved VMEM budget — otherwise composite.
+    The int8 serving twin is engaged only for pure serve ticks
+    (``steps_per_tick == 0`` with int8_pwl serving), matching what the
+    compiled program will actually run.
+    """
+    from repro.kernels.mr_step import tick as tick_mod
+
+    requested = spec.tick_spec().tick_kernel
+    if requested == "composite":
+        return "composite", None
+    quant_tick = lowering.quant_serving and scfg.steps_per_tick == 0
+    supported = tick_mod.tick_supported(cfg, int8=quant_tick)
+    if not supported:
+        if requested == "banked":
+            raise ValueError(
+                f"tick_kernel='banked' requires a GRU-family encoder "
+                f"(kernels/mr_step/tick.py banks the gru cell); got "
+                f"encoder={spec.encoder!r} — use 'composite' or 'auto'"
+            )
+        return "composite", None
+    if spec.vmem_budget_bytes is not None:
+        budget = spec.vmem_budget_bytes
+    else:
+        budget, _ = tiling.resolve_vmem_budget()
+    local_slots = spec.n_slots // spec.mesh_slots  # the per-device slot shard
+    spb = tiling.auto_slots_per_bank(cfg, scfg, local_slots, budget, int8=quant_tick)
+    if spb < 1:
+        if requested == "banked":
+            return "banked", 1  # explicit request: run anyway, smallest bank
+        return "composite", None
+    return "banked", spb
+
+
 def _compile_time_batch(spec: RecoverySpec) -> int | None:
     """The fused-stage batch dimension knowable at compile time.
 
@@ -311,7 +368,20 @@ def compile_plan(spec: RecoverySpec, audit: str = "off") -> RecoveryPlan:
             n_active=spec.n_active,
         )
     else:  # stream
-        programs["tick"] = functools.partial(stream_mod.tick, cfg=cfg, scfg=scfg)
+        tick_kernel, spb = _resolve_tick_kernel(spec, cfg, scfg, lowering)
+        lowering = dataclasses.replace(
+            lowering, tick_kernel=tick_kernel, tick_slots_per_bank=spb
+        )
+        if tick_kernel == "banked":
+            programs["tick"] = functools.partial(
+                stream_mod.tick_banked,
+                cfg=cfg,
+                scfg=scfg,
+                quant=lowering.quant_serving and scfg.steps_per_tick == 0,
+                slots_per_bank=spb,
+            )
+        else:
+            programs["tick"] = functools.partial(stream_mod.tick, cfg=cfg, scfg=scfg)
     plan = RecoveryPlan(spec, cfg, scfg, lowering, mesh, programs)
 
     if audit != "off":

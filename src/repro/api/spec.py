@@ -31,6 +31,40 @@ from repro.core.stream import StreamConfig
 
 MODES = ("offline", "batch", "stream")
 PRECISIONS = ("fp32", "int8_pwl")
+TICK_KERNELS = ("banked", "composite", "auto")
+
+
+@dataclasses.dataclass(frozen=True)
+class TickSpec:
+    """Declarative service-tick request (stream mode).
+
+    ``tick_kernel`` picks the tick's serving structure: ``"composite"`` is
+    the stage-sequence tick (``core/stream.tick``: ingest, K vmapped
+    recovery steps and the EMA readout as separate XLA ops — the
+    bitwise-stable legacy default), ``"banked"`` the one-kernel banked tick
+    (``kernels/mr_step/tick.py``: ingest + window substeps + EMA readout in
+    a single slot-banked ``pallas_call``, packed per-slot status for a
+    single host readback), and ``"auto"`` lets ``compile_plan`` resolve from
+    the encoder family and the tick-level VMEM model
+    (``tiling.auto_slots_per_bank`` against ``detect_vmem_budget``); the
+    resolved choice and slots-per-bank land in ``plan.lowering``.
+
+    ``steps_per_tick=0`` is a pure serve/monitor tick: no optimizer steps,
+    just ingest + readout — the configuration the banked kernel serves as
+    one program.
+    """
+
+    steps_per_tick: int = 8  # K optimizer steps per slot per tick (0 = serve-only)
+    ema_decay: float = 0.9  # smoothing for the per-tick Theta readout
+    tick_kernel: str = "composite"  # "banked" | "composite" | "auto"
+
+    def __post_init__(self):
+        if self.tick_kernel not in TICK_KERNELS:
+            raise ValueError(f"tick_kernel must be one of {TICK_KERNELS}, got {self.tick_kernel!r}")
+        if self.steps_per_tick < 0:
+            raise ValueError(f"steps_per_tick must be >= 0, got {self.steps_per_tick}")
+        if not 0.0 <= self.ema_decay < 1.0:
+            raise ValueError(f"ema_decay must be in [0, 1), got {self.ema_decay}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,6 +112,7 @@ class RecoverySpec:
     # -- stream mode ---------------------------------------------------------
     n_slots: int = 4
     stream: StreamConfig | None = None  # None = StreamConfig() defaults
+    tick: TickSpec | None = None  # None = TickSpec() defaults (composite)
 
     # -- placement -----------------------------------------------------------
     mesh_slots: int = 1  # devices sharding the slot axis (1 = trivial mesh)
@@ -125,8 +160,28 @@ class RecoverySpec:
                     f"(lr={self.stream.lr}, batch_size={self.stream.batch_size}); "
                     f"set them equal (the StreamConfig governs the tick)"
                 )
-        elif self.mesh_slots != 1:
-            raise ValueError(f"mesh_slots > 1 requires mode='stream', got mode={self.mode!r}")
+            if (
+                self.tick is not None
+                and self.stream is not None
+                and (
+                    self.stream.steps_per_tick != self.tick.steps_per_tick
+                    or self.stream.ema != self.tick.ema_decay
+                )
+            ):
+                # same one-record rule as lr/batch_size above: the compiled
+                # tick trains with StreamConfig's copies, so a diverging
+                # TickSpec would be silently ignored
+                raise ValueError(
+                    f"stream-mode tick conflict: tick= has (steps_per_tick="
+                    f"{self.tick.steps_per_tick}, ema_decay={self.tick.ema_decay}) but "
+                    f"stream= has (steps_per_tick={self.stream.steps_per_tick}, "
+                    f"ema={self.stream.ema}); set them equal"
+                )
+        else:
+            if self.mesh_slots != 1:
+                raise ValueError(f"mesh_slots > 1 requires mode='stream', got mode={self.mode!r}")
+            if self.tick is not None:
+                raise ValueError(f"tick= requires mode='stream', got mode={self.mode!r}")
 
     # -- bridges to the legacy config objects --------------------------------
     def to_mr_config(self, block_b: int | None = None) -> MRConfig:
@@ -154,8 +209,19 @@ class RecoverySpec:
 
     def stream_config(self) -> StreamConfig:
         if self.stream is not None:
-            return self.stream  # __post_init__ pinned lr/batch_size agreement
-        return StreamConfig(lr=self.lr, batch_size=self.batch_size)
+            return self.stream  # __post_init__ pinned lr/batch_size/tick agreement
+        kw = dict(lr=self.lr, batch_size=self.batch_size)
+        if self.tick is not None:
+            kw.update(steps_per_tick=self.tick.steps_per_tick, ema=self.tick.ema_decay)
+        return StreamConfig(**kw)
+
+    def tick_spec(self) -> TickSpec:
+        """The resolved TickSpec (mirrors stream_config when ``tick`` is None,
+        so the two records can never disagree about the tick geometry)."""
+        if self.tick is not None:
+            return self.tick
+        scfg = self.stream_config()
+        return TickSpec(steps_per_tick=scfg.steps_per_tick, ema_decay=scfg.ema)
 
     @classmethod
     def from_mr_config(cls, cfg: MRConfig, **overrides) -> "RecoverySpec":

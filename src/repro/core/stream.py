@@ -81,7 +81,7 @@ class StreamConfig:
     window: int = 32  # T: window length fed to the encoder
     stride: int = 8  # window stride over the buffer
     chunk: int = 16  # C: new observations ingested per tick
-    steps_per_tick: int = 8  # K: optimizer steps per slot per tick
+    steps_per_tick: int = 8  # K: optimizer steps per slot per tick (0 = serve-only)
     lr: float = 3e-3
     batch_size: int | None = None  # windows per step (None = all N windows)
     ema: float = 0.9  # smoothing for the per-tick Theta readout
@@ -96,8 +96,11 @@ class StreamConfig:
             # roll_buffer would silently GROW the buffer past buf_len and
             # every static shape downstream (admit, n_windows) would be wrong
             raise ValueError(f"chunk {self.chunk} exceeds buf_len {self.buf_len}")
-        if self.stride < 1 or self.steps_per_tick < 1 or self.chunk < 1:
-            raise ValueError("stride, chunk and steps_per_tick must be >= 1")
+        if self.stride < 1 or self.chunk < 1:
+            raise ValueError("stride and chunk must be >= 1")
+        if self.steps_per_tick < 0:
+            # 0 is a pure serve/monitor tick: ingest + readout, no training
+            raise ValueError("steps_per_tick must be >= 0")
 
     @property
     def n_windows(self) -> int:
@@ -281,18 +284,26 @@ def tick(
         buf_y, buf_u, state.mean, state.scale
     )
 
-    n_slots = buf_y.shape[0]
-    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n_slots))
-    params, opt, theta, recon = jax.vmap(
-        lambda p, o, y, u, k, s: _recover_steps(p, o, y, u, k, s, cfg=cfg, scfg=scfg)
-    )(state.params, state.opt, yw, uw, keys, state.steps)
+    if scfg.steps_per_tick:
+        n_slots = buf_y.shape[0]
+        keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n_slots))
+        params, opt, theta, recon = jax.vmap(
+            lambda p, o, y, u, k, s: _recover_steps(p, o, y, u, k, s, cfg=cfg, scfg=scfg)
+        )(state.params, state.opt, yw, uw, keys, state.steps)
+        loss = jnp.where(state.active, recon, jnp.inf)
+    else:
+        # serve/monitor tick: no optimizer steps, readout only
+        params, opt, loss = state.params, state.opt, state.loss
+        theta = jax.vmap(lambda p, y, u: mr_forward(p, cfg, y, u)[0].mean(axis=0))(params, yw, uw)
 
     # EMA-smoothed readout: the window set (and its normalization) shifts a
     # little every tick, so the raw per-tick Theta jitters even after the
     # model has converged; the EMA is what the delta threshold watches.
-    # First tick after admission (steps == 0) seeds the EMA directly.
+    # The first tick after admission seeds the EMA directly (a fresh slot is
+    # at step 0 with its delta still at the admission-time inf).
+    seed = (state.steps == 0) & jnp.isinf(state.delta)
     theta = jnp.where(
-        (state.steps == 0)[:, None, None],
+        seed[:, None, None],
         theta,
         scfg.ema * state.theta + (1.0 - scfg.ema) * theta,
     )
@@ -309,9 +320,90 @@ def tick(
         buf_u=buf_u,
         theta=theta,
         delta=delta,
-        loss=jnp.where(state.active, recon, jnp.inf),
+        loss=loss,
         steps=state.steps + scfg.steps_per_tick,
     )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "scfg", "quant", "slots_per_bank"), donate_argnums=(0,)
+)
+def tick_banked(
+    state: SlotState,
+    new_y: jnp.ndarray,  # [S, C, n]
+    new_u: jnp.ndarray,  # [S, C, m]
+    key: jax.Array,
+    *,
+    cfg: MRConfig,
+    scfg: StreamConfig,
+    quant: bool = False,
+    slots_per_bank: int = 1,
+) -> tuple[SlotState, jnp.ndarray]:
+    """Banked one-kernel tick: same contract as ``tick``, plus packed status.
+
+    The training segment (K > 0) is BITWISE the composite tick's — the same
+    vmapped ``_recover_steps`` scan — but the whole serving segment (ring
+    ingest, window substeps, head, EMA Theta readout, delta) collapses into
+    one slot-banked ``mr_tick`` program (kernels/mr_step/tick.py) instead of
+    the composite stage sequence. Returns ``(state, status)`` where status
+    packs ``[delta, loss, steps, active]`` per slot into one [S, 4] array so
+    ``RecoveryService.tick_once`` needs a single host readback per tick.
+    ``quant`` serves the readout through the int8/PWL twin (K = 0 monitor
+    ticks: the serving configuration).
+    """
+    from repro.kernels.mr_step.tick import mr_tick
+
+    if scfg.steps_per_tick:
+        buf_y = roll_buffer(state.buf_y, new_y)
+        buf_u = roll_buffer(state.buf_u, new_u)
+        yw, uw = jax.vmap(lambda y, u, mu, sd: _slot_windows(y, u, mu, sd, scfg))(
+            buf_y, buf_u, state.mean, state.scale
+        )
+        n_slots = buf_y.shape[0]
+        keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n_slots))
+        # the in-scan forward readout is unused here (the banked kernel reads
+        # out below, from the post-training params) — XLA dead-code-eliminates
+        # it, leaving exactly the composite tick's training program
+        params, opt, _, recon = jax.vmap(
+            lambda p, o, y, u, k, s: _recover_steps(p, o, y, u, k, s, cfg=cfg, scfg=scfg)
+        )(state.params, state.opt, yw, uw, keys, state.steps)
+        loss = jnp.where(state.active, recon, jnp.inf)
+    else:
+        params, opt, loss = state.params, state.opt, state.loss
+
+    seed = (state.steps == 0) & jnp.isinf(state.delta)
+    buf_y, buf_u, theta, delta = mr_tick(
+        params,
+        cfg,
+        scfg,
+        state.buf_y,
+        state.buf_u,
+        new_y,
+        new_u,
+        state.mean,
+        state.scale,
+        state.theta,
+        seed,
+        state.active,
+        quant=quant,
+        slots_per_bank=slots_per_bank,
+    )
+    delta = jnp.where(state.active, delta, jnp.inf)
+    steps = state.steps + scfg.steps_per_tick
+    state = state._replace(
+        params=params,
+        opt=opt,
+        buf_y=buf_y,
+        buf_u=buf_u,
+        theta=theta,
+        delta=delta,
+        loss=loss,
+        steps=steps,
+    )
+    status = jnp.stack(
+        [delta, loss, steps.astype(jnp.float32), state.active.astype(jnp.float32)], axis=-1
+    )
+    return state, status
 
 
 def readout_theta(
@@ -390,9 +482,11 @@ class RecoveryService:
 
             warn_deprecated_once(
                 "stream.RecoveryService",
-                "direct RecoveryService(...) construction is deprecated; build a "
+                "direct RecoveryService(...) construction (and the service-internal "
+                "tick jit path it binds) is deprecated; build a "
                 "RecoverySpec(mode='stream') and use api.compile_plan(spec)"
-                ".make_service() instead",
+                ".make_service() instead — the plan compiles the tick program "
+                "(composite or banked, TickSpec.tick_kernel) alongside the others",
             )
         self._tick = tick_program or functools.partial(tick, cfg=cfg, scfg=scfg)
         self.key = jax.random.key(seed)
@@ -508,16 +602,30 @@ class RecoveryService:
         if chunks_u is None:
             chunks_u = np.zeros((S, C, m), np.float32)
         with self._mesh_ctx():
-            self.state = self._tick(
+            out = self._tick(
                 self.state,
                 jnp.asarray(chunks_y, jnp.float32),
                 jnp.asarray(chunks_u, jnp.float32),
                 jax.random.fold_in(self.key, self.ticks),
             )
         self.ticks += 1
-        delta = self._host_read(self.state.delta)
-        steps = self._host_read(self.state.steps)
-        active = self._host_read(self.state.active)
+        # kernel-path-aware sync accounting: the banked tick returns (state,
+        # status) with every per-slot scalar packed into ONE array, so the
+        # whole eviction scan costs a single host readback; the composite
+        # tick reads each SlotState leaf separately (the 5.17-syncs/tick
+        # baseline of the ROADMAP device-resident-control-plane item).
+        banked = not isinstance(out, SlotState)
+        loss = None
+        if banked:
+            self.state, status = out
+            snap = self._host_read(status)
+            delta, loss = snap[:, 0], snap[:, 1]
+            steps, active = snap[:, 2].astype(np.int64), snap[:, 3] > 0
+        else:
+            self.state = out
+            delta = self._host_read(self.state.delta)
+            steps = self._host_read(self.state.steps)
+            active = self._host_read(self.state.active)
         evicted = []
         for s in range(S):
             if not active[s]:
@@ -528,12 +636,17 @@ class RecoveryService:
                 res = self._evict(s, "converged" if converged else "budget")
                 evicted.append(res)
                 self._admit_into(s)
+        if not banked or evicted:
+            # eviction/admission changed the slot map: re-read the device copy
+            active_now = int(self._host_read(self.state.active).sum())
+        else:
+            active_now = int(active.sum())
         info = {
             "tick": self.ticks,
             "evicted": evicted,
-            "active": int(self._host_read(self.state.active).sum()),
+            "active": active_now,
             "delta": delta,
-            "loss": self._host_read(self.state.loss),
+            "loss": loss if banked else self._host_read(self.state.loss),
             "steps": steps,
         }
         self.sync_log.append(self.counters["host_syncs"] - syncs0)

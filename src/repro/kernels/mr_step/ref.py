@@ -209,3 +209,145 @@ def mr_step_int8_reference(
     w1 = w1q.astype(f32) * w1_scale
     w2 = w2q.astype(f32) * w2_scale
     return head_math(hs[:, -1, :], w1, b1, w2, b2)
+
+
+# ---------------------------------------------------------------------------
+# banked one-kernel tick oracles (serve-only; see kernels/mr_step/tick.py)
+# ---------------------------------------------------------------------------
+def _tick_ema_delta(raw, theta0, seed, active, ema):
+    """EMA blend + relative coefficient delta (core/stream.tick readout math)."""
+    theta = jnp.where(seed[:, None], raw, ema * theta0 + (1.0 - ema) * raw)
+    change = jnp.max(jnp.abs(theta - theta0), axis=-1)
+    delta = change / (jnp.max(jnp.abs(theta), axis=-1) + 1e-3)
+    return theta, jnp.where(active, delta, jnp.inf)
+
+
+def mr_tick_reference(
+    buf_y: jnp.ndarray,  # [S, L, n] pre-roll ring buffers
+    new_y: jnp.ndarray,  # [S, C, n]
+    mean: jnp.ndarray,  # [S, n]
+    scale: jnp.ndarray,  # [S, n]
+    theta0: jnp.ndarray,  # [S, Kc] previous readout, flattened
+    seed: jnp.ndarray,  # [S] bool
+    active: jnp.ndarray,  # [S] bool
+    wx: jnp.ndarray,  # [S, D, 3H] per-slot gate weights
+    wh: jnp.ndarray,  # [S, H, 3H]
+    b: jnp.ndarray,  # [S, 3H]
+    time_scale: jnp.ndarray,  # [S, H]
+    w1: jnp.ndarray,  # [S, H, Dh]
+    b1: jnp.ndarray,  # [S, Dh]
+    w2: jnp.ndarray,  # [S, Dh, Ko]
+    b2: jnp.ndarray,  # [S, Ko]
+    buf_u: jnp.ndarray | None = None,  # [S, L, m] when m > 0
+    new_u: jnp.ndarray | None = None,
+    *,
+    flow: bool,
+    window: int,
+    stride: int,
+    ema: float,
+):
+    """Banked-tick oracle: the EXISTING ingest/step/readout composition —
+    data/windows roll + window views, ``mr_step_reference`` per slot, EMA +
+    delta — returning (buf_y, theta [S, Kc], delta [S][, buf_u]) in the
+    kernel's output order."""
+    from repro.data.windows import roll_buffer, window_views
+
+    buf_y = roll_buffer(buf_y, new_y)
+    has_u = buf_u is not None
+    if has_u:
+        buf_u = roll_buffer(buf_u, new_u)
+    n_coef = theta0.shape[-1]
+    hidden = wh.shape[1]
+    dts = jnp.ones((window,), jnp.float32)
+
+    def one(y, u, mu, sd, wx_s, wh_s, b_s, ts_s, w1_s, b1_s, w2_s, b2_s):
+        xs = window_views((y - mu) / sd, window, stride)
+        if u is not None:
+            xs = jnp.concatenate([xs, window_views(u, window, stride)], axis=-1)
+        h0 = jnp.zeros((xs.shape[0], hidden), jnp.float32)
+        out = mr_step_reference(
+            xs, h0, wx_s, wh_s, b_s, ts_s, dts, w1_s, b1_s, w2_s, b2_s, flow=flow
+        )
+        return jnp.mean(out[:, :n_coef], axis=0)
+
+    if has_u:
+        raw = jax.vmap(one)(buf_y, buf_u, mean, scale, wx, wh, b, time_scale, w1, b1, w2, b2)
+    else:
+        raw = jax.vmap(lambda y, mu, sd, *w: one(y, None, mu, sd, *w))(
+            buf_y, mean, scale, wx, wh, b, time_scale, w1, b1, w2, b2
+        )
+    theta, delta = _tick_ema_delta(raw, theta0, seed, active, ema)
+    return (buf_y, theta, delta, buf_u) if has_u else (buf_y, theta, delta)
+
+
+def mr_tick_int8_reference(
+    buf_y: jnp.ndarray,
+    new_y: jnp.ndarray,
+    mean: jnp.ndarray,
+    scale: jnp.ndarray,
+    theta0: jnp.ndarray,
+    seed: jnp.ndarray,
+    active: jnp.ndarray,
+    wxq: jnp.ndarray,  # int8 [S, D, 3H]
+    whq: jnp.ndarray,  # int8 [S, H, 3H]
+    wx_scale: jnp.ndarray,  # [S, 1, 3H]
+    wh_scale: jnp.ndarray,  # [S, 1, 3H]
+    b: jnp.ndarray,  # [S, 3H]
+    w1q: jnp.ndarray,  # int8 [S, H, Dh]
+    w1_scale: jnp.ndarray,  # [S, 1, Dh]
+    b1: jnp.ndarray,  # [S, Dh]
+    w2q: jnp.ndarray,  # int8 [S, Dh, Ko]
+    w2_scale: jnp.ndarray,  # [S, 1, Ko]
+    b2: jnp.ndarray,  # [S, Ko]
+    sig_table: PWLTable,
+    tanh_table: PWLTable,
+    buf_u: jnp.ndarray | None = None,
+    new_u: jnp.ndarray | None = None,
+    *,
+    window: int,
+    stride: int,
+    ema: float,
+):
+    """Int8/PWL banked-tick oracle (serving twin of ``mr_tick_reference``)."""
+    from repro.data.windows import roll_buffer, window_views
+
+    buf_y = roll_buffer(buf_y, new_y)
+    has_u = buf_u is not None
+    if has_u:
+        buf_u = roll_buffer(buf_u, new_u)
+    n_coef = theta0.shape[-1]
+    hidden = whq.shape[1]
+    dts = jnp.ones((window,), jnp.float32)
+
+    def one(y, u, mu, sd, wxq_s, whq_s, wxs, whs, b_s, w1q_s, w1s, b1_s, w2q_s, w2s, b2_s):
+        xs = window_views((y - mu) / sd, window, stride)
+        if u is not None:
+            xs = jnp.concatenate([xs, window_views(u, window, stride)], axis=-1)
+        h0 = jnp.zeros((xs.shape[0], hidden), jnp.float32)
+        out = mr_step_int8_reference(
+            xs,
+            h0,
+            wxq_s,
+            whq_s,
+            wxs,
+            whs,
+            b_s,
+            dts,
+            w1q_s,
+            w1s,
+            b1_s,
+            w2q_s,
+            w2s,
+            b2_s,
+            sig_table,
+            tanh_table,
+        )
+        return jnp.mean(out[:, :n_coef], axis=0)
+
+    args = (wxq, whq, wx_scale, wh_scale, b, w1q, w1_scale, b1, w2q, w2_scale, b2)
+    if has_u:
+        raw = jax.vmap(one)(buf_y, buf_u, mean, scale, *args)
+    else:
+        raw = jax.vmap(lambda y, mu, sd, *w: one(y, None, mu, sd, *w))(buf_y, mean, scale, *args)
+    theta, delta = _tick_ema_delta(raw, theta0, seed, active, ema)
+    return (buf_y, theta, delta, buf_u) if has_u else (buf_y, theta, delta)

@@ -301,3 +301,68 @@ def auto_block_b(
             return bb  # largest fitting divisor: first hit walking downward
     # nothing fits: the smallest legal tile is the best we can do
     return divisors[0] if divisors else None
+
+
+# ---------------------------------------------------------------------------
+# banked one-kernel tick (kernels/mr_step/tick.py): slots-per-bank residency
+# ---------------------------------------------------------------------------
+# R2 acceptance band for the banked tick program: parsed per-window-step
+# traffic of the compiled serve tick vs tick_vmem_bytes with every local
+# slot resident (the CPU lowering re-streams the whole working set per scan
+# trip). Wide for the same reason as RESIDENCY_BANDS; measured per-step
+# ratios on CPU jax 0.4.37 (tiny audit-matrix shapes): 0.97 fp32 gru,
+# 1.87 int8/PWL (dequant widens the parsed traffic vs the s8 residency).
+TICK_RESIDENCY_BAND: tuple[float, float] = (0.25, 8.0)
+
+
+def tick_vmem_bytes(cfg, scfg, *, slots_per_bank: int = 1, int8: bool = False, n_seg: int = 16) -> int:
+    """VMEM residency of one ``mr_tick`` bank (tick.py BlockSpecs).
+
+    Everything a bank pins at once: the slots' ring buffers (in + rolled
+    out), the tick chunk, the materialized window set, the hidden state for
+    all windows of the bank's slots, and the per-slot gate + head weights.
+    Window count does scale the working set (all N windows of a slot run as
+    one batch through the unrolled substeps), which is why the bank size is
+    the budget knob compile_plan resolves.
+    """
+    n, m = cfg.state_dim, cfg.input_dim
+    D, H, Dh = n + m, cfg.hidden, cfg.dense_hidden
+    Ko = cfg.n_coef + cfg.n_shifts
+    L, C, T, N = scfg.buf_len, scfg.chunk, scfg.window, scfg.n_windows
+    wbytes = 1 if int8 else 4
+    per_slot = L * (n + m) * 4 * 2  # ring buffer block in + rolled out
+    per_slot += C * (n + m) * 4  # tick chunk
+    per_slot += N * T * D * 4  # materialized window set
+    per_slot += N * H * 4  # hidden state across the unrolled substeps
+    per_slot += (D + H) * 3 * H * wbytes + 3 * H * 4  # gate weights + bias
+    per_slot += H * 4  # time_scale (fp32) / spare scale row (int8)
+    per_slot += (H * Dh + Dh * Ko) * wbytes + (Dh + Ko) * 4  # head weights
+    per_slot += 2 * n * 4  # frozen mean/scale rows
+    per_slot += cfg.n_coef * 4 * 2 + 3 * 4  # theta in/out + seed/active/delta
+    if int8:
+        per_slot += (2 * 3 * H + Dh + Ko) * 4  # per-channel dequant scales
+    vm = slots_per_bank * per_slot
+    if int8:
+        vm += 2 * 2 * n_seg * 4  # shared sigmoid/tanh PWL tables
+    return vm
+
+
+def auto_slots_per_bank(
+    cfg, scfg, n_slots: int, vmem_budget_bytes: int | None, *, int8: bool = False
+) -> int:
+    """Largest divisor of ``n_slots`` whose banked-tick residency fits.
+
+    Walks the divisor bank sizes from largest (all slots in one bank — no
+    grid streaming at all) down to 1; returns 0 when even a single slot's
+    working set exceeds the budget — the caller (``compile_plan`` resolving
+    ``tick_kernel="auto"``) falls back to the composite tick then. With no
+    budget configured the full slot set is one bank, mirroring auto_block_b.
+    """
+    if n_slots < 1:
+        return 0
+    if vmem_budget_bytes is None:
+        return n_slots
+    for bank in sorted((d for d in range(1, n_slots + 1) if n_slots % d == 0), reverse=True):
+        if tick_vmem_bytes(cfg, scfg, slots_per_bank=bank, int8=int8) <= vmem_budget_bytes:
+            return bank
+    return 0

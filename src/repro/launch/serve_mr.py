@@ -46,6 +46,14 @@ paper's headline LTC baseline runs the acceptance scenario fused:
     PYTHONPATH=src python -m repro.launch.serve_mr \
         --plan --fused --encoder ltc --streams 12 --slots 4
 
+``--tick-kernel banked`` (requires ``--plan``) compiles the one-kernel
+banked service tick (kernels/mr_step/tick.py): ring ingest, window
+substeps, head and EMA readout as a single slot-banked program with a
+packed one-readback status — the CI banked serve scenario:
+
+    PYTHONPATH=src python -m repro.launch.serve_mr \
+        --plan --tick-kernel banked --streams 12 --slots 4
+
 Heavy imports happen inside the entry points (after ``--virtual-devices``
 has set XLA_FLAGS), never at module import time.
 """
@@ -186,6 +194,14 @@ def build_parser() -> argparse.ArgumentParser:
         help="build the service through repro.api (RecoverySpec -> compile_plan)",
     )
     ap.add_argument(
+        "--tick-kernel",
+        choices=("auto", "banked", "composite"),
+        default="composite",
+        help="service-tick structure (requires --plan for non-composite): "
+        "'banked' = one-kernel mr_tick serving segment (kernels/mr_step/tick.py), "
+        "'auto' resolves from the tick-level VMEM model",
+    )
+    ap.add_argument(
         "--mesh",
         type=int,
         default=1,
@@ -226,6 +242,11 @@ def main() -> int:
         raise SystemExit("--mesh requires --plan (the sharded service is plan-compiled)")
     if args.audit != "off" and not args.plan:
         raise SystemExit("--audit requires --plan (only compiled plans are auditable)")
+    if args.tick_kernel != "composite" and not args.plan:
+        raise SystemExit(
+            "--tick-kernel requires --plan (the tick program is plan-compiled; "
+            "the legacy service binds the composite tick internally)"
+        )
 
     # jax loads HERE, after the virtual-device environment is pinned
     from repro import api
@@ -264,6 +285,12 @@ def main() -> int:
         seed=args.seed,
         n_slots=args.slots,
         stream=scfg,
+        # the loose tick flags are a thin mapping onto TickSpec: geometry
+        # (steps_per_tick/ema) mirrors the StreamConfig above, the kernel
+        # choice is the only new degree of freedom
+        tick=api.TickSpec(
+            steps_per_tick=args.steps_per_tick, tick_kernel=args.tick_kernel
+        ),
         mesh_slots=args.mesh,
     )
     if args.plan:
@@ -316,6 +343,7 @@ def main() -> int:
         precision="fp32",
         steps=scfg.max_steps,
         stream=None,
+        tick=None,
         mesh_slots=1,
     )
     base_plan = api.compile_plan(base_spec)
