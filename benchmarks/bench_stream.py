@@ -390,10 +390,66 @@ def ticks_per_sec(mesh_slots, slots, n_ticks, repeats):
     }}
 
 
-out = {{
-    str(m): ticks_per_sec(m, slots={slots}, n_ticks={n_ticks}, repeats={repeats})
-    for m in (1, 2, 4)
-}}
+def device_plane(mesh_slots, slots, n_ticks, repeats):
+    # Device-resident control plane under churn: 2*slots streams over
+    # `slots` slots with a hard 16-step budget (2 ticks at K=8), so every
+    # slot evicts and refills from the shard-local on-device queue mid-run
+    # (>= 2*slots admissions total, half of them via in-program refill).
+    # Steady-state host boundary = median of sync_log AFTER the compile
+    # tick: only the periodic snapshot (every snapshot_period ticks) reads
+    # anything back, and admission never re-pins the slot axis (reshards
+    # stays 0 by construction — gated as a ceiling).
+    scfg = StreamConfig(
+        buf_len=32, window=8, stride=8, chunk=8, steps_per_tick=8,
+        min_steps=16, max_steps=16,
+    )
+    streams = 2 * slots
+    spec = api.RecoverySpec(
+        state_dim=3, order=2, hidden=8, dense_hidden=16, dt=0.01, encoder="gru",
+        mode="stream", n_slots=slots, stream=scfg, mesh_slots=mesh_slots,
+        tick=api.TickSpec(
+            steps_per_tick=8, control="device",
+            queue_capacity=streams, snapshot_period=4, warm_capacity=slots,
+        ),
+    )
+    plan = api.compile_plan(spec)
+    _, ys, _ = generate_trajectory("lorenz", n_samples=32 + 8 * (n_ticks + 2))
+    chunks = [
+        np.repeat(ys[32 + t * 8 : 32 + (t + 1) * 8][None], slots, axis=0)
+        for t in range(n_ticks)
+    ]
+    best, syncs, reshards, completed, done = 0.0, 0.0, 0, 0, False
+    for _ in range(repeats):
+        svc = plan.make_service()
+        for i in range(streams):
+            svc.submit(i, ys[:32])
+        svc.fill_slots()
+        svc.tick_once(chunks[0])  # compile
+        t0 = time.perf_counter()
+        for t in range(1, n_ticks):
+            svc.tick_once(chunks[t])
+        best = max(best, (n_ticks - 1) / (time.perf_counter() - t0))
+        syncs = float(np.median(svc.sync_log[1:]))
+        reshards = svc.counters["reshards"]
+        svc.fill_slots()  # final snapshot: flush the event log
+        completed = len(svc.drain())
+        done = svc.done
+    return {{
+        "tps": best,
+        "host_syncs_per_tick": syncs,
+        "reshards": reshards,
+        "admissions": streams,
+        "completed": completed,
+        "done": bool(done),
+    }}
+
+
+out = {{}}
+for m in (1, 2, 4):
+    out[str(m)] = ticks_per_sec(m, slots={slots}, n_ticks={n_ticks}, repeats={repeats})
+    out[str(m)]["device"] = device_plane(
+        m, slots={slots}, n_ticks={n_ticks}, repeats={repeats}
+    )
 print("MESHBENCH " + json.dumps(out))
 """
 
@@ -413,7 +469,15 @@ def run_mesh_scaling(
     gateable claim is CONSERVATIVE: sharding must not collapse throughput
     (``mesh_slots_per_sec_scaling`` = mesh-2 over mesh-1 ticks/sec stays
     above a floor), while real scaling lives on multi-chip hardware.
-    Returns (csv_rows, metrics).
+
+    Each mesh size also runs the device-resident control plane
+    (``TickSpec(control="device")``) under admission/eviction churn —
+    2*slots streams with a 2-tick budget, so every slot refills from the
+    shard-local on-device queue mid-run. Gated (ceilings, deterministic):
+    ``device_host_syncs_per_tick`` <= 1 steady-state (only the periodic
+    snapshot reads back) and ``device_reshards`` == 0 (admission appends to
+    device rings; the slot axis is never re-pinned). Returns
+    (csv_rows, metrics).
     """
     if smoke:
         n_ticks, repeats = 6, 2
@@ -439,6 +503,7 @@ def run_mesh_scaling(
         )
     stats = {int(k): v for k, v in json.loads(marker[0][len("MESHBENCH ") :]).items()}
     tps = {m: s["tps"] for m, s in stats.items()}
+    dev = {m: s["device"] for m, s in stats.items()}
     scaling = tps[2] / tps[1]
     rows = [
         (
@@ -450,6 +515,17 @@ def run_mesh_scaling(
         )
         for m in sorted(tps)
     ]
+    rows += [
+        (
+            f"stream/mesh{m}_device_ticks_per_sec",
+            1e6 / dev[m]["tps"],
+            f"control=device;slots={slots};{dev[m]['admissions']} admissions "
+            f"({dev[m]['completed']} completed);"
+            f"host_syncs/tick={dev[m]['host_syncs_per_tick']:.1f};"
+            f"reshards={dev[m]['reshards']}",
+        )
+        for m in sorted(dev)
+    ]
     rows.append(
         (
             "stream/mesh_slots_per_sec_scaling",
@@ -458,8 +534,17 @@ def run_mesh_scaling(
             "conservative no-collapse floor)",
         )
     )
+    # device-resident control plane (core/control.py): gated CEILINGS on the
+    # worst mesh size — steady-state median syncs/tick must stay <= 1 (the
+    # periodic snapshot is the only readback) and the slot axis must never
+    # be re-pinned on admission (reshards == 0). Both are structural, so
+    # they are deterministic counters, not wall measurements.
+    dev_syncs = max(d["host_syncs_per_tick"] for d in dev.values())
+    dev_reshards = max(d["reshards"] for d in dev.values())
     metrics = {
         "mesh_slots_per_sec_scaling": round(scaling, 3),
+        "device_host_syncs_per_tick": round(dev_syncs, 3),
+        "device_reshards": dev_reshards,
         "info": {
             "device_count": device_count,
             "slots": slots,
@@ -468,15 +553,29 @@ def run_mesh_scaling(
                 f"mesh{m}_slots_per_sec": round(slots * tps[m], 2) for m in sorted(tps)
             },
             "mesh4_over_mesh1": round(tps[4] / tps[1], 3),
-            # host-boundary baseline for the phase-2 per-device-admission
-            # work (ROADMAP): ALL admissions funnel through one host queue,
-            # so every readback/reshard is a cross-mesh sync the sharded
-            # service pays; these counters are what that redesign must cut.
+            # host-plane baseline the device-resident control plane replaces:
+            # ALL admissions funnel through one host queue, so every
+            # readback/reshard is a cross-mesh sync the sharded service pays.
             **{
                 f"mesh{m}_host_syncs_per_tick": round(stats[m]["host_syncs_per_tick"], 2)
                 for m in sorted(stats)
             },
             **{f"mesh{m}_reshards": stats[m]["reshards"] for m in sorted(stats)},
+            **{
+                f"mesh{m}_device_host_syncs_per_tick": round(
+                    dev[m]["host_syncs_per_tick"], 2
+                )
+                for m in sorted(dev)
+            },
+            **{f"mesh{m}_device_reshards": dev[m]["reshards"] for m in sorted(dev)},
+            **{
+                f"mesh{m}_device_ticks_per_sec": round(dev[m]["tps"], 2)
+                for m in sorted(dev)
+            },
+            "device_admissions": dev[min(dev)]["admissions"],
+            "device_all_completed": all(
+                d["completed"] == d["admissions"] and d["done"] for d in dev.values()
+            ),
         },
     }
     return rows, metrics

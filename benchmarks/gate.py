@@ -1,14 +1,17 @@
 """Benchmark regression gate: BENCH_*.json vs the committed floors.
 
-``benchmarks/baselines.json`` maps suite -> gated metric -> {"floor": x}.
-``run.py --smoke`` writes ``BENCH_<suite>.json`` files at the repo root and
-calls :func:`check_all`; CI uploads the JSONs as artifacts and fails the
-bench-smoke job when any gated metric lands below its floor.
+``benchmarks/baselines.json`` maps suite -> gated metric -> {"floor": x}
+and/or {"ceiling": x}. ``run.py --smoke`` writes ``BENCH_<suite>.json``
+files at the repo root and calls :func:`check_all`; CI uploads the JSONs as
+artifacts and fails the bench-smoke job when any gated metric lands below
+its floor or above its ceiling.
 
-Gated metrics are dimensionless ratios only — deterministic cost-model
-ratios (cycles suite) or speedups with conservative floors (engine/stream
-suites). Absolute wall times live in each file's "info" section and are
-never gated, so the gate is stable across runner hardware.
+Gated metrics are dimensionless ratios or deterministic counters only —
+cost-model ratios (cycles suite), speedups with conservative floors
+(engine/stream suites), or host-boundary counts with hard ceilings
+(device-resident control plane: syncs/tick and reshards). Absolute wall
+times live in each file's "info" section and are never gated, so the gate
+is stable across runner hardware.
 
 Standalone usage (after a smoke run has produced the JSONs):
 
@@ -26,16 +29,20 @@ BASELINES = Path(__file__).resolve().parent / "baselines.json"
 
 
 def check(bench: dict, floors: dict, name: str) -> list[str]:
-    """Compare one suite's gated metrics against its floors."""
+    """Compare one suite's gated metrics against its floors/ceilings."""
     failures = []
     gated = bench.get("gated", {})
     for metric, spec in floors.items():
-        floor = spec["floor"]
         value = gated.get(metric)
         if not isinstance(value, (int, float)):
             failures.append(f"{name}: gated metric {metric!r} missing from BENCH json")
-        elif value < floor:
+            continue
+        floor = spec.get("floor")
+        ceiling = spec.get("ceiling")
+        if floor is not None and value < floor:
             failures.append(f"{name}: {metric} = {value} < committed floor {floor}")
+        if ceiling is not None and value > ceiling:
+            failures.append(f"{name}: {metric} = {value} > committed ceiling {ceiling}")
     return failures
 
 

@@ -19,9 +19,10 @@ CLI (the CI ``audit-matrix`` job):
     python -m repro.analysis.audit --matrix \\
         --error-rules R1,R3,R4 --warn-rules R2,R5 --json findings.json
 
-compiles the full encoder x fused x quant spec matrix (tiny stream shapes),
-audits every cell, runs one 2-virtual-device mesh cell in a subprocess (R5
-needs >1 device), and exits nonzero on any error-rule finding.
+compiles the full encoder x fused x quant spec matrix (tiny stream shapes)
+including the device-resident control-plane cells, audits every cell, runs
+the 2-virtual-device mesh cells in subprocesses (R5 needs >1 device), and
+exits nonzero on any error-rule finding.
 """
 
 from __future__ import annotations
@@ -288,6 +289,48 @@ def audit_plan(
             n_dev = int(plan.mesh.devices.size)
             predicted = predict_tick_collectives(plan.mesh)
             run("R5", "tick", R.check_collectives, text, n_dev, predicted)
+        if plan.lowering.control_plane == "device":
+            # the device-resident control-plane program (core/control.py):
+            # tick + eviction mask + queue refill + warm gather fused into one
+            # donated program. R1 holds BOTH trees' donation, R3 pins zero
+            # host transfers (the zero-readback claim, statically), and R5
+            # holds the sharded control plane to the EMPTY collective census
+            # (admission/refill must stay shard-local).
+            from repro.core import control as control_mod
+
+            shards = max(spec.mesh_slots, 1)
+            control = control_mod.init_control(
+                key,
+                cfg,
+                scfg,
+                spec.n_slots,
+                shards=shards,
+                queue_capacity=plan.lowering.tick_queue_capacity,
+                warm_capacity=plan.lowering.warm_capacity,
+                snapshot_period=plan.lowering.tick_snapshot_period,
+            )
+            if plan.mesh is not None:
+                control = control_mod.shard_control(control, plan.mesh)
+            lowered = control_mod.tick_device.lower(
+                state,
+                control,
+                new_y,
+                new_u,
+                key,
+                cfg=cfg,
+                scfg=scfg,
+                kernel=plan.lowering.tick_kernel,
+                quant=quant_tick,
+                slots_per_bank=plan.lowering.tick_slots_per_bank or 1,
+                shards=shards,
+            )
+            text = _compiled_text(lowered)
+            run("R1", "tick_device", R.check_donation, text, ("state", "control"))
+            run("R3", "tick_device", R.check_host_transfers, text, host_allowlist)
+            if plan.mesh is not None:
+                n_dev = int(plan.mesh.devices.size)
+                predicted = predict_tick_collectives(plan.mesh)
+                run("R5", "tick_device", R.check_collectives, text, n_dev, predicted)
     elif spec.mode == "offline":
         params = init_mr(key, cfg)
         opt = adamw_init(params)
@@ -378,18 +421,46 @@ def _matrix_specs():
             **_TINY,
         )
         cells.append((label, spec))
+    # device-resident control-plane cells (core/control.py): the fused
+    # tick + eviction + refill + warm-gather program, over both tick bodies
+    # (R1 donation on both trees, R3 zero host transfers; the sharded R5
+    # census runs in the mesh cells below)
+    k = _TINY_STREAM["steps_per_tick"]
+    for label, tick_kernel in (
+        ("gru:control=device", "composite"),
+        ("gru:tick=banked:control=device", "banked"),
+    ):
+        spec = RecoverySpec(
+            encoder="gru",
+            stream=StreamConfig(**_TINY_STREAM),
+            tick=TickSpec(
+                steps_per_tick=k,
+                tick_kernel=tick_kernel,
+                control="device",
+                queue_capacity=2,
+                snapshot_period=2,
+                warm_capacity=4,
+            ),
+            **_TINY,
+        )
+        cells.append((label, spec))
     return cells
 
 
 def _run_mesh_cell(
-    n_devices: int, rules: tuple[str, ...], tick_kernel: str = "composite"
+    n_devices: int,
+    rules: tuple[str, ...],
+    tick_kernel: str = "composite",
+    control: str = "host",
 ) -> dict:
     """Audit one slot-sharded plan under ``n_devices`` CPU virtual devices.
 
     XLA_FLAGS must be set before jax initializes, so the meshed cell runs in
     a subprocess (same pattern as tests/conftest.run_devices).
     ``tick_kernel`` picks the tick structure the sharded cell compiles
-    ("banked" runs R1/R3/R5 against the banked tick program's HLO).
+    ("banked" runs R1/R3/R5 against the banked tick program's HLO);
+    ``control="device"`` audits the device-resident control-plane program
+    (R5's empty census then covers the sharded queues/refill/warm gather).
     """
     snippet = textwrap.dedent(
         f"""
@@ -410,6 +481,8 @@ def _run_mesh_cell(
             tick=TickSpec(
                 steps_per_tick={_TINY_STREAM["steps_per_tick"]!r},
                 tick_kernel={tick_kernel!r},
+                control={control!r},
+                queue_capacity=2, snapshot_period=2, warm_capacity=4,
             ),
             **{_TINY!r},
         )
@@ -499,11 +572,18 @@ def main(argv=None) -> int:
 
     if args.mesh_devices and "R5" in active:
         mesh_cells = [
-            (f"gru:fused=1:mesh={args.mesh_devices}", "composite"),
-            (f"gru:tick=banked:mesh={args.mesh_devices}", "banked"),
+            (f"gru:fused=1:mesh={args.mesh_devices}", "composite", "host"),
+            (f"gru:tick=banked:mesh={args.mesh_devices}", "banked", "host"),
+            (
+                f"gru:control=device:mesh={args.mesh_devices}",
+                "composite",
+                "device",
+            ),
         ]
-        for label, tick_kernel in mesh_cells:
-            cell = _run_mesh_cell(args.mesh_devices, active, tick_kernel=tick_kernel)
+        for label, tick_kernel, control in mesh_cells:
+            cell = _run_mesh_cell(
+                args.mesh_devices, active, tick_kernel=tick_kernel, control=control
+            )
             cells.append({"cell": label, **cell})
             if cell["verdict"] == "infra-error":
                 # a crashed subprocess is an environment problem, not a

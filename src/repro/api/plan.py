@@ -75,6 +75,14 @@ class Lowering:
     # the tick-level VMEM model settled on (None for composite)
     tick_kernel: str | None = None
     tick_slots_per_bank: int | None = None
+    # stream mode: the resolved control plane ("host" reference orchestrator
+    # or "device" zero-readback tick, core/control.py) and the capacities
+    # baked into the compiled control-state shapes (None outside stream mode;
+    # queue/snapshot fields None on the host plane, which has no rings)
+    control_plane: str | None = None
+    tick_queue_capacity: int | None = None
+    tick_snapshot_period: int | None = None
+    warm_capacity: int | None = None
 
 
 class RecoveryPlan:
@@ -154,8 +162,24 @@ class RecoveryPlan:
 
     def make_service(self, seed: int | None = None) -> RecoveryService:
         """The online multi-tenant service, with SlotState sharded over the
-        plan's mesh (trivial on mesh_slots=1)."""
+        plan's mesh (trivial on mesh_slots=1). On ``control="device"`` the
+        service also carries the compiled ControlPlane (core/control.py): the
+        zero-readback tick, enqueue, pump and snapshot-drain programs."""
         self._require_mode("stream")
+        control = None
+        if self.lowering.control_plane == "device":
+            from repro.core import control as control_mod
+
+            control = control_mod.ControlPlane(
+                queue_capacity=self.lowering.tick_queue_capacity,
+                snapshot_period=self.lowering.tick_snapshot_period,
+                warm_capacity=self.lowering.warm_capacity,
+                shards=self.spec.mesh_slots,
+                tick=self.programs["tick_device"],
+                enqueue=self.programs["enqueue"],
+                pump=self.programs["pump"],
+                drain=self.programs["drain"],
+            )
         return RecoveryService(
             self.cfg,
             self.scfg,
@@ -164,6 +188,8 @@ class RecoveryPlan:
             quant=self.lowering.quant_serving,
             mesh=self.mesh,
             tick_program=self.programs["tick"],
+            control=control,
+            warm_capacity=self.lowering.warm_capacity or 32,
         )
 
     # -- readout: the spec's serving precision --------------------------------
@@ -369,19 +395,44 @@ def compile_plan(spec: RecoverySpec, audit: str = "off") -> RecoveryPlan:
         )
     else:  # stream
         tick_kernel, spb = _resolve_tick_kernel(spec, cfg, scfg, lowering)
+        tspec = spec.tick_spec()
         lowering = dataclasses.replace(
-            lowering, tick_kernel=tick_kernel, tick_slots_per_bank=spb
+            lowering,
+            tick_kernel=tick_kernel,
+            tick_slots_per_bank=spb,
+            control_plane=tspec.control,
+            tick_queue_capacity=tspec.queue_capacity if tspec.control == "device" else None,
+            tick_snapshot_period=tspec.snapshot_period if tspec.control == "device" else None,
+            warm_capacity=tspec.warm_capacity,
         )
+        quant_tick = lowering.quant_serving and scfg.steps_per_tick == 0
         if tick_kernel == "banked":
             programs["tick"] = functools.partial(
                 stream_mod.tick_banked,
                 cfg=cfg,
                 scfg=scfg,
-                quant=lowering.quant_serving and scfg.steps_per_tick == 0,
+                quant=quant_tick,
                 slots_per_bank=spb,
             )
         else:
             programs["tick"] = functools.partial(stream_mod.tick, cfg=cfg, scfg=scfg)
+        if tspec.control == "device":
+            # the zero-readback control-plane programs (core/control.py):
+            # all statics bound NOW so every later call hits one executable
+            from repro.core import control as control_mod
+
+            programs["tick_device"] = functools.partial(
+                control_mod.tick_device,
+                cfg=cfg,
+                scfg=scfg,
+                kernel=tick_kernel,
+                quant=quant_tick,
+                slots_per_bank=spb or 1,
+                shards=spec.mesh_slots,
+            )
+            programs["enqueue"] = control_mod.enqueue
+            programs["pump"] = functools.partial(control_mod.pump, shards=spec.mesh_slots)
+            programs["drain"] = control_mod.drain_events
     plan = RecoveryPlan(spec, cfg, scfg, lowering, mesh, programs)
 
     if audit != "off":

@@ -32,6 +32,7 @@ from repro.core.stream import StreamConfig
 MODES = ("offline", "batch", "stream")
 PRECISIONS = ("fp32", "int8_pwl")
 TICK_KERNELS = ("banked", "composite", "auto")
+CONTROL_PLANES = ("host", "device")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,11 +53,27 @@ class TickSpec:
     ``steps_per_tick=0`` is a pure serve/monitor tick: no optimizer steps,
     just ingest + readout — the configuration the banked kernel serves as
     one program.
+
+    ``control`` picks the service's control plane: ``"host"`` is the
+    reference orchestrator (admission deque, per-tick status readbacks, an
+    ``admit`` program + reshard per admission), ``"device"`` moves admission
+    queues, the eviction mask, slot refill and warm-start lookup inside ONE
+    donated tick program (``core/control.py``) so a steady-state tick has
+    zero host readbacks and admission never reshards the slot axis. The
+    device plane's capacities — per-shard admission ``queue_capacity``, the
+    on-device warm-cache size ``warm_capacity`` (also bounds the host-path
+    LRU registry) and the host ``snapshot_period`` (drain status + eviction
+    events every N ticks) — are baked into the compiled shapes and recorded
+    in ``plan.lowering``.
     """
 
     steps_per_tick: int = 8  # K optimizer steps per slot per tick (0 = serve-only)
     ema_decay: float = 0.9  # smoothing for the per-tick Theta readout
     tick_kernel: str = "composite"  # "banked" | "composite" | "auto"
+    control: str = "host"  # "host" | "device" (device-resident control plane)
+    queue_capacity: int = 8  # pending admissions per shard (device plane)
+    snapshot_period: int = 1  # ticks between host status/event drains
+    warm_capacity: int = 32  # warm-start cache entries (per shard on device)
 
     def __post_init__(self):
         if self.tick_kernel not in TICK_KERNELS:
@@ -65,6 +82,14 @@ class TickSpec:
             raise ValueError(f"steps_per_tick must be >= 0, got {self.steps_per_tick}")
         if not 0.0 <= self.ema_decay < 1.0:
             raise ValueError(f"ema_decay must be in [0, 1), got {self.ema_decay}")
+        if self.control not in CONTROL_PLANES:
+            raise ValueError(f"control must be one of {CONTROL_PLANES}, got {self.control!r}")
+        if self.queue_capacity < 1:
+            raise ValueError(f"queue_capacity must be >= 1, got {self.queue_capacity}")
+        if self.snapshot_period < 1:
+            raise ValueError(f"snapshot_period must be >= 1, got {self.snapshot_period}")
+        if self.warm_capacity < 1:
+            raise ValueError(f"warm_capacity must be >= 1, got {self.warm_capacity}")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,456 @@
+"""Device-resident control plane: zero-readback service ticks.
+
+The host-queue ``RecoveryService`` (core/stream.py) pays the paper's exact
+anti-pattern on every tick: admission/eviction decisions round-trip the host
+(5 readbacks/tick on the composite path) and every admission re-pins the slot
+shard (a full reshard on a mesh). This module moves the whole control plane
+into the compiled program, so a steady-state service tick is ONE donated,
+collective-free program with ZERO host readbacks:
+
+- **per-shard admission queues** — a fixed-capacity ring of pending stream
+  histories + cold-start params held in the :class:`ControlState` pytree
+  (leading axis = shard, sharded over the same ``("slots",)`` mesh axis as
+  SlotState). ``enqueue`` appends one arrival with ``dynamic_update_slice``;
+  the slot axis is never resharded.
+- **on-device eviction** — ``tick_device`` runs the (composite or banked)
+  tick body, derives the eviction mask from the post-tick
+  ``[delta, loss, steps, active]`` scalars inside the program, and appends
+  one fixed-width event record per evicted stream to an on-device log.
+- **in-program refill** — freed slots pop the shard-local ring in slot order
+  (a cumsum prefix-rank turns multi-pop/multi-push into one vectorized
+  scatter/gather; no per-slot program launches).
+- **device-side warm start** — evicted params are pushed into a bounded
+  on-device ring cache keyed by stream id; admission gathers from it and
+  falls back to the enqueued cold-start tree on a miss. The host dict never
+  sits on the hot path.
+- **periodic snapshot** — the host drains the packed status + event log every
+  ``snapshot_period`` ticks (``drain_events``); between arrivals and
+  snapshots ``RecoveryService.sync_log`` records 0.
+
+Everything per-shard is shard-LOCAL: the [S] slot axis reshapes to
+[shards, slots_per_shard], the control step vmaps over the shard axis, and no
+operation contracts or permutes across shards — the predicted collective
+census of the sharded control plane stays EMPTY
+(``parallel.rules.predict_tick_collectives``; audit rule R5 enforces it on
+the compiled HLO, R3 pins zero host transfers).
+
+Parity with the host path (pinned by tests/test_tick.py): at mesh 1 the
+single shard queue IS the host deque (slot-order pops), admission stats /
+cold params / opt reinit reproduce ``stream.admit`` + ``adamw_init``
+exactly, and eviction uses the same converged/budget predicate — randomized
+traffic through both planes yields identical slot occupancy and Θ. The one
+documented divergence: within a tick the device plane publishes ALL warm
+evictions before ANY admission (the host interleaves per slot), visible only
+if a stream is simultaneously running and queued — which admission dedup
+upstream never produces.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.merinda import MRConfig, init_mr
+from repro.core.stream import (
+    SLOT_RULES,
+    SlotState,
+    StreamConfig,
+    _tick_banked_impl,
+    _tick_impl,
+    pack_status,
+)
+from repro.data.windows import buffer_stats
+from repro.parallel import named_sharding
+from repro.parallel.rules import constraint
+
+
+class ControlState(NamedTuple):
+    """On-device control plane for all shards (every leaf leads with M).
+
+    M = shards, Q = queue capacity, W = warm-cache capacity, E = event-log
+    capacity (slots_per_shard * (snapshot_period + 1): at most one eviction
+    per slot per tick, drained every snapshot_period ticks, so the log can
+    never overflow between drains).
+    """
+
+    q_ids: jnp.ndarray  # [M, Q] int32 pending stream ids (-1 = empty)
+    q_buf_y: jnp.ndarray  # [M, Q, L, n] pending admission histories
+    q_buf_u: jnp.ndarray  # [M, Q, L, m]
+    q_params: Any  # MRParams, leaves [M, Q, ...] (cold-start fallback)
+    q_head: jnp.ndarray  # [M] int32 ring head
+    q_len: jnp.ndarray  # [M] int32 pending count
+    w_ids: jnp.ndarray  # [M, W] int32 warm-cache keys (-1 = empty)
+    w_params: Any  # MRParams, leaves [M, W, ...] evicted params
+    w_pos: jnp.ndarray  # [M] int32 warm-ring cursor
+    ev_log: jnp.ndarray  # [M, E, R] f32 eviction events (id < 0 = empty)
+    ev_len: jnp.ndarray  # [M] int32 events since the last drain
+
+
+def event_record_width(cfg: MRConfig) -> int:
+    """Event record: [stream_id, steps, reason, theta.flat, mean, scale].
+
+    All packed as f32 — stream ids and step counts stay < 2^24, exactly
+    representable — so one [E, R] array carries every per-eviction result
+    a host StreamResult needs and the snapshot drains them in ONE readback.
+    """
+    n = cfg.state_dim
+    return 3 + cfg.n_terms * n + 2 * n
+
+
+def init_control(
+    key: jax.Array,
+    cfg: MRConfig,
+    scfg: StreamConfig,
+    n_slots: int,
+    *,
+    shards: int,
+    queue_capacity: int,
+    warm_capacity: int,
+    snapshot_period: int,
+) -> ControlState:
+    """All-empty control state (ring cursors at 0, ids at -1)."""
+    if n_slots % shards:
+        raise ValueError(f"n_slots ({n_slots}) must divide over {shards} shard(s)")
+    M, Q, W = shards, queue_capacity, warm_capacity
+    E = (n_slots // shards) * (snapshot_period + 1)
+    n, m, L = cfg.state_dim, cfg.input_dim, scfg.buf_len
+    template = init_mr(key, cfg)
+
+    def zeros_like_tree(prefix):
+        return jax.tree.map(lambda leaf: jnp.zeros(prefix + leaf.shape, leaf.dtype), template)
+
+    return ControlState(
+        q_ids=jnp.full((M, Q), -1, jnp.int32),
+        q_buf_y=jnp.zeros((M, Q, L, n), jnp.float32),
+        q_buf_u=jnp.zeros((M, Q, L, m), jnp.float32),
+        q_params=zeros_like_tree((M, Q)),
+        q_head=jnp.zeros((M,), jnp.int32),
+        q_len=jnp.zeros((M,), jnp.int32),
+        w_ids=jnp.full((M, W), -1, jnp.int32),
+        w_params=zeros_like_tree((M, W)),
+        w_pos=jnp.zeros((M,), jnp.int32),
+        ev_log=jnp.full((M, E, event_record_width(cfg)), -1.0, jnp.float32),
+        ev_len=jnp.zeros((M,), jnp.int32),
+    )
+
+
+def shard_control(control: ControlState, mesh) -> ControlState:
+    """Pin every ControlState leaf's shard axis over the ``("slots",)`` mesh.
+
+    One shard row per device (M == mesh size), co-located with that device's
+    slot shard — enqueue/refill/warm-lookup are then device-local forever.
+    """
+
+    def put(leaf):
+        axes = ("slots",) + (None,) * (leaf.ndim - 1)
+        return jax.device_put(leaf, named_sharding(mesh, leaf.shape, axes, SLOT_RULES))
+
+    return jax.tree.map(put, control)
+
+
+def _pin(tree):
+    """Re-assert the shard-axis sharding on every leaf of a program OUTPUT
+    (``parallel.constraint``: a no-op without an active mesh), so donation +
+    in-place scatters can never drift a leaf toward replication — the
+    reshard-free invariant the device path is gated on."""
+
+    def one(leaf):
+        return constraint(leaf, ("slots",) + (None,) * (leaf.ndim - 1))
+
+    return jax.tree.map(one, tree)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def enqueue(
+    control: ControlState,
+    shard: jnp.ndarray,  # scalar int32 (traced: one program serves all shards)
+    stream_id: jnp.ndarray,  # scalar int32
+    buf_y: jnp.ndarray,  # [L, n] admission history
+    buf_u: jnp.ndarray,  # [L, m]
+    params: Any,  # single cold-start MRParams tree
+) -> ControlState:
+    """Append one arrival to ``shard``'s admission ring (donated update).
+
+    This is the ONLY host->device write of the device control plane; it
+    touches one ring row via ``dynamic_update_slice`` and never re-shards
+    the slot axis. The host guards ring capacity (``RecoveryService.submit``
+    tracks per-shard in-flight depth), so overflow cannot occur here.
+    """
+    tail = (control.q_head[shard] + control.q_len[shard]) % control.q_ids.shape[1]
+
+    def write(full, new):
+        new = jnp.asarray(new, full.dtype)
+        start = (shard, tail) + (jnp.int32(0),) * (full.ndim - 2)
+        return jax.lax.dynamic_update_slice(full, new[None, None], start)
+
+    return _pin(
+        control._replace(
+            q_ids=control.q_ids.at[shard, tail].set(stream_id),
+            q_buf_y=write(control.q_buf_y, buf_y),
+            q_buf_u=write(control.q_buf_u, buf_u),
+            q_params=jax.tree.map(write, control.q_params, params),
+            q_len=control.q_len.at[shard].add(1),
+        )
+    )
+
+
+def _broadcast(mask: jnp.ndarray, like: jnp.ndarray) -> jnp.ndarray:
+    return mask.reshape(mask.shape + (1,) * (like.ndim - mask.ndim))
+
+
+def _shard_control_step(
+    st: SlotState,  # one shard's slot slice (leaves [P, ...])
+    ctl: ControlState,  # one shard's control slice (no leading M)
+    evict: jnp.ndarray,  # [P] bool eviction mask (from the post-tick status)
+    reason: jnp.ndarray,  # [P] f32 (1 = converged, 2 = budget)
+) -> tuple[SlotState, ControlState]:
+    """One shard's eviction + refill + warm lookup (vmapped over shards).
+
+    Everything is shard-local and vectorized: a cumsum prefix-rank assigns
+    each evicting/idle slot its event-log / queue position, scatters use
+    ``mode="drop"`` with an out-of-bounds index for masked-out slots, and
+    gathers blend per-leaf with ``jnp.where`` — no per-slot control flow, no
+    cross-shard communication.
+    """
+    P = evict.shape[0]
+    Q = ctl.q_ids.shape[0]
+    W = ctl.w_ids.shape[0]
+    E = ctl.ev_log.shape[0]
+    f32 = jnp.float32
+
+    # -- eviction: append event records, push params into the warm ring -----
+    erank = jnp.cumsum(evict.astype(jnp.int32)) - 1
+    n_evict = jnp.sum(evict.astype(jnp.int32))
+    record = jnp.concatenate(
+        [
+            st.stream_id.astype(f32)[:, None],
+            st.steps.astype(f32)[:, None],
+            reason[:, None],
+            st.theta.reshape(P, -1),
+            st.mean,
+            st.scale,
+        ],
+        axis=-1,
+    )
+    # E is sized so the log never wraps between drains (see ControlState)
+    ev_pos = jnp.where(evict, ctl.ev_len + erank, E)  # E = OOB -> dropped
+    ev_log = ctl.ev_log.at[ev_pos].set(record, mode="drop")
+    ev_len = ctl.ev_len + n_evict
+    w_write = jnp.where(evict, (ctl.w_pos + erank) % W, W)
+    w_ids = ctl.w_ids.at[w_write].set(st.stream_id, mode="drop")
+    w_params = jax.tree.map(
+        lambda full, lv: full.at[w_write].set(lv, mode="drop"), ctl.w_params, st.params
+    )
+    w_pos = (ctl.w_pos + n_evict) % W
+    active = st.active & ~evict
+    stream_id = jnp.where(evict, -1, st.stream_id)
+
+    # -- admission: pop queued arrivals into idle slots, in slot order ------
+    idle = ~active
+    arank = jnp.cumsum(idle.astype(jnp.int32)) - 1
+    take = idle & (arank < ctl.q_len)
+    n_take = jnp.sum(take.astype(jnp.int32))
+    q_pos = jnp.where(take, (ctl.q_head + arank) % Q, 0)
+    pop_id = jnp.where(take, ctl.q_ids[q_pos], -1)
+    pop_by = ctl.q_buf_y[q_pos]  # [P, L, n]
+    pop_bu = ctl.q_buf_u[q_pos]
+    cold = jax.tree.map(lambda leaf: leaf[q_pos], ctl.q_params)
+
+    # warm-start lookup: gather over the (post-push) bounded warm ring; a
+    # miss falls back to the cold tree that rode in on the queue
+    hit_mat = (pop_id[:, None] == w_ids[None, :]) & (pop_id[:, None] >= 0)
+    hit = hit_mat.any(axis=1)
+    w_idx = jnp.argmax(hit_mat, axis=1)
+    warm = jax.tree.map(lambda leaf: leaf[w_idx], w_params)
+    params_new = jax.tree.map(
+        lambda w, c: jnp.where(_broadcast(hit, w), w, c), warm, cold
+    )
+
+    # identical admission math to stream.admit: stats frozen from the
+    # enqueued history, theta/delta/loss reset, opt re-init (adamw_init is
+    # step=0 + zero moments, i.e. zeros_like)
+    mean_new, scale_new = buffer_stats(pop_by)
+    mean_new, scale_new = mean_new[:, 0], scale_new[:, 0]
+    n_terms, n = st.theta.shape[1:]
+
+    def blend(new, old):
+        return jnp.where(_broadcast(take, old), new.astype(old.dtype), old)
+
+    st_new = SlotState(
+        params=jax.tree.map(blend, params_new, st.params),
+        opt=jax.tree.map(lambda old: blend(jnp.zeros_like(old), old), st.opt),
+        buf_y=blend(pop_by, st.buf_y),
+        buf_u=blend(pop_bu, st.buf_u),
+        theta=blend(jnp.zeros((P, n_terms, n), f32), st.theta),
+        delta=jnp.where(take, jnp.inf, st.delta),
+        loss=jnp.where(take, jnp.inf, st.loss),
+        mean=blend(mean_new, st.mean),
+        scale=blend(scale_new, st.scale),
+        steps=jnp.where(take, 0, st.steps).astype(jnp.int32),
+        active=active | take,
+        stream_id=jnp.where(take, pop_id, stream_id).astype(jnp.int32),
+    )
+    clear_pos = jnp.where(take, q_pos, Q)
+    ctl_new = ctl._replace(
+        q_ids=ctl.q_ids.at[clear_pos].set(-1, mode="drop"),
+        q_head=(ctl.q_head + n_take) % Q,
+        q_len=ctl.q_len - n_take,
+        w_ids=w_ids,
+        w_params=w_params,
+        w_pos=w_pos,
+        ev_log=ev_log,
+        ev_len=ev_len,
+    )
+    return st_new, ctl_new
+
+
+def _control_apply(
+    state: SlotState,
+    control: ControlState,
+    evict: jnp.ndarray,
+    reason: jnp.ndarray,
+    *,
+    shards: int,
+) -> tuple[SlotState, ControlState]:
+    """Reshape [S] -> [shards, P], vmap the shard-local control step, fold
+    back. The reshape splits the already-sharded leading axis on shard
+    boundaries, so SPMD keeps every shard's control step on its own device."""
+    S = state.active.shape[0]
+    P = S // shards
+
+    def split(leaf):
+        return leaf.reshape((shards, P) + leaf.shape[1:])
+
+    st_sh, ctl_sh = jax.vmap(_shard_control_step)(
+        jax.tree.map(split, state), control, split(evict), split(reason)
+    )
+    return jax.tree.map(lambda leaf: leaf.reshape((S,) + leaf.shape[2:]), st_sh), ctl_sh
+
+
+def _status5(state: SlotState) -> jnp.ndarray:
+    """[S, 5] packed post-control status: [delta, loss, steps, active, id]."""
+    return jnp.concatenate(
+        [pack_status(state), state.stream_id.astype(jnp.float32)[:, None]], axis=-1
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "scfg", "kernel", "quant", "slots_per_bank", "shards"),
+    donate_argnums=(0, 1),
+)
+def tick_device(
+    state: SlotState,
+    control: ControlState,
+    new_y: jnp.ndarray,  # [S, C, n]
+    new_u: jnp.ndarray,  # [S, C, m]
+    key: jax.Array,
+    *,
+    cfg: MRConfig,
+    scfg: StreamConfig,
+    kernel: str = "composite",
+    quant: bool = False,
+    slots_per_bank: int = 1,
+    shards: int = 1,
+) -> tuple[SlotState, ControlState, jnp.ndarray]:
+    """One zero-readback service tick: tick body + eviction + refill fused.
+
+    Runs the (bitwise-reference) composite or banked tick body, computes the
+    converged/budget eviction mask from the post-tick scalars IN-PROGRAM,
+    logs evictions, refills freed slots from the shard-local queues with the
+    on-device warm-start gather, and returns the next (state, control) plus
+    the packed [S, 5] status. The host touches none of it except at snapshot
+    ticks — both state trees are donated, so steady state is one program
+    launch with zero transfers in either direction.
+    """
+    if kernel == "banked":
+        state, _ = _tick_banked_impl(
+            state, new_y, new_u, key, cfg=cfg, scfg=scfg, quant=quant, slots_per_bank=slots_per_bank
+        )
+    else:
+        state = _tick_impl(state, new_y, new_u, key, cfg=cfg, scfg=scfg)
+    converged = (state.steps >= scfg.min_steps) & (state.delta <= scfg.delta_tol)
+    budget = state.steps >= scfg.max_steps
+    evict = state.active & (converged | budget)
+    reason = jnp.where(converged, 1.0, jnp.where(budget, 2.0, 0.0)).astype(jnp.float32)
+    state, control = _control_apply(state, control, evict, reason, shards=shards)
+    state, control = _pin(state), _pin(control)
+    return state, control, _status5(state)
+
+
+@functools.partial(jax.jit, static_argnames=("shards",), donate_argnums=(0, 1))
+def pump(
+    state: SlotState, control: ControlState, *, shards: int = 1
+) -> tuple[SlotState, ControlState, jnp.ndarray]:
+    """Admission-only control step (bootstrap / between-tick refill): pop the
+    shard queues into every idle slot without running a tick. A fresh slot
+    can never satisfy the eviction predicate (delta = inf, steps = 0), so the
+    all-False eviction mask is exact."""
+    S = state.active.shape[0]
+    evict = jnp.zeros((S,), bool)
+    reason = jnp.zeros((S,), jnp.float32)
+    state, control = _control_apply(state, control, evict, reason, shards=shards)
+    state, control = _pin(state), _pin(control)
+    return state, control, _status5(state)
+
+
+@jax.jit
+def drain_events(control: ControlState) -> tuple[ControlState, jnp.ndarray]:
+    """Snapshot drain: return the event log and reset it on device.
+
+    Not donated: the returned log aliases the input buffer, so XLA copies
+    exactly the [M, E, R] log — the queues and warm cache stay resident.
+    """
+    cleared = control._replace(
+        ev_log=jnp.full_like(control.ev_log, -1.0),
+        ev_len=jnp.zeros_like(control.ev_len),
+    )
+    return _pin(cleared), control.ev_log
+
+
+def decode_events(events: np.ndarray, cfg: MRConfig) -> list[tuple]:
+    """Host-side parse of one drained [M, E, R] event log.
+
+    Yields ``(stream_id, steps, reason_code, theta, mean, scale)`` per
+    eviction, in shard-major order; empty rows (id < 0) are skipped.
+    """
+    n_terms, n = cfg.n_terms, cfg.state_dim
+    k = n_terms * n
+    out = []
+    for shard_rows in np.asarray(events):
+        for rec in shard_rows:
+            sid = int(rec[0])
+            if sid < 0:
+                continue
+            out.append(
+                (
+                    sid,
+                    int(rec[1]),
+                    int(rec[2]),
+                    rec[3 : 3 + k].reshape(n_terms, n).copy(),
+                    rec[3 + k : 3 + k + n].copy(),
+                    rec[3 + k + n : 3 + k + 2 * n].copy(),
+                )
+            )
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class ControlPlane:
+    """The compiled device control plane a RecoveryPlan hands the service:
+    the four programs plus the capacities baked into the ControlState shapes
+    (all recorded in ``plan.lowering``)."""
+
+    queue_capacity: int  # Q: pending admissions per shard
+    snapshot_period: int  # host drains status + events every N ticks
+    warm_capacity: int  # W: on-device warm-cache entries per shard
+    shards: int  # M: mesh size (1 = trivial mesh)
+    tick: Callable  # tick_device with statics bound
+    enqueue: Callable  # enqueue (no statics)
+    pump: Callable  # pump with shards bound
+    drain: Callable  # drain_events

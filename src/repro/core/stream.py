@@ -260,24 +260,18 @@ def _recover_steps(params, opt, yw, uw, key, steps0, *, cfg: MRConfig, scfg: Str
     return params, opt, theta.mean(axis=0), recon[-1]
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "scfg"), donate_argnums=(0,))
-def tick(
+def _tick_impl(
     state: SlotState,
-    new_y: jnp.ndarray,  # [S, C, n] fresh observations (zeros for idle slots)
-    new_u: jnp.ndarray,  # [S, C, m]
+    new_y: jnp.ndarray,
+    new_u: jnp.ndarray,
     key: jax.Array,
     *,
     cfg: MRConfig,
     scfg: StreamConfig,
 ) -> SlotState:
-    """One service tick: ingest + K recovery steps + readout, for ALL slots.
-
-    A single compiled program (jit-cached across the whole run): ring-buffer
-    roll, per-slot re-normalization and windowing, the vmapped K-step train
-    scan and the coefficient readout all execute device-side with zero
-    per-slot or per-step dispatch — the service-level analogue of the
-    paper's "one setup, continuous streaming" pipeline.
-    """
+    """Composite tick body (un-jitted: ``tick`` wraps it; the device-resident
+    control-plane program in core/control.py inlines it ahead of the on-device
+    eviction/refill section so both paths trace the identical tick math)."""
     buf_y = roll_buffer(state.buf_y, new_y)
     buf_u = roll_buffer(state.buf_u, new_u)
     yw, uw = jax.vmap(lambda y, u, mu, sd: _slot_windows(y, u, mu, sd, scfg))(
@@ -325,13 +319,47 @@ def tick(
     )
 
 
-@functools.partial(
-    jax.jit, static_argnames=("cfg", "scfg", "quant", "slots_per_bank"), donate_argnums=(0,)
-)
-def tick_banked(
+@functools.partial(jax.jit, static_argnames=("cfg", "scfg"), donate_argnums=(0,))
+def tick(
     state: SlotState,
-    new_y: jnp.ndarray,  # [S, C, n]
+    new_y: jnp.ndarray,  # [S, C, n] fresh observations (zeros for idle slots)
     new_u: jnp.ndarray,  # [S, C, m]
+    key: jax.Array,
+    *,
+    cfg: MRConfig,
+    scfg: StreamConfig,
+) -> SlotState:
+    """One service tick: ingest + K recovery steps + readout, for ALL slots.
+
+    A single compiled program (jit-cached across the whole run): ring-buffer
+    roll, per-slot re-normalization and windowing, the vmapped K-step train
+    scan and the coefficient readout all execute device-side with zero
+    per-slot or per-step dispatch — the service-level analogue of the
+    paper's "one setup, continuous streaming" pipeline.
+    """
+    return _tick_impl(state, new_y, new_u, key, cfg=cfg, scfg=scfg)
+
+
+def pack_status(state: SlotState) -> jnp.ndarray:
+    """Pack the per-slot eviction scalars into ONE [S, 4] array
+    (``[delta, loss, steps, active]``) so a whole service status costs a
+    single host readback — the banked tick and the device-resident control
+    plane both return it instead of individual SlotState leaves."""
+    return jnp.stack(
+        [
+            state.delta,
+            state.loss,
+            state.steps.astype(jnp.float32),
+            state.active.astype(jnp.float32),
+        ],
+        axis=-1,
+    )
+
+
+def _tick_banked_impl(
+    state: SlotState,
+    new_y: jnp.ndarray,
+    new_u: jnp.ndarray,
     key: jax.Array,
     *,
     cfg: MRConfig,
@@ -339,18 +367,7 @@ def tick_banked(
     quant: bool = False,
     slots_per_bank: int = 1,
 ) -> tuple[SlotState, jnp.ndarray]:
-    """Banked one-kernel tick: same contract as ``tick``, plus packed status.
-
-    The training segment (K > 0) is BITWISE the composite tick's — the same
-    vmapped ``_recover_steps`` scan — but the whole serving segment (ring
-    ingest, window substeps, head, EMA Theta readout, delta) collapses into
-    one slot-banked ``mr_tick`` program (kernels/mr_step/tick.py) instead of
-    the composite stage sequence. Returns ``(state, status)`` where status
-    packs ``[delta, loss, steps, active]`` per slot into one [S, 4] array so
-    ``RecoveryService.tick_once`` needs a single host readback per tick.
-    ``quant`` serves the readout through the int8/PWL twin (K = 0 monitor
-    ticks: the serving configuration).
-    """
+    """Banked tick body (un-jitted; see ``_tick_impl`` for why it exists)."""
     from repro.kernels.mr_step.tick import mr_tick
 
     if scfg.steps_per_tick:
@@ -400,10 +417,38 @@ def tick_banked(
         loss=loss,
         steps=steps,
     )
-    status = jnp.stack(
-        [delta, loss, steps.astype(jnp.float32), state.active.astype(jnp.float32)], axis=-1
+    return state, pack_status(state)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "scfg", "quant", "slots_per_bank"), donate_argnums=(0,)
+)
+def tick_banked(
+    state: SlotState,
+    new_y: jnp.ndarray,  # [S, C, n]
+    new_u: jnp.ndarray,  # [S, C, m]
+    key: jax.Array,
+    *,
+    cfg: MRConfig,
+    scfg: StreamConfig,
+    quant: bool = False,
+    slots_per_bank: int = 1,
+) -> tuple[SlotState, jnp.ndarray]:
+    """Banked one-kernel tick: same contract as ``tick``, plus packed status.
+
+    The training segment (K > 0) is BITWISE the composite tick's — the same
+    vmapped ``_recover_steps`` scan — but the whole serving segment (ring
+    ingest, window substeps, head, EMA Theta readout, delta) collapses into
+    one slot-banked ``mr_tick`` program (kernels/mr_step/tick.py) instead of
+    the composite stage sequence. Returns ``(state, status)`` where status
+    packs ``[delta, loss, steps, active]`` per slot into one [S, 4] array so
+    ``RecoveryService.tick_once`` needs a single host readback per tick.
+    ``quant`` serves the readout through the int8/PWL twin (K = 0 monitor
+    ticks: the serving configuration).
+    """
+    return _tick_banked_impl(
+        state, new_y, new_u, key, cfg=cfg, scfg=scfg, quant=quant, slots_per_bank=slots_per_bank
     )
-    return state, status
 
 
 def readout_theta(
@@ -447,6 +492,20 @@ class RecoveryService:
 
     All numerics run inside the compiled ``tick``/``admit`` programs; this
     class only moves O(slots) scalars across the host boundary per tick.
+
+    Two control planes (``control=`` — a ``control.ControlPlane`` record built
+    by the plan — selects the device-resident one):
+
+    - **host** (the reference): admission pops a ``collections.deque``,
+      eviction decisions read per-slot scalars back each tick and each
+      admission runs the ``admit`` program (plus a reshard on a mesh). Kept
+      bitwise-stable — the device path is locked against it.
+    - **device**: the queue, the eviction mask, the refill and the warm-start
+      lookup all live inside ONE donated tick program
+      (``control.tick_device``); the host only enqueues arrivals and drains a
+      packed status snapshot + event log every ``snapshot_period`` ticks.
+      Between arrivals and snapshots a tick is ZERO host readbacks and zero
+      reshards (the slot shard is never re-pinned).
     """
 
     def __init__(
@@ -458,6 +517,8 @@ class RecoveryService:
         quant: bool = False,
         mesh=None,
         tick_program=None,
+        control=None,
+        warm_capacity: int = 32,
     ):
         encoders.validate_config(cfg)  # fused x fusable fails HERE, not mid-trace
         self.cfg, self.scfg, self.n_slots = cfg, scfg, n_slots
@@ -477,7 +538,7 @@ class RecoveryService:
         # the compiled tick: a RecoveryPlan passes its pre-bound program so
         # the service runs EXACTLY what the plan compiled; standalone
         # construction binds the module-level program with this config
-        if tick_program is None:
+        if tick_program is None and control is None:
             from repro.deprecation import warn_deprecated_once
 
             warn_deprecated_once(
@@ -494,9 +555,47 @@ class RecoveryService:
         if mesh is not None:
             self.state = shard_slots(self.state, mesh)
         self.queue: collections.deque = collections.deque()
-        self.warm: dict[int, MRParams] = {}  # stream_id -> evicted params
+        # bounded LRU warm-start registry (stream_id -> evicted params): a
+        # long-running service would otherwise accumulate one params tree per
+        # stream it has EVER served; beyond capacity the least-recently-used
+        # entry is dropped and a returning stream cold-starts
+        self.warm: collections.OrderedDict[int, MRParams] = collections.OrderedDict()
+        self.warm_capacity = int(warm_capacity)
         self.results: dict[int, StreamResult] = {}
         self.ticks = 0
+        # host-side snapshot of the per-slot status, refreshed wherever the
+        # status is already being read (fill_slots / tick_once / snapshots) so
+        # polling `done`, `drain()` or `slot_streams()` never forces a fresh
+        # device->host readback
+        self._active_view = np.zeros((n_slots,), bool)
+        self._slot_view = np.full((n_slots,), -1, np.int64)
+        self._delta_view = np.full((n_slots,), np.inf, np.float32)
+        self._loss_view = np.full((n_slots,), np.inf, np.float32)
+        self._steps_view = np.zeros((n_slots,), np.int64)
+        self._undrained: list[StreamResult] = []
+        # -- device-resident control plane (control.py) ----------------------
+        self.control_plane = control
+        self.control = None
+        self._pending: set[int] = set()  # submitted, no result yet
+        self._seen_done: set[int] = set()  # completed since last resubmission
+        self._inflight: list[set[int]] = []  # per-shard: enqueued, not yet admitted
+        self._ticks_since_snapshot = 0
+        if control is not None:
+            from repro.core import control as control_mod
+
+            self.control = control_mod.init_control(
+                self.key,
+                cfg,
+                scfg,
+                n_slots,
+                shards=control.shards,
+                queue_capacity=control.queue_capacity,
+                warm_capacity=control.warm_capacity,
+                snapshot_period=control.snapshot_period,
+            )
+            if mesh is not None:
+                self.control = control_mod.shard_control(self.control, mesh)
+            self._inflight = [set() for _ in range(control.shards)]
 
     def _mesh_ctx(self):
         """Activate the slot mesh (jax.set_mesh shim via parallel/) around
@@ -516,15 +615,57 @@ class RecoveryService:
         self.counters["reshards"] += 1
         self.state = shard_slots(self.state, self.mesh)
 
+    # -- warm-start registry (bounded LRU) ----------------------------------
+    def _warm_put(self, stream_id: int, params: MRParams):
+        self.warm[stream_id] = params
+        self.warm.move_to_end(stream_id)
+        while len(self.warm) > self.warm_capacity:
+            self.warm.popitem(last=False)
+
+    def _warm_get(self, stream_id: int) -> MRParams | None:
+        params = self.warm.get(stream_id)
+        if params is not None:
+            self.warm.move_to_end(stream_id)
+        return params
+
     # -- admission ----------------------------------------------------------
     def submit(self, stream_id: int, history_y: np.ndarray, history_u: np.ndarray | None = None):
-        """Enqueue a stream with its initial buf_len-observation history."""
+        """Enqueue a stream with its initial buf_len-observation history.
+
+        On the device control plane the history (and a cold params tree — the
+        on-device warm cache overrides it on a hit) is appended straight into
+        the least-loaded shard's on-device admission ring; the slot axis is
+        never resharded.
+        """
         L, m = self.scfg.buf_len, self.cfg.input_dim
         if history_y.shape != (L, self.cfg.state_dim):
             raise ValueError(f"history must be [{L}, {self.cfg.state_dim}], got {history_y.shape}")
         if history_u is None:
             history_u = np.zeros((L, m), np.float32)
-        self.queue.append((int(stream_id), np.asarray(history_y), np.asarray(history_u)))
+        if self.control_plane is None:
+            self.queue.append((int(stream_id), np.asarray(history_y), np.asarray(history_u)))
+            return
+        cp = self.control_plane
+        sid = int(stream_id)
+        shard = min(range(cp.shards), key=lambda i: (len(self._inflight[i]), i))
+        if len(self._inflight[shard]) >= cp.queue_capacity:
+            raise RuntimeError(
+                f"device admission queue full (capacity {cp.queue_capacity} per "
+                f"shard x {cp.shards} shard(s)); tick the service before submitting more"
+            )
+        params, _ = cold_start(jax.random.fold_in(self.key, 1000 + sid), self.cfg)
+        with self._mesh_ctx():
+            self.control = cp.enqueue(
+                self.control,
+                jnp.int32(shard),
+                jnp.int32(sid),
+                jnp.asarray(history_y, jnp.float32),
+                jnp.asarray(history_u, jnp.float32),
+                params,
+            )
+        self._inflight[shard].add(sid)
+        self._pending.add(sid)
+        self._seen_done.discard(sid)
 
     def _admit_into(self, slot: int):
         if not self.queue:
@@ -534,10 +675,13 @@ class RecoveryService:
                 # same propagation hazard as the admit path below: the
                 # update mixes in replicated scalars, so re-pin the shard
                 self._reshard()
+            self._active_view[slot] = False
+            self._slot_view[slot] = -1
             return None
         stream_id, buf_y, buf_u = self.queue.popleft()
-        if stream_id in self.warm:
-            params = self.warm[stream_id]
+        warm_params = self._warm_get(stream_id)
+        if warm_params is not None:
+            params = warm_params
             opt = adamw_init(params)
         else:
             params, opt = cold_start(jax.random.fold_in(self.key, 1000 + stream_id), self.cfg)
@@ -555,12 +699,30 @@ class RecoveryService:
             # admission mixes replicated single-slot operands into the update;
             # re-pin the slot shard so every later tick sees the same layout
             self._reshard()
+        self._active_view[slot] = True
+        self._slot_view[slot] = int(stream_id)
+        self._delta_view[slot] = np.inf
+        self._loss_view[slot] = np.inf
+        self._steps_view[slot] = 0
         return stream_id
 
     def fill_slots(self) -> list[int]:
-        """Bootstrap: admit queued streams into every empty slot."""
+        """Bootstrap: admit queued streams into every empty slot.
+
+        Device control plane: one ``pump`` program drains the on-device rings
+        into every idle slot, then a snapshot refreshes the host views.
+        """
+        if self.control_plane is not None:
+            before = {int(i) for i in self._slot_view if i >= 0}
+            with self._mesh_ctx():
+                self.state, self.control, status = self.control_plane.pump(
+                    self.state, self.control
+                )
+            self._snapshot(status)
+            return [int(i) for i in self._slot_view if i >= 0 and int(i) not in before]
         admitted = []
         active = self._host_read(self.state.active)
+        self._active_view = np.asarray(active, bool).copy()
         for s in range(self.n_slots):
             if not active[s] and self.queue:
                 sid = self._admit_into(s)
@@ -570,7 +732,14 @@ class RecoveryService:
 
     # -- the tick loop ------------------------------------------------------
     def slot_streams(self) -> list[int]:
-        """stream_id per slot (-1 = empty); the driver feeds chunks by this."""
+        """stream_id per slot (-1 = empty); the driver feeds chunks by this.
+
+        Host path: a per-call device readback (the reference data router).
+        Device path: the cached snapshot view — no readback; between
+        snapshots the map is as fresh as the last snapshot tick.
+        """
+        if self.control_plane is not None:
+            return [int(i) for i in self._slot_view]
         return [int(i) for i in self._host_read(self.state.stream_id)]
 
     def _evict(self, slot: int, reason: str) -> StreamResult:
@@ -592,15 +761,91 @@ class RecoveryService:
             reason=reason,
         )
         self.results[sid] = res
-        self.warm[sid] = jax.tree.map(lambda a: a[slot], st.params)
+        self._undrained.append(res)
+        self._warm_put(sid, jax.tree.map(lambda a: a[slot], st.params))
         return res
 
+    def _snapshot(self, status) -> list[StreamResult]:
+        """Device control plane: refresh the host views from the packed
+        [S, 5] status and drain the on-device event log into StreamResults.
+
+        The ONLY device->host readbacks on the device path happen here — two
+        per snapshot (status + event log), every ``snapshot_period`` ticks.
+        """
+        from repro.core import control as control_mod
+
+        cp = self.control_plane
+        snap = self._host_read(status)
+        self._delta_view = snap[:, 0].copy()
+        self._loss_view = snap[:, 1].copy()
+        self._steps_view = snap[:, 2].astype(np.int64)
+        self._active_view = snap[:, 3] > 0
+        self._slot_view = snap[:, 4].astype(np.int64)
+        with self._mesh_ctx():
+            self.control, events = cp.drain(self.control)
+        new_results = []
+        for sid, steps, code, theta, mean, scale in control_mod.decode_events(
+            self._host_read(events), self.cfg
+        ):
+            res = StreamResult(
+                stream_id=sid,
+                theta=theta,
+                mean=mean,
+                scale=scale,
+                steps=steps,
+                reason="converged" if code == 1 else "budget",
+            )
+            self.results[sid] = res
+            self._undrained.append(res)
+            self._pending.discard(sid)
+            self._seen_done.add(sid)
+            new_results.append(res)
+        # an enqueued id leaves its shard's in-flight set once the snapshot
+        # shows it admitted (slot view) or already completed (event log)
+        settled = {int(i) for i in self._slot_view if i >= 0} | self._seen_done
+        for shard_ids in self._inflight:
+            shard_ids.difference_update(settled)
+        self._ticks_since_snapshot = 0
+        return new_results
+
     def tick_once(self, chunks_y: np.ndarray, chunks_u: np.ndarray | None = None) -> dict:
-        """Advance the service one tick; returns an info dict of host scalars."""
+        """Advance the service one tick; returns an info dict of host scalars.
+
+        Device control plane: ONE donated program runs tick + eviction mask +
+        queue refill + warm-start gather; the host reads nothing back except
+        at snapshot ticks (every ``snapshot_period``), so ``sync_log`` records
+        0 for steady-state ticks. Between snapshots the info dict serves the
+        cached (snapshot-stale) views.
+        """
         syncs0 = self.counters["host_syncs"]
         S, C, m = self.n_slots, self.scfg.chunk, self.cfg.input_dim
         if chunks_u is None:
             chunks_u = np.zeros((S, C, m), np.float32)
+        if self.control_plane is not None:
+            cp = self.control_plane
+            with self._mesh_ctx():
+                self.state, self.control, status = cp.tick(
+                    self.state,
+                    self.control,
+                    jnp.asarray(chunks_y, jnp.float32),
+                    jnp.asarray(chunks_u, jnp.float32),
+                    jax.random.fold_in(self.key, self.ticks),
+                )
+            self.ticks += 1
+            self._ticks_since_snapshot += 1
+            evicted: list[StreamResult] = []
+            if self._ticks_since_snapshot >= cp.snapshot_period:
+                evicted = self._snapshot(status)
+            info = {
+                "tick": self.ticks,
+                "evicted": evicted,
+                "active": int(self._active_view.sum()),
+                "delta": self._delta_view,
+                "loss": self._loss_view,
+                "steps": self._steps_view,
+            }
+            self.sync_log.append(self.counters["host_syncs"] - syncs0)
+            return info
         with self._mesh_ctx():
             out = self._tick(
                 self.state,
@@ -626,6 +871,11 @@ class RecoveryService:
             delta = self._host_read(self.state.delta)
             steps = self._host_read(self.state.steps)
             active = self._host_read(self.state.active)
+        self._active_view = np.asarray(active, bool).copy()
+        self._delta_view = np.asarray(delta).copy()
+        if banked:
+            self._loss_view = np.asarray(loss).copy()
+        self._steps_view = np.asarray(steps, np.int64)
         evicted = []
         for s in range(S):
             if not active[s]:
@@ -636,22 +886,40 @@ class RecoveryService:
                 res = self._evict(s, "converged" if converged else "budget")
                 evicted.append(res)
                 self._admit_into(s)
-        if not banked or evicted:
-            # eviction/admission changed the slot map: re-read the device copy
-            active_now = int(self._host_read(self.state.active).sum())
-        else:
-            active_now = int(active.sum())
+        # eviction/admission updated the cached view in place, so the active
+        # count never needs a second device readback (the polling-side fix:
+        # `done` and `drain()` read the same host-side view)
+        if not banked:
+            self._loss_view = np.array(self._host_read(self.state.loss))
         info = {
             "tick": self.ticks,
             "evicted": evicted,
-            "active": active_now,
+            "active": int(self._active_view.sum()),
             "delta": delta,
-            "loss": loss if banked else self._host_read(self.state.loss),
+            "loss": self._loss_view,
             "steps": steps,
         }
         self.sync_log.append(self.counters["host_syncs"] - syncs0)
         return info
 
+    def drain(self) -> list[StreamResult]:
+        """Completed-stream results accumulated since the last drain.
+
+        Pure host-side bookkeeping (results land here at eviction on the host
+        path, at snapshot ticks on the device path) — polling it never costs
+        a device readback.
+        """
+        out, self._undrained = self._undrained, []
+        return out
+
     @property
     def done(self) -> bool:
-        return not self.queue and not bool(self._host_read(self.state.active).any())
+        """True when no stream is queued, running or awaiting a result.
+
+        Served from the cached status views (host path) or the pending set
+        (device path) — polling `done` in a serve loop is readback-free; it
+        used to force a `_host_read(state.active)` per call.
+        """
+        if self.control_plane is not None:
+            return not self._pending
+        return not self.queue and not bool(self._active_view.any())

@@ -35,7 +35,19 @@ per-channel scales, PWL sigmoid/tanh — standard GRU cell only, matching
 ``mr_step_pallas_int8``). ``mr_tick`` is the dispatch wrapper (compiled
 kernel on TPU, interpret for CPU correctness sweeps, the ``ref.py`` oracle
 otherwise); the oracle delegates to the existing ingest/step/readout
-composition (data/windows.py + ``mr_step_reference``)."""
+composition (data/windows.py + ``mr_step_reference``).
+
+Control-plane composition contract (core/control.tick_device): under
+``TickSpec(control="device")`` the banked tick body runs INSIDE the
+device-resident control-plane program — the kernel's packed ``[S, 4]``
+status block feeds the in-program eviction mask, queue refill and
+warm-start push directly, with no intermediate host readback. The kernel
+therefore must stay (a) shape-stable in the slot axis (eviction/refill
+rewrite slot rows in place, never resize), (b) collective-free when the
+slot axis is sharded (rules.predict_tick_collectives stays empty — audit
+rule R5 covers the composed program), and (c) side-effect-free beyond its
+declared outputs, so the surrounding program's donation of SlotState and
+ControlState holds (audit rule R1)."""
 
 from __future__ import annotations
 

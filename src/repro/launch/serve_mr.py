@@ -54,6 +54,19 @@ packed one-readback status — the CI banked serve scenario:
     PYTHONPATH=src python -m repro.launch.serve_mr \
         --plan --tick-kernel banked --streams 12 --slots 4
 
+``--control device`` (requires ``--plan``) serves through the
+device-resident control plane (core/control.py): admission waits in
+per-shard on-device rings, eviction and queue refill and the warm-start
+gather all run inside the tick program, and the host only reads back a
+packed status + event-log snapshot every ``--snapshot-period`` ticks — so
+a steady-state tick is ONE donated program with zero readbacks between
+snapshots, and admission never re-shards the slot axis. The CI
+device-resident sharded serve scenario:
+
+    PYTHONPATH=src python -m repro.launch.serve_mr \
+        --plan --control device --mesh 2 --virtual-devices 2 \
+        --streams 12 --slots 4
+
 Heavy imports happen inside the entry points (after ``--virtual-devices``
 has set XLA_FLAGS), never at module import time.
 """
@@ -208,6 +221,31 @@ def build_parser() -> argparse.ArgumentParser:
         help="devices sharding the slot axis (requires --plan; 1 = single device)",
     )
     ap.add_argument(
+        "--control",
+        choices=("host", "device"),
+        default="host",
+        help="service control plane (requires --plan for 'device'): 'device' "
+        "keeps admission queues, eviction and warm-start lookup on-device "
+        "(core/control.py), so steady-state ticks run with zero host readbacks "
+        "between snapshots and admission never re-shards the slot axis",
+    )
+    ap.add_argument(
+        "--snapshot-period",
+        type=int,
+        default=1,
+        help="device control plane: ticks between status/event-log snapshots. "
+        "This driver routes per-stream chunks from the snapshot's slot map, so "
+        "the default is 1 (every tick); raise it only when streams share input "
+        "feeds and stale routing for N-1 ticks is acceptable",
+    )
+    ap.add_argument(
+        "--queue-capacity",
+        type=int,
+        default=0,
+        help="device control plane: per-shard admission ring capacity "
+        "(0 = auto, sized so every stream can wait at once)",
+    )
+    ap.add_argument(
         "--audit",
         choices=("off", "warn", "error"),
         default="off",
@@ -246,6 +284,11 @@ def main() -> int:
         raise SystemExit(
             "--tick-kernel requires --plan (the tick program is plan-compiled; "
             "the legacy service binds the composite tick internally)"
+        )
+    if args.control == "device" and not args.plan:
+        raise SystemExit(
+            "--control device requires --plan (the control-plane programs are "
+            "plan-compiled; the legacy service is host-driven)"
         )
 
     # jax loads HERE, after the virtual-device environment is pinned
@@ -289,7 +332,11 @@ def main() -> int:
         # (steps_per_tick/ema) mirrors the StreamConfig above, the kernel
         # choice is the only new degree of freedom
         tick=api.TickSpec(
-            steps_per_tick=args.steps_per_tick, tick_kernel=args.tick_kernel
+            steps_per_tick=args.steps_per_tick,
+            tick_kernel=args.tick_kernel,
+            control=args.control,
+            queue_capacity=args.queue_capacity or max(args.streams, 1),
+            snapshot_period=args.snapshot_period,
         ),
         mesh_slots=args.mesh,
     )
@@ -316,6 +363,13 @@ def main() -> int:
         f"[serve_mr] {n_done}/{args.streams} streams recovered in {stats['ticks']} ticks "
         f"({stats['wall_s']:.1f}s, {stats['ticks'] / max(stats['wall_s'], 1e-9):.1f} ticks/s)"
     )
+    if service.sync_log:
+        print(
+            f"[serve_mr] host boundary ({args.control if args.plan else 'host'} "
+            f"control plane): {service.counters['host_syncs']} syncs, "
+            f"{service.counters['reshards']} reshards; "
+            f"median {float(np.median(service.sync_log)):.1f} syncs/tick"
+        )
     if n_done < args.streams:
         print(f"[serve_mr] FAIL: {args.streams - n_done} streams never recovered")
         return 1

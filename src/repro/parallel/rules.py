@@ -261,11 +261,16 @@ def predict_tick_collectives(mesh: Mesh | None) -> dict[str, int]:
     (stream.SLOT_RULES) and the tick's computation is independent per slot —
     the vmapped recovery steps, readout and eviction signals never contract
     or permute across slots — so a correctly-sharded tick compiles with ZERO
-    collectives regardless of mesh size. Rule R5 (analysis/rules.py) holds
-    the compiled HLO to this prediction: any all-reduce/all-gather appearing
-    in a sharded tick means a sharding rule regressed (e.g. a replicated
-    operand forcing a gather) and the service would pay cross-mesh wire
-    bytes on every tick.
+    collectives regardless of mesh size. The device-resident control plane
+    (core/control.py) preserves this census: ControlState leaves carry a
+    leading per-shard axis sharded the same way, and eviction, queue refill
+    and the warm-start gather inside ``tick_device`` are computed per shard
+    (the [slots] -> [shards, slots_per_shard] reshape is a local relabeling
+    of the already-sharded axis, not a permutation across devices). Rule R5
+    (analysis/rules.py) holds the compiled HLO to this prediction: any
+    all-reduce/all-gather appearing in a sharded tick means a sharding rule
+    regressed (e.g. a replicated operand forcing a gather) and the service
+    would pay cross-mesh wire bytes on every tick.
     """
     del mesh
     return {}

@@ -293,3 +293,213 @@ def test_banked_plan_passes_audit_with_tick_residency_cell():
     plan = api.compile_plan(spec, audit="error")  # any finding raises
     assert plan.lowering.audit.startswith("pass")
     assert "R2" in plan.lowering.audit
+
+
+# ---------------------------------------------------------------------------
+# device-resident control plane (core/control.py): host-queue parity + syncs
+# ---------------------------------------------------------------------------
+# budget-only eviction (delta_tol=0): the two planes run the SAME tick math
+# but as differently-fused XLA programs, so float-identical convergence
+# deltas are not guaranteed near a tolerance — the lockstep comparison pins
+# occupancy/steps/reason exactly and theta to 1e-5 instead.
+CCFG = StreamConfig(
+    buf_len=32,
+    window=8,
+    stride=8,
+    chunk=8,
+    steps_per_tick=8,
+    min_steps=16,
+    max_steps=16,
+    delta_tol=0.0,
+)
+
+
+def _control_spec(control, scfg=CCFG, **overrides):
+    base = dict(
+        mode="stream",
+        n_slots=2,
+        stream=scfg,
+        encoder="gru",
+        seed=0,
+        tick=TickSpec(
+            steps_per_tick=scfg.steps_per_tick,
+            control=control,
+            queue_capacity=8,
+            snapshot_period=1,
+            warm_capacity=8,
+        ),
+        **BASE,
+    )
+    base.update(overrides)
+    return RecoverySpec(**base)
+
+
+def test_tick_spec_validates_control_plane_fields():
+    with pytest.raises(ValueError, match="control"):
+        TickSpec(control="fpga")
+    with pytest.raises(ValueError, match="queue_capacity"):
+        TickSpec(queue_capacity=0)
+    with pytest.raises(ValueError, match="snapshot_period"):
+        TickSpec(snapshot_period=0)
+    with pytest.raises(ValueError, match="warm_capacity"):
+        TickSpec(warm_capacity=0)
+
+
+def test_plan_records_control_plane_lowering():
+    low_d = api.compile_plan(_control_spec("device")).lowering
+    assert low_d.control_plane == "device"
+    assert low_d.tick_queue_capacity == 8
+    assert low_d.tick_snapshot_period == 1
+    assert low_d.warm_capacity == 8
+    low_h = api.compile_plan(_control_spec("host")).lowering
+    assert low_h.control_plane == "host"
+    assert low_h.tick_queue_capacity is None
+    assert low_h.tick_snapshot_period is None
+
+
+def test_device_control_matches_host_queue_lockstep(lorenz):
+    """Randomized admission/eviction traffic through both control planes in
+    lockstep: same slot occupancy, same eviction (tick, id, steps, reason),
+    per-stream theta to 1e-5 — including a warm-start resubmission wave."""
+    rng = np.random.default_rng(7)
+    n_streams, slots = 6, 2
+    data = np.stack(
+        [
+            np.roll(lorenz, -int(rng.integers(0, 64)), axis=0)
+            + rng.normal(0.0, 0.01, lorenz.shape)
+            for _ in range(n_streams)
+        ]
+    ).astype(np.float32)
+    arrivals = {0: [0, 1, 2], 2: [3], 3: [4], 5: [5]}  # rng-drawn, then frozen
+    t_total = data.shape[1]
+
+    def run_traffic(svc, resubmit=()):
+        cursors = dict.fromkeys(range(n_streams), CCFG.buf_len)
+        slot_maps, evictions = [], []
+        for sid in resubmit:
+            svc.submit(sid, data[sid, : CCFG.buf_len])
+        svc.fill_slots()
+        t = 0
+        while (not svc.done or t in arrivals) and t < 40:
+            if not resubmit:
+                for sid in arrivals.get(t, ()):
+                    svc.submit(sid, data[sid, : CCFG.buf_len])
+                    svc.fill_slots()
+            chunk = np.zeros((slots, CCFG.chunk, 3), np.float32)
+            for s, sid in enumerate(svc.slot_streams()):
+                if sid < 0:
+                    continue
+                idx = (cursors[sid] + np.arange(CCFG.chunk)) % t_total
+                chunk[s] = data[sid, idx]
+                cursors[sid] += CCFG.chunk
+            info = svc.tick_once(chunk)
+            slot_maps.append(tuple(int(s) for s in svc.slot_streams()))
+            evictions.extend((t, r.stream_id, r.steps, r.reason) for r in info["evicted"])
+            t += 1
+        return slot_maps, evictions
+
+    services, traces = {}, {}
+    for control in ("host", "device"):
+        svc = api.compile_plan(_control_spec(control)).make_service()
+        traces[control] = run_traffic(svc)
+        services[control] = svc
+    assert traces["device"] == traces["host"]
+    assert services["device"].done and services["host"].done
+    res_h, res_d = services["host"].results, services["device"].results
+    assert set(res_d) == set(res_h) == set(range(n_streams))
+    for sid in range(n_streams):
+        assert (res_d[sid].steps, res_d[sid].reason) == (res_h[sid].steps, res_h[sid].reason)
+        np.testing.assert_allclose(res_d[sid].theta, res_h[sid].theta, atol=1e-5)
+        np.testing.assert_allclose(res_d[sid].mean, res_h[sid].mean, atol=1e-6)
+    # warm-start resubmission (below LRU/warm-cache capacity): both planes
+    # must serve the cached evicted params, not a cold restart
+    for control in ("host", "device"):
+        traces[control] = run_traffic(services[control], resubmit=(0, 1))
+    assert traces["device"] == traces["host"]
+    for sid in (0, 1):
+        np.testing.assert_allclose(
+            services["device"].results[sid].theta,
+            services["host"].results[sid].theta,
+            atol=1e-5,
+        )
+
+
+def test_device_queue_overflow_raises(lorenz):
+    svc = api.compile_plan(
+        _control_spec("device", tick=TickSpec(steps_per_tick=8, control="device", queue_capacity=2))
+    ).make_service()
+    svc.submit(0, lorenz[: CCFG.buf_len])
+    svc.submit(1, lorenz[: CCFG.buf_len])
+    with pytest.raises(RuntimeError, match="admission queue full"):
+        svc.submit(2, lorenz[: CCFG.buf_len])
+
+
+def test_device_queue_ring_wraps(lorenz):
+    """Capacity-2 ring admits two waves of two: the second wave's writes wrap
+    the ring head and still admit/complete the right streams."""
+    svc = api.compile_plan(
+        _control_spec("device", tick=TickSpec(steps_per_tick=8, control="device", queue_capacity=2))
+    ).make_service()
+    for sid in (0, 1):
+        svc.submit(sid, lorenz[: CCFG.buf_len])
+    svc.fill_slots()  # snapshot reconciles: ring is empty again
+    for sid in (2, 3):
+        svc.submit(sid, lorenz[sid : sid + CCFG.buf_len])
+    chunk = np.repeat(lorenz[CCFG.buf_len : CCFG.buf_len + CCFG.chunk][None], 2, axis=0)
+    for _ in range(8):
+        if svc.done:
+            break
+        svc.tick_once(chunk)
+    assert set(svc.results) == {0, 1, 2, 3}
+    assert all(r.steps == CCFG.max_steps for r in svc.results.values())
+
+
+def test_host_warm_registry_bounded(lorenz):
+    """Satellite: the host-path warm-start registry is a bounded LRU sized by
+    TickSpec.warm_capacity, not an unbounded dict."""
+    svc = api.compile_plan(
+        _control_spec(
+            "host",
+            n_slots=1,
+            tick=TickSpec(steps_per_tick=8, control="host", warm_capacity=2),
+        )
+    ).make_service()
+    assert svc.warm_capacity == 2
+    for sid in range(3):
+        svc.submit(sid, lorenz[sid : sid + CCFG.buf_len])
+    svc.fill_slots()
+    chunk = lorenz[CCFG.buf_len : CCFG.buf_len + CCFG.chunk][None]
+    for _ in range(8):
+        if svc.done:
+            break
+        svc.tick_once(chunk)
+    assert set(svc.results) == {0, 1, 2}
+    assert list(svc.warm) == [1, 2]  # LRU: stream 0's entry was evicted
+
+
+def test_device_snapshot_period_steady_state_zero_syncs(lorenz):
+    """With snapshot_period=4 and no evictions, only every 4th tick reads
+    anything back (status + event drain); the median steady-state tick is
+    ZERO host syncs and the service stays queryable from cached views."""
+    scfg = dataclasses.replace(CCFG, min_steps=10**9, max_steps=10**9)
+    svc = api.compile_plan(
+        _control_spec(
+            "device",
+            scfg=scfg,
+            tick=TickSpec(steps_per_tick=8, control="device", snapshot_period=4),
+        )
+    ).make_service()
+    for sid in (0, 1):
+        svc.submit(sid, lorenz[: scfg.buf_len])
+    svc.fill_slots()
+    chunk = np.repeat(lorenz[scfg.buf_len : scfg.buf_len + scfg.chunk][None], 2, axis=0)
+    for _ in range(8):
+        svc.tick_once(chunk)
+    syncs0 = svc.counters["host_syncs"]
+    assert list(svc.slot_streams()) == [0, 1]  # served from the snapshot view
+    assert svc.done is False  # no eager active-mask readback (satellite fix)
+    assert svc.counters["host_syncs"] == syncs0
+    assert svc.counters["reshards"] == 0
+    log = svc.sync_log[1:]  # tick 0 pays compile-adjacent snapshot timing
+    assert float(np.median(log)) == 0.0
+    assert all(s == 0 for i, s in enumerate(log, start=2) if i % 4 != 0), log
