@@ -581,6 +581,142 @@ def run_mesh_scaling(
     return rows, metrics
 
 
+# ---------------------------------------------------------------------------
+# chaos drill: kill a shard mid-stream, restore onto the shrunken mesh
+# ---------------------------------------------------------------------------
+# Subprocess for the same reason as the mesh sweep: the 2-virtual-device
+# XLA flag must be set before any jax import. The drill is the resilience
+# subsystem end to end (runtime/resilience.py): a 2-shard device-control
+# service snapshots SlotState + ControlState every checkpoint_period ticks;
+# at tick `kill_at` one shard "fails" (SimulatedFailure), the supervisor
+# re-plans the slot mesh on the survivor, recompiles, restores the latest
+# snapshot with resharding, re-enqueues in-flight streams, and every
+# stream must still converge.
+_CHAOS_SNIPPET = """\
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={device_count}"
+import json
+import tempfile
+import time
+
+import numpy as np
+
+from repro.api import RecoverySpec, TickSpec
+from repro.core.stream import StreamConfig
+from repro.data.dynamics import generate_trajectory
+from repro.runtime import ServiceSupervisor, kill_shard_once
+
+scfg = StreamConfig(
+    buf_len=32, window=8, stride=8, chunk=8, steps_per_tick=8,
+    min_steps=16, max_steps=32, delta_tol=0.0,
+)
+spec = RecoverySpec(
+    state_dim=3, input_dim=0, order=2, hidden=8, dense_hidden=16, dt=0.01,
+    mode="stream", n_slots={slots}, stream=scfg, seed=0, mesh_slots=2,
+    tick=TickSpec(steps_per_tick=8, control="device",
+                  queue_capacity={streams}, snapshot_period=1,
+                  warm_capacity={slots}),
+)
+ys = np.stack([
+    generate_trajectory("lorenz", n_samples=400, noise_std=0.01, seed=i)[1]
+    for i in range({streams})
+]).astype(np.float32)
+sup = ServiceSupervisor(spec, tempfile.mkdtemp(prefix="bench_chaos_"),
+                        checkpoint_period={checkpoint_period},
+                        chaos=kill_shard_once({kill_at}, n_lost=1))
+t0 = time.perf_counter()
+out = sup.serve(ys, max_ticks={max_ticks})
+wall = time.perf_counter() - t0
+print("CHAOSBENCH " + json.dumps({{
+    "recovered_streams_fraction": out["recovered_streams_fraction"],
+    "restarts": out["restarts"],
+    "final_mesh": list(out["final_mesh"]),
+    "ticks": out["ticks"],
+    "p50_tick_ms": out["p50_tick_ms"],
+    "p99_tick_ms": out["p99_tick_ms"],
+    "wall_s": round(wall, 3),
+    "n_streams": {streams},
+}}))
+"""
+
+
+def run_chaos(
+    slots: int = 4,
+    streams: int = 6,
+    kill_at: int = 3,
+    checkpoint_period: int = 2,
+    device_count: int = 2,
+    smoke: bool = False,
+):
+    """Shard-loss recovery drill; gated ``recovered_streams_fraction``.
+
+    A 2-shard device-control service loses one virtual device mid-stream;
+    the ServiceSupervisor (runtime/resilience.py) restores the latest
+    SlotState+ControlState snapshot onto the re-planned 1-device mesh and
+    re-enqueues the in-flight streams. The gated metric is the fraction of
+    submitted streams that still complete — pinned to EXACTLY 1.0 (floor
+    AND ceiling in baselines.json): below means recovery dropped a stream,
+    above means the accounting is broken. Deterministic (fixed seeds, no
+    wall clock in the gated row); wall numbers land in info. Returns
+    (csv_rows, metrics).
+    """
+    del smoke  # the drill is already smoke-sized; flag kept for symmetry
+    prog = _CHAOS_SNIPPET.format(
+        device_count=device_count,
+        slots=slots,
+        streams=streams,
+        kill_at=kill_at,
+        checkpoint_period=checkpoint_period,
+        max_ticks=60,
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO_ROOT / "src")
+    env.pop("XLA_FLAGS", None)
+    p = subprocess.run(
+        [sys.executable, "-c", prog],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=REPO_ROOT,
+        timeout=900,
+    )
+    marker = [ln for ln in p.stdout.splitlines() if ln.startswith("CHAOSBENCH ")]
+    if p.returncode != 0 or not marker:
+        raise RuntimeError(
+            f"chaos-drill subprocess failed (rc={p.returncode})\n"
+            f"stdout:\n{p.stdout[-2000:]}\nstderr:\n{p.stderr[-2000:]}"
+        )
+    stats = json.loads(marker[0][len("CHAOSBENCH ") :])
+    frac = stats["recovered_streams_fraction"]
+    rows = [
+        (
+            "stream/chaos_recovered_fraction",
+            stats["wall_s"] * 1e6,
+            f"{frac:.2f} of {stats['n_streams']} streams after losing 1/"
+            f"{device_count} shards at tick {kill_at}; {stats['restarts']} "
+            f"restart(s); final mesh {tuple(stats['final_mesh'])}; "
+            f"p50={stats['p50_tick_ms']:.1f}ms p99={stats['p99_tick_ms']:.1f}ms",
+        ),
+    ]
+    metrics = {
+        "recovered_streams_fraction": frac,
+        "info": {
+            "n_streams": stats["n_streams"],
+            "slots": slots,
+            "kill_at_tick": kill_at,
+            "checkpoint_period": checkpoint_period,
+            "restarts": stats["restarts"],
+            "final_mesh": stats["final_mesh"],
+            "ticks": stats["ticks"],
+            "p50_tick_ms": stats["p50_tick_ms"],
+            "p99_tick_ms": stats["p99_tick_ms"],
+            "wall_s": stats["wall_s"],
+        },
+    }
+    return rows, metrics
+
+
 def main(smoke: bool = False):
     rows, metrics = run(smoke=smoke)
     for name, us, derived in rows:
@@ -593,6 +729,10 @@ def main(smoke: bool = False):
     for name, us, derived in mesh_rows:
         emit(name, us, derived)
     metrics["mesh"] = mesh_metrics
+    chaos_rows, chaos_metrics = run_chaos(smoke=smoke)
+    for name, us, derived in chaos_rows:
+        emit(name, us, derived)
+    metrics["chaos"] = chaos_metrics
     return metrics
 
 

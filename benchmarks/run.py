@@ -94,13 +94,17 @@ def run_smoke() -> int:
     rows, m_mesh = bench_stream.run_mesh_scaling(smoke=True)
     for name, us, derived in rows:
         emit(name, us, derived)
+    rows, m_chaos = bench_stream.run_chaos(smoke=True)
+    for name, us, derived in rows:
+        emit(name, us, derived)
     info = m_stream.pop("info")
     info["banked_tick"] = m_banked.pop("info")
     info["mesh"] = m_mesh.pop("info")
+    info["chaos"] = m_chaos.pop("info")
     write_bench_json(
         REPO_ROOT / "BENCH_stream.json",
         "stream",
-        gated={**m_stream, **m_banked, **m_mesh},
+        gated={**m_stream, **m_banked, **m_mesh, **m_chaos},
         info=info,
         smoke=True,
     )

@@ -512,6 +512,73 @@ def _run_mesh_cell(
     }
 
 
+def _run_restored_cell(survivors: int, rules: tuple[str, ...]) -> dict:
+    """Audit the plan the ServiceSupervisor compiles AFTER an elastic re-mesh.
+
+    The chaos-recovery path (runtime/resilience.py) re-plans the slot mesh on
+    the surviving devices and recompiles before restoring the snapshot; that
+    RESTORED plan must honor the same HLO contracts as the original. The
+    subprocess pins ``2 * survivors`` virtual devices, builds the original
+    device-control spec at mesh ``2 * survivors``, drops half the devices,
+    re-plans via ``replan_spec``, recompiles, and audits the restored plan —
+    so R5's collective census still runs against a real multi-device mesh
+    (shrinking all the way to 1 device would make it vacuous).
+    """
+    n_devices = 2 * survivors
+    stream_cfg = {**_TINY_STREAM}
+    tiny = {**_TINY, "n_slots": n_devices}  # mesh_slots must divide n_slots
+    snippet = textwrap.dedent(
+        f"""
+        import os
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + " --xla_force_host_platform_device_count={n_devices}"
+        )
+        import json
+        from repro.analysis import audit as audit_mod
+        from repro.api.plan import compile_plan
+        from repro.api.spec import RecoverySpec, TickSpec
+        from repro.core.stream import StreamConfig
+        from repro.runtime import replan_spec
+
+        spec = RecoverySpec(
+            encoder="gru", fused=True, mesh_slots={n_devices},
+            stream=StreamConfig(**{stream_cfg!r}),
+            tick=TickSpec(
+                steps_per_tick={stream_cfg["steps_per_tick"]!r},
+                control="device",
+                queue_capacity=2, snapshot_period=2, warm_capacity=4,
+            ),
+            **{tiny!r},
+        )
+        respec = replan_spec(spec, {survivors})
+        assert respec.mesh_slots == {survivors}, respec.mesh_slots
+        report = audit_mod.audit_plan(compile_plan(respec), rules={rules!r})
+        print("AUDITCELL " + json.dumps(report.to_json()))
+        """
+    )
+    env = dict(os.environ)
+    src_root = os.path.dirname(os.path.dirname(os.path.dirname(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(p for p in (src_root, env.get("PYTHONPATH", "")) if p)
+    proc = subprocess.run(
+        [sys.executable, "-c", snippet],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=560,
+        check=False,
+    )
+    for line in proc.stdout.splitlines():
+        if line.startswith("AUDITCELL "):
+            return json.loads(line.split(" ", 1)[1])
+    return {
+        "verdict": "infra-error",
+        "checked": {},
+        "findings": [],
+        "stderr": proc.stderr[-2000:],
+    }
+
+
 def _parse_rules(arg: str) -> tuple[str, ...]:
     out = tuple(r.strip() for r in arg.split(",") if r.strip())
     unknown = [r for r in out if r not in R.RULES]
@@ -570,6 +637,27 @@ def main(argv=None) -> int:
                 print(f"WARN  {label} {f}")
         print(f"{label}: {report.verdict}")
 
+    def ingest_subprocess_cell(label: str, cell: dict) -> None:
+        nonlocal n_err, n_warn
+        cells.append({"cell": label, **cell})
+        if cell["verdict"] == "infra-error":
+            # a crashed subprocess is an environment problem, not a
+            # contract violation — surface it loudly but do not fail
+            # warn-mode CI
+            n_warn += 1
+            print(f"WARN  {label} mesh cell failed to run:\n{cell.get('stderr', '')}")
+            return
+        for f in cell["findings"]:
+            rule = f["rule"]
+            line = f"[{rule}] {f['program']}: {f['message']}"
+            if rule in args.error_rules:
+                n_err += 1
+                print(f"ERROR {label} {line}")
+            else:
+                n_warn += 1
+                print(f"WARN  {label} {line}")
+        print(f"{label}: {cell['verdict']}")
+
     if args.mesh_devices and "R5" in active:
         mesh_cells = [
             (f"gru:fused=1:mesh={args.mesh_devices}", "composite", "host"),
@@ -584,24 +672,13 @@ def main(argv=None) -> int:
             cell = _run_mesh_cell(
                 args.mesh_devices, active, tick_kernel=tick_kernel, control=control
             )
-            cells.append({"cell": label, **cell})
-            if cell["verdict"] == "infra-error":
-                # a crashed subprocess is an environment problem, not a
-                # contract violation — surface it loudly but do not fail
-                # warn-mode CI
-                n_warn += 1
-                print(f"WARN  {label} mesh cell failed to run:\n{cell.get('stderr', '')}")
-                continue
-            for f in cell["findings"]:
-                rule = f["rule"]
-                line = f"[{rule}] {f['program']}: {f['message']}"
-                if rule in args.error_rules:
-                    n_err += 1
-                    print(f"ERROR {label} {line}")
-                else:
-                    n_warn += 1
-                    print(f"WARN  {label} {line}")
-            print(f"{label}: {cell['verdict']}")
+            ingest_subprocess_cell(label, cell)
+        # restored-plan cell: the plan the supervisor recompiles after an
+        # elastic re-mesh (mesh 2N -> N via replan_spec) must pass the same
+        # contracts as a first-compile plan — recovery may not relax R1
+        # donation, R3 zero host transfers, or the R5 collective census
+        label = f"gru:control=device:restored:mesh={2 * args.mesh_devices}->{args.mesh_devices}"
+        ingest_subprocess_cell(label, _run_restored_cell(args.mesh_devices, active))
 
     if args.json:
         with open(args.json, "w") as fh:

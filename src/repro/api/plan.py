@@ -83,6 +83,13 @@ class Lowering:
     tick_queue_capacity: int | None = None
     tick_snapshot_period: int | None = None
     warm_capacity: int | None = None
+    # stream mode: service resilience (runtime/resilience.py) — snapshot
+    # cadence/destination for the SlotState+ControlState checkpointer (0/None
+    # = checkpointing off) and the bounded host overflow queue that backs the
+    # typed submit() backpressure signal
+    checkpoint_period: int | None = None
+    checkpoint_dir: str | None = None
+    overflow_capacity: int | None = None
 
 
 class RecoveryPlan:
@@ -180,7 +187,7 @@ class RecoveryPlan:
                 pump=self.programs["pump"],
                 drain=self.programs["drain"],
             )
-        return RecoveryService(
+        service = RecoveryService(
             self.cfg,
             self.scfg,
             self.spec.n_slots,
@@ -190,7 +197,20 @@ class RecoveryPlan:
             tick_program=self.programs["tick"],
             control=control,
             warm_capacity=self.lowering.warm_capacity or 32,
+            overflow_capacity=self.lowering.overflow_capacity
+            if self.lowering.overflow_capacity is not None
+            else 16,
         )
+        if self.lowering.checkpoint_period and self.lowering.checkpoint_dir:
+            # lazy import: resilience pulls checkpoint/elastic; plan.py stays
+            # importable without them on the critical path
+            from repro.runtime.resilience import ServiceCheckpointer
+
+            service.checkpointer = ServiceCheckpointer(
+                self.lowering.checkpoint_dir,
+                period=self.lowering.checkpoint_period,
+            )
+        return service
 
     # -- readout: the spec's serving precision --------------------------------
     def readout(
@@ -404,6 +424,9 @@ def compile_plan(spec: RecoverySpec, audit: str = "off") -> RecoveryPlan:
             tick_queue_capacity=tspec.queue_capacity if tspec.control == "device" else None,
             tick_snapshot_period=tspec.snapshot_period if tspec.control == "device" else None,
             warm_capacity=tspec.warm_capacity,
+            checkpoint_period=tspec.checkpoint_period,
+            checkpoint_dir=tspec.checkpoint_dir,
+            overflow_capacity=tspec.overflow_capacity,
         )
         quant_tick = lowering.quant_serving and scfg.steps_per_tick == 0
         if tick_kernel == "banked":

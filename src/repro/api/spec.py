@@ -74,6 +74,18 @@ class TickSpec:
     queue_capacity: int = 8  # pending admissions per shard (device plane)
     snapshot_period: int = 1  # ticks between host status/event drains
     warm_capacity: int = 32  # warm-start cache entries (per shard on device)
+    # -- resilience (runtime/resilience.py) ----------------------------------
+    # checkpoint_period > 0 turns on periodic async service snapshots
+    # (SlotState + ControlState + warm LRU) every N ticks into
+    # checkpoint_dir; 0 disables checkpointing (the default — snapshot
+    # staging reads back state, so it is strictly opt-in and never taxes the
+    # zero-readback steady state on non-snapshot ticks).
+    checkpoint_period: int = 0
+    checkpoint_dir: str | None = None
+    # bounded host-side overflow queue for device-plane admissions when the
+    # per-shard rings are full; submit() returns OVERFLOW (and later drains)
+    # up to this many queued streams, REJECTED beyond.
+    overflow_capacity: int = 16
 
     def __post_init__(self):
         if self.tick_kernel not in TICK_KERNELS:
@@ -90,6 +102,12 @@ class TickSpec:
             raise ValueError(f"snapshot_period must be >= 1, got {self.snapshot_period}")
         if self.warm_capacity < 1:
             raise ValueError(f"warm_capacity must be >= 1, got {self.warm_capacity}")
+        if self.checkpoint_period < 0:
+            raise ValueError(f"checkpoint_period must be >= 0, got {self.checkpoint_period}")
+        if self.checkpoint_period > 0 and not self.checkpoint_dir:
+            raise ValueError("checkpoint_period > 0 requires checkpoint_dir")
+        if self.overflow_capacity < 0:
+            raise ValueError(f"overflow_capacity must be >= 0, got {self.overflow_capacity}")
 
 
 @dataclasses.dataclass(frozen=True)

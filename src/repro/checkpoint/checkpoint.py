@@ -180,13 +180,31 @@ def restore_checkpoint(
     like,
     shardings=None,
     verify: bool = True,
+    expect_axes: tuple[str, ...] | None = None,
 ):
     """Restore into the structure of ``like`` (pytree of arrays or
     ShapeDtypeStructs), placing each leaf with ``shardings`` (same-structure
-    pytree of NamedSharding) — this is where cross-mesh resharding happens."""
+    pytree of NamedSharding) — this is where cross-mesh resharding happens.
+
+    ``expect_axes`` names the mesh axes the restoring plan shards over; when
+    both it and the manifest's recorded axes are present and disagree, the
+    restore fails up front with a clear error instead of a shape mismatch
+    deep inside ``device_put``. ``None`` on either side (unsharded save or
+    caller that doesn't care) is compatible with anything.
+    """
     root = pathlib.Path(root)
     d = root / f"step_{step:08d}"
     manifest = json.loads((d / "manifest.json").read_text())
+
+    saved_axes = (manifest.get("mesh") or {}).get("axes")
+    if expect_axes is not None and saved_axes is not None:
+        if tuple(saved_axes) != tuple(expect_axes):
+            raise ValueError(
+                f"checkpoint {d} was written on mesh axes {tuple(saved_axes)} "
+                f"but the restoring plan shards over {tuple(expect_axes)}; "
+                "snapshots only reshard within the same logical axes "
+                "(size may change, names may not)"
+            )
 
     flat_like = _flatten(like)
     flat_sh = dict(_flatten(shardings)) if shardings is not None else {}
@@ -233,9 +251,11 @@ class CheckpointManager:
     def latest(self) -> int | None:
         return latest_step(self.root)
 
-    def restore_latest(self, like, shardings=None):
+    def restore_latest(self, like, shardings=None, expect_axes=None):
         step = self.latest()
         if step is None:
             return None, None
-        state, manifest = restore_checkpoint(self.root, step, like, shardings)
+        state, manifest = restore_checkpoint(
+            self.root, step, like, shardings, expect_axes=expect_axes
+        )
         return state, manifest

@@ -7,11 +7,16 @@ shard (a full reshard on a mesh). This module moves the whole control plane
 into the compiled program, so a steady-state service tick is ONE donated,
 collective-free program with ZERO host readbacks:
 
-- **per-shard admission queues** — a fixed-capacity ring of pending stream
-  histories + cold-start params held in the :class:`ControlState` pytree
-  (leading axis = shard, sharded over the same ``("slots",)`` mesh axis as
-  SlotState). ``enqueue`` appends one arrival with ``dynamic_update_slice``;
-  the slot axis is never resharded.
+- **per-shard admission queues** — a fixed-capacity compact queue of pending
+  stream histories + cold-start params held in the :class:`ControlState`
+  pytree (leading axis = shard, sharded over the same ``("slots",)`` mesh
+  axis as SlotState). ``enqueue`` appends one arrival with
+  ``dynamic_update_slice``; the slot axis is never resharded. Each entry
+  carries a PRIORITY TIER: admission pops highest tier first (stable FIFO
+  within a tier), and an arrival still waiting after every idle slot fills
+  may preempt a cold (``steps < min_steps``) strictly-lower-tier slot — the
+  victim re-enqueues at the tail with its live buffers and params, so
+  pressure reorders work but never drops a stream.
 - **on-device eviction** — ``tick_device`` runs the (composite or banked)
   tick body, derives the eviction mask from the post-tick
   ``[delta, loss, steps, active]`` scalars inside the program, and appends
@@ -69,6 +74,11 @@ from repro.parallel import named_sharding
 from repro.parallel.rules import constraint
 
 
+#: exclusive upper bound on admission priorities (int32 sort keys compose
+#: priority with queue position / slot index, so the tier space is bounded)
+PRIORITY_LIMIT = 1 << 16
+
+
 class ControlState(NamedTuple):
     """On-device control plane for all shards (every leaf leads with M).
 
@@ -76,19 +86,26 @@ class ControlState(NamedTuple):
     capacity (slots_per_shard * (snapshot_period + 1): at most one eviction
     per slot per tick, drained every snapshot_period ticks, so the log can
     never overflow between drains).
+
+    The queue is COMPACT, not a ring: pending entries always occupy indices
+    ``[0, q_len)`` (enqueue appends at ``q_len``, the control step re-packs
+    survivors to the front after popping). A head cursor can't express
+    priority-ordered pops — the popped set is an arbitrary subset of the
+    pending window — so compaction replaces it.
     """
 
     q_ids: jnp.ndarray  # [M, Q] int32 pending stream ids (-1 = empty)
     q_buf_y: jnp.ndarray  # [M, Q, L, n] pending admission histories
     q_buf_u: jnp.ndarray  # [M, Q, L, m]
     q_params: Any  # MRParams, leaves [M, Q, ...] (cold-start fallback)
-    q_head: jnp.ndarray  # [M] int32 ring head
+    q_prio: jnp.ndarray  # [M, Q] int32 admission priority tier (0 = default)
     q_len: jnp.ndarray  # [M] int32 pending count
     w_ids: jnp.ndarray  # [M, W] int32 warm-cache keys (-1 = empty)
     w_params: Any  # MRParams, leaves [M, W, ...] evicted params
     w_pos: jnp.ndarray  # [M] int32 warm-ring cursor
     ev_log: jnp.ndarray  # [M, E, R] f32 eviction events (id < 0 = empty)
     ev_len: jnp.ndarray  # [M] int32 events since the last drain
+    s_prio: jnp.ndarray  # [M, P] int32 priority of the stream in each slot
 
 
 def event_record_width(cfg: MRConfig) -> int:
@@ -129,13 +146,14 @@ def init_control(
         q_buf_y=jnp.zeros((M, Q, L, n), jnp.float32),
         q_buf_u=jnp.zeros((M, Q, L, m), jnp.float32),
         q_params=zeros_like_tree((M, Q)),
-        q_head=jnp.zeros((M,), jnp.int32),
+        q_prio=jnp.zeros((M, Q), jnp.int32),
         q_len=jnp.zeros((M,), jnp.int32),
         w_ids=jnp.full((M, W), -1, jnp.int32),
         w_params=zeros_like_tree((M, W)),
         w_pos=jnp.zeros((M,), jnp.int32),
         ev_log=jnp.full((M, E, event_record_width(cfg)), -1.0, jnp.float32),
         ev_len=jnp.zeros((M,), jnp.int32),
+        s_prio=jnp.zeros((M, n_slots // shards), jnp.int32),
     )
 
 
@@ -173,15 +191,17 @@ def enqueue(
     buf_y: jnp.ndarray,  # [L, n] admission history
     buf_u: jnp.ndarray,  # [L, m]
     params: Any,  # single cold-start MRParams tree
+    priority: jnp.ndarray,  # scalar int32 tier (higher pops first)
 ) -> ControlState:
-    """Append one arrival to ``shard``'s admission ring (donated update).
+    """Append one arrival to ``shard``'s compact admission queue (donated).
 
     This is the ONLY host->device write of the device control plane; it
-    touches one ring row via ``dynamic_update_slice`` and never re-shards
-    the slot axis. The host guards ring capacity (``RecoveryService.submit``
-    tracks per-shard in-flight depth), so overflow cannot occur here.
+    touches one queue row via ``dynamic_update_slice`` and never re-shards
+    the slot axis. The host guards queue capacity (``RecoveryService.submit``
+    tracks per-shard in-flight depth and spills to its bounded overflow
+    queue), so overflow cannot occur here.
     """
-    tail = (control.q_head[shard] + control.q_len[shard]) % control.q_ids.shape[1]
+    tail = control.q_len[shard]
 
     def write(full, new):
         new = jnp.asarray(new, full.dtype)
@@ -194,6 +214,7 @@ def enqueue(
             q_buf_y=write(control.q_buf_y, buf_y),
             q_buf_u=write(control.q_buf_u, buf_u),
             q_params=jax.tree.map(write, control.q_params, params),
+            q_prio=control.q_prio.at[shard, tail].set(priority),
             q_len=control.q_len.at[shard].add(1),
         )
     )
@@ -208,6 +229,8 @@ def _shard_control_step(
     ctl: ControlState,  # one shard's control slice (no leading M)
     evict: jnp.ndarray,  # [P] bool eviction mask (from the post-tick status)
     reason: jnp.ndarray,  # [P] f32 (1 = converged, 2 = budget)
+    *,
+    min_steps: int,  # preemption cold threshold (0 disables preemption)
 ) -> tuple[SlotState, ControlState]:
     """One shard's eviction + refill + warm lookup (vmapped over shards).
 
@@ -216,16 +239,26 @@ def _shard_control_step(
     ``mode="drop"`` with an out-of-bounds index for masked-out slots, and
     gathers blend per-leaf with ``jnp.where`` — no per-slot control flow, no
     cross-shard communication.
+
+    Admission pops the compact queue in PRIORITY order (stable: FIFO within
+    a tier, so an all-default-priority service reduces bitwise to the old
+    FIFO plane). Arrivals still waiting after every idle slot is filled may
+    PREEMPT: the highest-priority remaining arrival displaces the
+    lowest-priority COLD slot (``steps < min_steps``) whose tier is strictly
+    lower — the victim's current params go to the warm ring and the victim
+    is re-enqueued at the queue tail with its live buffers, so no stream is
+    lost and net queue occupancy is unchanged (one pop per re-enqueue).
     """
     P = evict.shape[0]
     Q = ctl.q_ids.shape[0]
     W = ctl.w_ids.shape[0]
     E = ctl.ev_log.shape[0]
     f32 = jnp.float32
+    i32 = jnp.int32
 
     # -- eviction: append event records, push params into the warm ring -----
-    erank = jnp.cumsum(evict.astype(jnp.int32)) - 1
-    n_evict = jnp.sum(evict.astype(jnp.int32))
+    erank = jnp.cumsum(evict.astype(i32)) - 1
+    n_evict = jnp.sum(evict.astype(i32))
     record = jnp.concatenate(
         [
             st.stream_id.astype(f32)[:, None],
@@ -250,16 +283,68 @@ def _shard_control_step(
     active = st.active & ~evict
     stream_id = jnp.where(evict, -1, st.stream_id)
 
-    # -- admission: pop queued arrivals into idle slots, in slot order ------
+    # -- pop order: priority-descending, FIFO within a tier -----------------
+    # compact queue: entries live at [0, q_len). The int32 sort key composes
+    # (PRIORITY_LIMIT - prio) with the queue index, so argsort yields higher
+    # tiers first and exact insertion order inside a tier; empty entries key
+    # strictly above every filled one.
+    qidx = jnp.arange(Q, dtype=i32)
+    filled = qidx < ctl.q_len
+    key_q = jnp.where(
+        filled,
+        (PRIORITY_LIMIT - 1 - ctl.q_prio) * Q + qidx,
+        PRIORITY_LIMIT * Q + qidx,
+    )
+    order = jnp.argsort(key_q)  # [Q] queue positions in pop order
+    qinv = jnp.argsort(order)  # pop rank of each queue position
+
+    # -- phase 1: pop arrivals into idle slots, in slot order ---------------
     idle = ~active
-    arank = jnp.cumsum(idle.astype(jnp.int32)) - 1
+    arank = jnp.cumsum(idle.astype(i32)) - 1
     take = idle & (arank < ctl.q_len)
-    n_take = jnp.sum(take.astype(jnp.int32))
-    q_pos = jnp.where(take, (ctl.q_head + arank) % Q, 0)
-    pop_id = jnp.where(take, ctl.q_ids[q_pos], -1)
+    n_take = jnp.sum(take.astype(i32))
+
+    # -- phase 2: preemption of cold lower-tier slots by waiting arrivals ---
+    # rank-r remaining arrival (pop rank n_take + r) pairs with the rank-r
+    # eligible victim (lowest tier first, slot order within a tier); the pair
+    # preempts iff the arrival's tier is strictly higher. Both sequences are
+    # sorted toward each other, so pair validity is prefix-monotone and the
+    # preempted set is exactly the first n_pre pairs.
+    vict_elig = active & (st.steps < min_steps)
+    n_elig = jnp.sum(vict_elig.astype(i32))
+    sidx = jnp.arange(P, dtype=i32)
+    vkey = jnp.where(vict_elig, ctl.s_prio * P + sidx, PRIORITY_LIMIT * P + sidx)
+    vorder = jnp.argsort(vkey)  # slot indices, lowest-tier victims first
+    vinv = jnp.argsort(vorder)  # victim rank of each slot
+    pair_rank = n_take + sidx  # pop rank of the r-th pairing's arrival
+    a_pos = order[jnp.clip(pair_rank, 0, Q - 1)]
+    pair_ok = (
+        (pair_rank < ctl.q_len)
+        & (sidx < n_elig)
+        & (ctl.q_prio[a_pos] > ctl.s_prio[vorder])
+    )
+    n_pre = jnp.sum(pair_ok.astype(i32))
+    pre = vict_elig & (vinv < n_pre)  # [P] preempted-slot mask
+
+    # -- combined admission gather ------------------------------------------
+    adm = take | pre
+    pop_rank = jnp.where(take, arank, n_take + vinv)
+    q_pos = order[jnp.clip(pop_rank, 0, Q - 1)]
+    pop_id = jnp.where(adm, ctl.q_ids[q_pos], -1)
+    pop_prio = jnp.where(adm, ctl.q_prio[q_pos], 0)
     pop_by = ctl.q_buf_y[q_pos]  # [P, L, n]
     pop_bu = ctl.q_buf_u[q_pos]
     cold = jax.tree.map(lambda leaf: leaf[q_pos], ctl.q_params)
+
+    # preempted victims: current params into the warm ring (after the
+    # eviction pushes), so a later return warm-starts from where it stopped
+    prank = jnp.cumsum(pre.astype(i32)) - 1
+    w_write2 = jnp.where(pre, (w_pos + prank) % W, W)
+    w_ids = w_ids.at[w_write2].set(stream_id, mode="drop")
+    w_params = jax.tree.map(
+        lambda full, lv: full.at[w_write2].set(lv, mode="drop"), w_params, st.params
+    )
+    w_pos = (w_pos + n_pre) % W
 
     # warm-start lookup: gather over the (post-push) bounded warm ring; a
     # miss falls back to the cold tree that rode in on the queue
@@ -279,7 +364,7 @@ def _shard_control_step(
     n_terms, n = st.theta.shape[1:]
 
     def blend(new, old):
-        return jnp.where(_broadcast(take, old), new.astype(old.dtype), old)
+        return jnp.where(_broadcast(adm, old), new.astype(old.dtype), old)
 
     st_new = SlotState(
         params=jax.tree.map(blend, params_new, st.params),
@@ -287,24 +372,54 @@ def _shard_control_step(
         buf_y=blend(pop_by, st.buf_y),
         buf_u=blend(pop_bu, st.buf_u),
         theta=blend(jnp.zeros((P, n_terms, n), f32), st.theta),
-        delta=jnp.where(take, jnp.inf, st.delta),
-        loss=jnp.where(take, jnp.inf, st.loss),
+        delta=jnp.where(adm, jnp.inf, st.delta),
+        loss=jnp.where(adm, jnp.inf, st.loss),
         mean=blend(mean_new, st.mean),
         scale=blend(scale_new, st.scale),
-        steps=jnp.where(take, 0, st.steps).astype(jnp.int32),
-        active=active | take,
-        stream_id=jnp.where(take, pop_id, stream_id).astype(jnp.int32),
+        steps=jnp.where(adm, 0, st.steps).astype(i32),
+        active=active | adm,
+        stream_id=jnp.where(adm, pop_id, stream_id).astype(i32),
     )
-    clear_pos = jnp.where(take, q_pos, Q)
+
+    # -- queue compaction + victim re-enqueue -------------------------------
+    # survivors (pop rank >= n_take + n_pre) pack to the front in pop-rank
+    # order; preempted victims append behind them with their live buffers,
+    # current params and original tier. One pop per re-enqueue, so q_len
+    # never grows past its pre-step value.
+    n_pop = n_take + n_pre
+    keep = filled & (qinv >= n_pop)
+    dest = jnp.where(keep, qinv - n_pop, Q)  # survivor's compacted position
+    q_ids_c = jnp.full_like(ctl.q_ids, -1).at[dest].set(ctl.q_ids, mode="drop")
+    q_prio_c = jnp.zeros_like(ctl.q_prio).at[dest].set(ctl.q_prio, mode="drop")
+    q_by_c = jnp.zeros_like(ctl.q_buf_y).at[dest].set(ctl.q_buf_y, mode="drop")
+    q_bu_c = jnp.zeros_like(ctl.q_buf_u).at[dest].set(ctl.q_buf_u, mode="drop")
+    q_params_c = jax.tree.map(
+        lambda full: jnp.zeros_like(full).at[dest].set(full, mode="drop"), ctl.q_params
+    )
+    rem = ctl.q_len - n_pop
+    vdest = jnp.where(pre, rem + prank, Q)
+    q_ids_c = q_ids_c.at[vdest].set(stream_id, mode="drop")
+    q_prio_c = q_prio_c.at[vdest].set(ctl.s_prio, mode="drop")
+    q_by_c = q_by_c.at[vdest].set(st.buf_y, mode="drop")
+    q_bu_c = q_bu_c.at[vdest].set(st.buf_u, mode="drop")
+    q_params_c = jax.tree.map(
+        lambda full, lv: full.at[vdest].set(lv, mode="drop"), q_params_c, st.params
+    )
+
+    s_prio = jnp.where(evict, 0, ctl.s_prio)
     ctl_new = ctl._replace(
-        q_ids=ctl.q_ids.at[clear_pos].set(-1, mode="drop"),
-        q_head=(ctl.q_head + n_take) % Q,
-        q_len=ctl.q_len - n_take,
+        q_ids=q_ids_c,
+        q_buf_y=q_by_c,
+        q_buf_u=q_bu_c,
+        q_params=q_params_c,
+        q_prio=q_prio_c,
+        q_len=rem + n_pre,
         w_ids=w_ids,
         w_params=w_params,
         w_pos=w_pos,
         ev_log=ev_log,
         ev_len=ev_len,
+        s_prio=jnp.where(adm, pop_prio, s_prio).astype(i32),
     )
     return st_new, ctl_new
 
@@ -316,6 +431,7 @@ def _control_apply(
     reason: jnp.ndarray,
     *,
     shards: int,
+    min_steps: int = 0,
 ) -> tuple[SlotState, ControlState]:
     """Reshape [S] -> [shards, P], vmap the shard-local control step, fold
     back. The reshape splits the already-sharded leading axis on shard
@@ -326,7 +442,8 @@ def _control_apply(
     def split(leaf):
         return leaf.reshape((shards, P) + leaf.shape[1:])
 
-    st_sh, ctl_sh = jax.vmap(_shard_control_step)(
+    step = functools.partial(_shard_control_step, min_steps=min_steps)
+    st_sh, ctl_sh = jax.vmap(step)(
         jax.tree.map(split, state), control, split(evict), split(reason)
     )
     return jax.tree.map(lambda leaf: leaf.reshape((S,) + leaf.shape[2:]), st_sh), ctl_sh
@@ -378,7 +495,9 @@ def tick_device(
     budget = state.steps >= scfg.max_steps
     evict = state.active & (converged | budget)
     reason = jnp.where(converged, 1.0, jnp.where(budget, 2.0, 0.0)).astype(jnp.float32)
-    state, control = _control_apply(state, control, evict, reason, shards=shards)
+    state, control = _control_apply(
+        state, control, evict, reason, shards=shards, min_steps=scfg.min_steps
+    )
     state, control = _pin(state), _pin(control)
     return state, control, _status5(state)
 
@@ -390,7 +509,8 @@ def pump(
     """Admission-only control step (bootstrap / between-tick refill): pop the
     shard queues into every idle slot without running a tick. A fresh slot
     can never satisfy the eviction predicate (delta = inf, steps = 0), so the
-    all-False eviction mask is exact."""
+    all-False eviction mask is exact. No preemption here (min_steps=0 marks
+    no slot cold): a bootstrap pump only fills idle capacity."""
     S = state.active.shape[0]
     evict = jnp.zeros((S,), bool)
     reason = jnp.zeros((S,), jnp.float32)

@@ -45,7 +45,9 @@ from __future__ import annotations
 import collections
 import contextlib
 import dataclasses
+import enum
 import functools
+import time
 from typing import Any, NamedTuple
 
 import jax
@@ -487,6 +489,34 @@ class StreamResult(NamedTuple):
     reason: str  # "converged" | "budget"
 
 
+class SubmitStatus(enum.Enum):
+    """Typed admission backpressure signal returned by ``submit``.
+
+    ENQUEUED — the stream is queued (host deque or a device shard ring) and
+    will be admitted as capacity frees. OVERFLOW — every device ring was
+    full; the stream sits in the bounded host-side overflow queue and drains
+    into a ring at the next snapshot/fill with free capacity. REJECTED — the
+    overflow queue is also full; the caller must retry later (nothing was
+    retained). ``submit`` never raises on pressure.
+    """
+
+    ENQUEUED = "enqueued"
+    OVERFLOW = "overflow"
+    REJECTED = "rejected"
+
+
+class SubmitResult(NamedTuple):
+    """What ``submit`` did with one stream (see :class:`SubmitStatus`)."""
+
+    status: SubmitStatus
+    stream_id: int
+    shard: int | None = None  # device ring the stream landed in (ENQUEUED)
+
+    @property
+    def accepted(self) -> bool:
+        return self.status is not SubmitStatus.REJECTED
+
+
 class RecoveryService:
     """Host orchestrator: admission queue, eviction policy, warm-start registry.
 
@@ -519,6 +549,7 @@ class RecoveryService:
         tick_program=None,
         control=None,
         warm_capacity: int = 32,
+        overflow_capacity: int = 16,
     ):
         encoders.validate_config(cfg)  # fused x fusable fails HERE, not mid-trace
         self.cfg, self.scfg, self.n_slots = cfg, scfg, n_slots
@@ -554,7 +585,14 @@ class RecoveryService:
         self.state = init_slots(self.key, cfg, scfg, n_slots)
         if mesh is not None:
             self.state = shard_slots(self.state, mesh)
+        # host admission queue: (stream_id, buf_y, buf_u, priority) entries;
+        # pops take the highest tier first, FIFO within a tier (_queue_pop)
         self.queue: collections.deque = collections.deque()
+        # bounded host-side spill for device-plane admissions when every
+        # shard ring is full; drains back into the rings as capacity frees
+        # (fill_slots / snapshot ticks). Beyond this, submit() REJECTs.
+        self.overflow: collections.deque = collections.deque()
+        self.overflow_capacity = int(overflow_capacity)
         # bounded LRU warm-start registry (stream_id -> evicted params): a
         # long-running service would otherwise accumulate one params tree per
         # stream it has EVER served; beyond capacity the least-recently-used
@@ -572,7 +610,21 @@ class RecoveryService:
         self._delta_view = np.full((n_slots,), np.inf, np.float32)
         self._loss_view = np.full((n_slots,), np.inf, np.float32)
         self._steps_view = np.zeros((n_slots,), np.int64)
+        self._prio_view = np.zeros((n_slots,), np.int64)  # tier per slot
+        self._prio_of: dict[int, int] = {}  # stream_id -> submitted tier
         self._undrained: list[StreamResult] = []
+        # -- resilience / latency accounting (runtime/resilience.py) ---------
+        # per-tick wall latency (ms) + per-shard heartbeats feeding the
+        # straggler detector; serve_mr surfaces p50/p99 and the flags.
+        # checkpointer is attached by RecoveryPlan.make_service when the
+        # TickSpec requests periodic service snapshots.
+        from repro.runtime.heartbeat import HeartbeatRegistry, StragglerDetector
+
+        self.tick_ms: list[float] = []
+        self.registry = HeartbeatRegistry()
+        self.stragglers = StragglerDetector(self.registry)
+        self.straggler_flags: list[str] = []
+        self.checkpointer = None
         # -- device-resident control plane (control.py) ----------------------
         self.control_plane = control
         self.control = None
@@ -629,30 +681,66 @@ class RecoveryService:
         return params
 
     # -- admission ----------------------------------------------------------
-    def submit(self, stream_id: int, history_y: np.ndarray, history_u: np.ndarray | None = None):
+    def submit(
+        self,
+        stream_id: int,
+        history_y: np.ndarray,
+        history_u: np.ndarray | None = None,
+        priority: int = 0,
+    ) -> SubmitResult:
         """Enqueue a stream with its initial buf_len-observation history.
 
         On the device control plane the history (and a cold params tree — the
         on-device warm cache overrides it on a hit) is appended straight into
-        the least-loaded shard's on-device admission ring; the slot axis is
-        never resharded.
+        the least-loaded shard's on-device admission queue; the slot axis is
+        never resharded. Returns a typed :class:`SubmitResult` instead of
+        raising on pressure: a full shard ring spills into the bounded host
+        overflow queue (OVERFLOW), and a full overflow queue REJECTs.
+
+        ``priority`` is the admission tier (0 = default; higher pops first
+        and may preempt a cold lower-tier slot under pressure).
         """
+        from repro.core.control import PRIORITY_LIMIT
+
         L, m = self.scfg.buf_len, self.cfg.input_dim
         if history_y.shape != (L, self.cfg.state_dim):
             raise ValueError(f"history must be [{L}, {self.cfg.state_dim}], got {history_y.shape}")
+        if not 0 <= priority < PRIORITY_LIMIT:
+            raise ValueError(f"priority must be in [0, {PRIORITY_LIMIT}), got {priority}")
         if history_u is None:
             history_u = np.zeros((L, m), np.float32)
-        if self.control_plane is None:
-            self.queue.append((int(stream_id), np.asarray(history_y), np.asarray(history_u)))
-            return
-        cp = self.control_plane
         sid = int(stream_id)
+        self._prio_of[sid] = int(priority)
+        if self.control_plane is None:
+            self.queue.append(
+                (sid, np.asarray(history_y), np.asarray(history_u), int(priority))
+            )
+            return SubmitResult(SubmitStatus.ENQUEUED, sid)
+        shard = self._enqueue_device(sid, history_y, history_u, int(priority))
+        if shard is not None:
+            return SubmitResult(SubmitStatus.ENQUEUED, sid, shard)
+        if len(self.overflow) >= self.overflow_capacity:
+            self._prio_of.pop(sid, None)
+            return SubmitResult(SubmitStatus.REJECTED, sid)
+        self.overflow.append(
+            (sid, np.asarray(history_y), np.asarray(history_u), int(priority))
+        )
+        self._pending.add(sid)
+        self._seen_done.discard(sid)
+        return SubmitResult(SubmitStatus.OVERFLOW, sid)
+
+    def _enqueue_device(self, sid, history_y, history_u, priority) -> int | None:
+        """Append one arrival into the least-loaded shard ring; None = all full.
+
+        Host-side occupancy accounting is conservative: ``_inflight`` counts
+        ids enqueued-but-not-admitted AND preempted-back-to-queue (snapshot
+        reconciliation re-adds victims), so the compiled ``enqueue`` can
+        never overflow a device queue.
+        """
+        cp = self.control_plane
         shard = min(range(cp.shards), key=lambda i: (len(self._inflight[i]), i))
         if len(self._inflight[shard]) >= cp.queue_capacity:
-            raise RuntimeError(
-                f"device admission queue full (capacity {cp.queue_capacity} per "
-                f"shard x {cp.shards} shard(s)); tick the service before submitting more"
-            )
+            return None
         params, _ = cold_start(jax.random.fold_in(self.key, 1000 + sid), self.cfg)
         with self._mesh_ctx():
             self.control = cp.enqueue(
@@ -662,10 +750,33 @@ class RecoveryService:
                 jnp.asarray(history_y, jnp.float32),
                 jnp.asarray(history_u, jnp.float32),
                 params,
+                jnp.int32(priority),
             )
         self._inflight[shard].add(sid)
         self._pending.add(sid)
         self._seen_done.discard(sid)
+        return shard
+
+    def _drain_overflow(self) -> int:
+        """Move overflowed arrivals into shard rings while capacity lasts."""
+        moved = 0
+        while self.overflow:
+            sid, by, bu, prio = self.overflow[0]
+            if self._enqueue_device(sid, by, bu, prio) is None:
+                break
+            self.overflow.popleft()
+            moved += 1
+        return moved
+
+    def _queue_pop(self) -> tuple[int, np.ndarray, np.ndarray, int]:
+        """Pop the host queue entry with the highest tier (FIFO within a
+        tier): the host-plane mirror of the device queue's priority-composed
+        sort key. ``max`` keeps the first index on ties, which IS the FIFO
+        order — all-default-tier traffic reduces to ``popleft``."""
+        best = max(range(len(self.queue)), key=lambda i: self.queue[i][3])
+        entry = self.queue[best]
+        del self.queue[best]
+        return entry
 
     def _admit_into(self, slot: int):
         if not self.queue:
@@ -677,8 +788,9 @@ class RecoveryService:
                 self._reshard()
             self._active_view[slot] = False
             self._slot_view[slot] = -1
+            self._prio_view[slot] = 0
             return None
-        stream_id, buf_y, buf_u = self.queue.popleft()
+        stream_id, buf_y, buf_u, prio = self._queue_pop()
         warm_params = self._warm_get(stream_id)
         if warm_params is not None:
             params = warm_params
@@ -704,7 +816,44 @@ class RecoveryService:
         self._delta_view[slot] = np.inf
         self._loss_view[slot] = np.inf
         self._steps_view[slot] = 0
+        self._prio_view[slot] = int(prio)
         return stream_id
+
+    def _preempt_host(self):
+        """Host-plane mirror of the device preemption pass: while a waiting
+        arrival's tier strictly exceeds the lowest-tier COLD active slot
+        (``steps < min_steps``), the victim's params go to the warm registry
+        and the victim re-enters the queue with its LIVE buffers at its
+        original tier, then the arrival is admitted into the freed slot.
+        Warm slots (past min_steps) are never preempted — they are about to
+        converge and evict on their own. Terminates: each displacement
+        strictly raises the resident tier multiset."""
+        while self.queue:
+            prio = max(e[3] for e in self.queue)
+            cold = [
+                s
+                for s in range(self.n_slots)
+                if self._active_view[s] and self._steps_view[s] < self.scfg.min_steps
+            ]
+            if not cold:
+                return
+            victim = min(cold, key=lambda s: (self._prio_view[s], s))
+            if prio <= self._prio_view[victim]:
+                return
+            vid = int(self._slot_view[victim])
+            st = self.state
+            self._warm_put(vid, jax.tree.map(lambda a: a[victim], st.params))
+            self.queue.append(
+                (
+                    vid,
+                    self._host_read(st.buf_y[victim]),
+                    self._host_read(st.buf_u[victim]),
+                    int(self._prio_view[victim]),
+                )
+            )
+            # _admit_into pops by tier, so it picks the arrival we just
+            # compared (the re-queued victim sits strictly below it)
+            self._admit_into(victim)
 
     def fill_slots(self) -> list[int]:
         """Bootstrap: admit queued streams into every empty slot.
@@ -713,6 +862,7 @@ class RecoveryService:
         into every idle slot, then a snapshot refreshes the host views.
         """
         if self.control_plane is not None:
+            self._drain_overflow()
             before = {int(i) for i in self._slot_view if i >= 0}
             with self._mesh_ctx():
                 self.state, self.control, status = self.control_plane.pump(
@@ -775,12 +925,16 @@ class RecoveryService:
         from repro.core import control as control_mod
 
         cp = self.control_plane
+        prev_slots = self._slot_view.copy()
         snap = self._host_read(status)
         self._delta_view = snap[:, 0].copy()
         self._loss_view = snap[:, 1].copy()
         self._steps_view = snap[:, 2].astype(np.int64)
         self._active_view = snap[:, 3] > 0
         self._slot_view = snap[:, 4].astype(np.int64)
+        for s in range(self.n_slots):
+            sid = int(self._slot_view[s])
+            self._prio_view[s] = self._prio_of.get(sid, 0) if sid >= 0 else 0
         with self._mesh_ctx():
             self.control, events = cp.drain(self.control)
         new_results = []
@@ -801,11 +955,21 @@ class RecoveryService:
             self._seen_done.add(sid)
             new_results.append(res)
         # an enqueued id leaves its shard's in-flight set once the snapshot
-        # shows it admitted (slot view) or already completed (event log)
-        settled = {int(i) for i in self._slot_view if i >= 0} | self._seen_done
+        # shows it admitted (slot view) or already completed (event log); an
+        # id that WAS resident and is now neither resident nor completed was
+        # preempted back into its shard's queue — re-count it in-flight so
+        # the host-side occupancy bound stays conservative
+        resident = {int(i) for i in self._slot_view if i >= 0}
+        slots_per_shard = self.n_slots // cp.shards
+        for s in range(self.n_slots):
+            sid = int(prev_slots[s])
+            if sid >= 0 and sid not in resident and sid not in self._seen_done:
+                self._inflight[s // slots_per_shard].add(sid)
+        settled = resident | self._seen_done
         for shard_ids in self._inflight:
             shard_ids.difference_update(settled)
         self._ticks_since_snapshot = 0
+        self._drain_overflow()
         return new_results
 
     def tick_once(self, chunks_y: np.ndarray, chunks_u: np.ndarray | None = None) -> dict:
@@ -817,6 +981,7 @@ class RecoveryService:
         0 for steady-state ticks. Between snapshots the info dict serves the
         cached (snapshot-stale) views.
         """
+        t0 = time.perf_counter()
         syncs0 = self.counters["host_syncs"]
         S, C, m = self.n_slots, self.scfg.chunk, self.cfg.input_dim
         if chunks_u is None:
@@ -844,6 +1009,12 @@ class RecoveryService:
                 "loss": self._loss_view,
                 "steps": self._steps_view,
             }
+            # checkpoint before closing the sync window so a snapshot tick's
+            # staging readbacks land in THIS tick's sync_log delta (honest
+            # per-tick attribution; period=0 keeps steady state untouched)
+            if self.checkpointer is not None:
+                self.checkpointer.after_tick(self)
+            self._finish_tick(t0)
             self.sync_log.append(self.counters["host_syncs"] - syncs0)
             return info
         with self._mesh_ctx():
@@ -886,6 +1057,9 @@ class RecoveryService:
                 res = self._evict(s, "converged" if converged else "budget")
                 evicted.append(res)
                 self._admit_into(s)
+        # under pressure a higher-tier waiting arrival may displace a cold
+        # lower-tier slot (the host mirror of the device preemption pass)
+        self._preempt_host()
         # eviction/admission updated the cached view in place, so the active
         # count never needs a second device readback (the polling-side fix:
         # `done` and `drain()` read the same host-side view)
@@ -899,8 +1073,21 @@ class RecoveryService:
             "loss": self._loss_view,
             "steps": steps,
         }
+        if self.checkpointer is not None:
+            self.checkpointer.after_tick(self)
+        self._finish_tick(t0)
         self.sync_log.append(self.counters["host_syncs"] - syncs0)
         return info
+
+    def _finish_tick(self, t0: float):
+        """Latency accounting: per-tick wall ms, one heartbeat per shard
+        (host path beats a single logical worker), straggler re-check."""
+        dt = time.perf_counter() - t0
+        self.tick_ms.append(dt * 1e3)
+        n_workers = len(self._inflight) or 1
+        for i in range(n_workers):
+            self.registry.beat(f"shard{i}", self.ticks, dt)
+        self.straggler_flags = self.stragglers.check()
 
     def drain(self) -> list[StreamResult]:
         """Completed-stream results accumulated since the last drain.

@@ -259,6 +259,35 @@ def build_parser() -> argparse.ArgumentParser:
         help="set XLA_FLAGS host-platform device count before jax loads (CPU CI)",
     )
     ap.add_argument(
+        "--checkpoint-dir",
+        default=None,
+        help="service snapshot directory (runtime/resilience.py); with "
+        "--checkpoint-period > 0 the service snapshots SlotState + "
+        "ControlState + the warm cache there, async and atomic",
+    )
+    ap.add_argument(
+        "--checkpoint-period",
+        type=int,
+        default=0,
+        help="ticks between service snapshots (0 = checkpointing off; "
+        "requires --checkpoint-dir)",
+    )
+    ap.add_argument(
+        "--chaos-kill-shard",
+        type=int,
+        default=-1,
+        metavar="TICK",
+        help="chaos injection (requires --plan): lose one device at TICK; the "
+        "service supervisor re-plans the slot mesh on the survivors, restores "
+        "the latest snapshot with resharding and re-submits dropped streams",
+    )
+    ap.add_argument(
+        "--max-restarts",
+        type=int,
+        default=4,
+        help="supervised-restart budget for the chaos/recovery path",
+    )
+    ap.add_argument(
         "--tol-factor",
         type=float,
         default=3.0,
@@ -290,6 +319,11 @@ def main() -> int:
             "--control device requires --plan (the control-plane programs are "
             "plan-compiled; the legacy service is host-driven)"
         )
+    if args.chaos_kill_shard >= 0 and not args.plan:
+        raise SystemExit(
+            "--chaos-kill-shard requires --plan (the supervisor recompiles the "
+            "plan on the surviving mesh)"
+        )
 
     # jax loads HERE, after the virtual-device environment is pinned
     from repro import api
@@ -313,6 +347,14 @@ def main() -> int:
         min_steps=args.min_steps,
         max_steps=args.max_steps,
     )
+    ckpt_dir, ckpt_period = args.checkpoint_dir, args.checkpoint_period
+    if args.chaos_kill_shard >= 0:
+        # the chaos path needs snapshots to restore from: default a temp
+        # directory + a 2-tick cadence when the flags don't pin them
+        import tempfile
+
+        ckpt_dir = ckpt_dir or tempfile.mkdtemp(prefix="serve_mr_ckpt_")
+        ckpt_period = ckpt_period or 2
     spec = api.RecoverySpec(
         state_dim=n_state,
         input_dim=n_input,
@@ -337,10 +379,25 @@ def main() -> int:
             control=args.control,
             queue_capacity=args.queue_capacity or max(args.streams, 1),
             snapshot_period=args.snapshot_period,
+            checkpoint_period=ckpt_period,
+            checkpoint_dir=ckpt_dir,
         ),
         mesh_slots=args.mesh,
     )
-    if args.plan:
+    supervisor = None
+    if args.chaos_kill_shard >= 0:
+        from repro.runtime import ServiceSupervisor, kill_shard_once
+
+        supervisor = ServiceSupervisor(
+            spec,
+            ckpt_dir,
+            checkpoint_period=ckpt_period,
+            max_restarts=args.max_restarts,
+            chaos=kill_shard_once(args.chaos_kill_shard),
+        )
+        service = supervisor.service
+        print(f"[serve_mr] plan lowering: {supervisor.plan.lowering}")
+    elif args.plan:
         plan = api.compile_plan(spec, audit=args.audit)
         service = plan.make_service()
         print(f"[serve_mr] plan lowering: {plan.lowering}")
@@ -357,12 +414,35 @@ def main() -> int:
         f"library={cfg.n_terms}x{cfg.state_dim} encoder={args.encoder} "
         f"fused={args.fused} quant={args.quant} mesh={args.mesh if args.plan else 1}"
     )
-    stats = run_service(service, ys, us, args.max_ticks)
-    n_done = len(service.results)
+    if supervisor is not None:
+        t0 = time.time()
+        summary = supervisor.serve(ys, us if n_input else None, max_ticks=args.max_ticks)
+        service = supervisor.service
+        results = summary["results"]
+        stats = {"ticks": summary["ticks"], "wall_s": time.time() - t0}
+        tick_ms = [t for h in supervisor.history for t in h["tick_ms"]]
+        straggler_flags = summary["straggler_flags"]
+        print(
+            f"[serve_mr] chaos: {summary['restarts']} restart(s), final mesh "
+            f"{summary['final_mesh']}, recovered_streams_fraction="
+            f"{summary['recovered_streams_fraction']:.2f}"
+        )
+    else:
+        stats = run_service(service, ys, us, args.max_ticks)
+        results = service.results
+        tick_ms = service.tick_ms
+        straggler_flags = service.straggler_flags
+    n_done = len(results)
     print(
         f"[serve_mr] {n_done}/{args.streams} streams recovered in {stats['ticks']} ticks "
         f"({stats['wall_s']:.1f}s, {stats['ticks'] / max(stats['wall_s'], 1e-9):.1f} ticks/s)"
     )
+    if tick_ms:
+        print(
+            f"[serve_mr] tick latency: p50={float(np.percentile(tick_ms, 50)):.1f}ms "
+            f"p99={float(np.percentile(tick_ms, 99)):.1f}ms; "
+            f"stragglers={','.join(straggler_flags) or 'none'}"
+        )
     if service.sync_log:
         print(
             f"[serve_mr] host boundary ({args.control if args.plan else 'host'} "
@@ -411,7 +491,7 @@ def main() -> int:
     mse_srv, mse_base = [], []
     for i, sysspec in enumerate(specs):
         truth = embed_true_coef(sysspec, n_state, n_input, order)
-        res = service.results[i]
+        res = results[i]
         th_srv = denormalize_theta(
             res.theta, res.mean, res.scale, n_vars=n_vars, order=order, n_state=n_state
         )
@@ -435,7 +515,7 @@ def main() -> int:
     }
     failures = 0
     for i, sysspec in enumerate(specs):
-        res = service.results[i]
+        res = results[i]
         mse_s, mse_b = mse_srv[i], mse_base[i]
         tol = args.tol_factor * med_base[sysspec.name] + args.tol_abs
         ok = mse_s <= tol

@@ -1,12 +1,23 @@
 from repro.runtime.heartbeat import HeartbeatRegistry, StragglerDetector
-from repro.runtime.elastic import plan_mesh, shrink_plan
+from repro.runtime.elastic import plan_mesh, plan_mesh_slots, shrink_plan
 from repro.runtime.supervisor import Supervisor, SimulatedFailure
+from repro.runtime.resilience import (
+    ServiceCheckpointer,
+    ServiceSupervisor,
+    kill_shard_once,
+    replan_spec,
+)
 
 __all__ = [
     "HeartbeatRegistry",
     "StragglerDetector",
     "plan_mesh",
+    "plan_mesh_slots",
     "shrink_plan",
     "Supervisor",
     "SimulatedFailure",
+    "ServiceCheckpointer",
+    "ServiceSupervisor",
+    "kill_shard_once",
+    "replan_spec",
 ]

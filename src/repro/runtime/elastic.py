@@ -61,6 +61,24 @@ def plan_mesh(
     return MeshPlan((data, model_eff), ("data", "model"))
 
 
+def plan_mesh_slots(n_available: int, n_slots: int) -> MeshPlan:
+    """Largest 1-D ``("slots",)`` mesh fitting n_available devices.
+
+    The serving mesh shards the slot axis, so the device count must divide
+    ``n_slots`` (shard_slots requires equal per-shard slot counts). Picks the
+    largest divisor of n_slots that fits — after a shard failure the service
+    restores onto this plan (runtime/resilience.py).
+    """
+    if n_available < 1:
+        raise ValueError("no devices")
+    if n_slots < 1:
+        raise ValueError("no slots")
+    d = min(n_available, n_slots)
+    while n_slots % d:
+        d -= 1
+    return MeshPlan((d,), ("slots",))
+
+
 def shrink_plan(current: MeshPlan, n_failed: int) -> MeshPlan:
     """Re-plan after n_failed devices drop out of the current mesh."""
     return plan_mesh(

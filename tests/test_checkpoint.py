@@ -75,6 +75,24 @@ def test_shape_mismatch_rejected(tmp_path):
         restore_checkpoint(tmp_path, 1, bad)
 
 
+def test_mesh_axes_mismatch_rejected(tmp_path):
+    """A checkpoint written on one set of mesh axes refuses to restore into a
+    plan sharding over DIFFERENT axes — up front, with a clear error, not a
+    shape mismatch deep inside device_put. Matching (or absent) axes pass."""
+    s = _state()
+    mesh = jax.make_mesh((1,), ("data",))
+    save_checkpoint(tmp_path, 2, s, mesh=mesh)
+    like = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), s)
+    with pytest.raises(ValueError, match="mesh axes .* shards over"):
+        restore_checkpoint(tmp_path, 2, like, expect_axes=("slots",))
+    r, _ = restore_checkpoint(tmp_path, 2, like, expect_axes=("data",))
+    assert r is not None
+    # an unsharded save carries no axes and is compatible with anything
+    save_checkpoint(tmp_path, 3, s)
+    r, _ = restore_checkpoint(tmp_path, 3, like, expect_axes=("slots",))
+    assert r is not None
+
+
 def test_async_manager(tmp_path):
     mgr = CheckpointManager(tmp_path, keep=3, save_every=2)
     s = _state()

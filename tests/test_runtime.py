@@ -2,7 +2,9 @@
 
 from __future__ import annotations
 
-from repro.runtime.elastic import plan_mesh, shrink_plan
+import pytest
+
+from repro.runtime.elastic import plan_mesh, plan_mesh_slots, shrink_plan
 from repro.runtime.heartbeat import HeartbeatRegistry, StragglerDetector
 
 
@@ -47,6 +49,141 @@ def test_shrink_plan_drops_data_axis_first():
 def test_plan_mesh_degenerate():
     assert plan_mesh(1).shape == (1, 1)
     assert plan_mesh(3, model=16).shape == (1, 2)  # model shrinks as last resort
+
+
+def test_plan_mesh_slots_largest_divisor():
+    assert plan_mesh_slots(2, 4) == plan_mesh_slots(2, 4)
+    assert plan_mesh_slots(2, 4).shape == (2,)
+    assert plan_mesh_slots(1, 4).shape == (1,)
+    assert plan_mesh_slots(3, 4).shape == (2,)  # 3 doesn't divide 4 -> 2
+    assert plan_mesh_slots(8, 6).shape == (6,)  # capped at n_slots
+    assert plan_mesh_slots(5, 7).shape == (1,)  # prime slots, too few devices
+    assert plan_mesh_slots(4, 4).axes == ("slots",)
+    with pytest.raises(ValueError):
+        plan_mesh_slots(0, 4)
+
+
+def test_service_checkpoint_roundtrip_bitwise(tmp_path):
+    """A restored service replays the failed one's trajectory exactly: every
+    SlotState AND ControlState leaf round-trips bitwise, the tick counter
+    rewinds to the snapshot, and continuation ticks produce identical
+    results on both services (fold_in(key, ticks) replays the randomness)."""
+    import jax
+    import numpy as np
+
+    from repro import api
+    from repro.api import RecoverySpec, TickSpec
+    from repro.core.stream import StreamConfig
+    from repro.data.dynamics import generate_trajectory
+
+    scfg = StreamConfig(
+        buf_len=32,
+        window=8,
+        stride=8,
+        chunk=8,
+        steps_per_tick=8,
+        min_steps=16,
+        max_steps=32,
+        delta_tol=0.0,
+    )
+    spec = RecoverySpec(
+        state_dim=3,
+        input_dim=0,
+        order=2,
+        hidden=8,
+        dense_hidden=16,
+        dt=0.01,
+        mode="stream",
+        n_slots=2,
+        stream=scfg,
+        seed=0,
+        tick=TickSpec(
+            steps_per_tick=8,
+            control="device",
+            queue_capacity=8,
+            snapshot_period=1,
+            warm_capacity=8,
+            checkpoint_period=2,
+            checkpoint_dir=str(tmp_path),
+        ),
+    )
+    _, ys, _ = generate_trajectory("lorenz", n_samples=400, noise_std=0.01, seed=0)
+    ys = ys.astype(np.float32)
+    svc = api.compile_plan(spec).make_service()
+    for sid in range(4):
+        svc.submit(sid, ys[sid : sid + 32])
+    svc.fill_slots()
+    chunk = np.repeat(ys[32:40][None], 2, axis=0)
+    for _ in range(2):
+        svc.tick_once(chunk)
+    svc.checkpointer.wait()
+    assert svc.checkpointer.manager.latest() == 2
+    svc.checkpointer.period = 0  # one writer from here on (svc2 owns the dir)
+
+    svc2 = api.compile_plan(spec).make_service()
+    info = svc2.checkpointer.restore_into(svc2)
+    assert info["step"] == 2
+    assert info["resident"] == {0, 1} and info["queued"] == {2, 3}
+    assert svc2.ticks == svc.ticks == 2
+    for a, b in zip(jax.tree.leaves(svc.state), jax.tree.leaves(svc2.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(svc.control), jax.tree.leaves(svc2.control)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # deterministic replay: the two services stay in lockstep to completion
+    for _ in range(8):
+        i1, i2 = svc.tick_once(chunk), svc2.tick_once(chunk)
+        np.testing.assert_array_equal(i1["steps"], i2["steps"])
+        if svc.done and svc2.done:
+            break
+    assert svc.results.keys() == svc2.results.keys() == {0, 1, 2, 3}
+    for sid in svc.results:
+        np.testing.assert_array_equal(svc.results[sid].theta, svc2.results[sid].theta)
+
+
+def test_service_supervisor_chaos_remesh_subprocess():
+    """The serving chaos drill: a 2-shard device-control service loses one
+    shard mid-stream; the supervisor restores the latest snapshot onto the
+    surviving 1-device plan and every stream still completes."""
+    from conftest import run_devices
+
+    run_devices(
+        """
+        import tempfile
+        import numpy as np
+        from repro.api import RecoverySpec, TickSpec
+        from repro.core.stream import StreamConfig
+        from repro.data.dynamics import generate_trajectory
+        from repro.runtime import ServiceSupervisor, kill_shard_once
+
+        scfg = StreamConfig(buf_len=32, window=8, stride=8, chunk=8,
+                            steps_per_tick=8, min_steps=16, max_steps=32,
+                            delta_tol=0.0)
+        spec = RecoverySpec(
+            state_dim=3, input_dim=0, order=2, hidden=8, dense_hidden=16,
+            dt=0.01, mode="stream", n_slots=4, stream=scfg, seed=0,
+            mesh_slots=2,
+            tick=TickSpec(steps_per_tick=8, control="device",
+                          queue_capacity=8, snapshot_period=1,
+                          warm_capacity=8))
+        n_streams = 6
+        ys = np.stack([
+            generate_trajectory("lorenz", n_samples=400, noise_std=0.01,
+                                seed=i)[1]
+            for i in range(n_streams)
+        ]).astype(np.float32)
+        sup = ServiceSupervisor(spec, tempfile.mkdtemp(),
+                                checkpoint_period=2,
+                                chaos=kill_shard_once(3, n_lost=1))
+        out = sup.serve(ys, max_ticks=60)
+        assert out["restarts"] == 1, out
+        assert out["final_mesh"] == (1,), out
+        assert out["recovered_streams_fraction"] == 1.0, out
+        assert set(out["results"]) == set(range(n_streams))
+        print("PASS")
+        """,
+        n_devices=2,
+        timeout=560,
+    )
 
 
 def test_supervisor_failure_restart_subprocess():

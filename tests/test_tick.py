@@ -424,14 +424,58 @@ def test_device_control_matches_host_queue_lockstep(lorenz):
         )
 
 
-def test_device_queue_overflow_raises(lorenz):
+def test_device_queue_backpressure_typed(lorenz):
+    """Pressure never raises: a full shard ring spills to the bounded host
+    overflow queue (OVERFLOW), a full overflow REJECTs, and overflowed
+    arrivals drain back into the ring (and complete) as capacity frees."""
     svc = api.compile_plan(
-        _control_spec("device", tick=TickSpec(steps_per_tick=8, control="device", queue_capacity=2))
+        _control_spec(
+            "device",
+            tick=TickSpec(
+                steps_per_tick=8, control="device", queue_capacity=2, overflow_capacity=1
+            ),
+        )
     ).make_service()
-    svc.submit(0, lorenz[: CCFG.buf_len])
-    svc.submit(1, lorenz[: CCFG.buf_len])
-    with pytest.raises(RuntimeError, match="admission queue full"):
-        svc.submit(2, lorenz[: CCFG.buf_len])
+    hist = lorenz[: CCFG.buf_len]
+    assert svc.submit(0, hist).status is stream.SubmitStatus.ENQUEUED
+    assert svc.submit(1, hist).status is stream.SubmitStatus.ENQUEUED
+    r2 = svc.submit(2, hist)
+    assert r2.status is stream.SubmitStatus.OVERFLOW and r2.accepted
+    r3 = svc.submit(3, hist)
+    assert r3.status is stream.SubmitStatus.REJECTED and not r3.accepted
+    assert 3 not in svc._pending  # nothing retained for a rejected stream
+    chunk = np.repeat(lorenz[CCFG.buf_len : CCFG.buf_len + CCFG.chunk][None], 2, axis=0)
+    svc.fill_slots()
+    for _ in range(12):
+        if svc.done:
+            break
+        svc.tick_once(chunk)
+    assert set(svc.results) == {0, 1, 2}  # the overflowed stream completed too
+
+
+@pytest.mark.parametrize("control", ["host", "device"])
+def test_priority_preempts_cold_slot(lorenz, control):
+    """A higher-tier arrival displaces the lowest-tier COLD slot (steps <
+    min_steps) on both control planes: the victim re-enters the queue with
+    its live buffers and still completes, so no stream is lost."""
+    svc = api.compile_plan(_control_spec(control)).make_service()
+    hist = lorenz[: CCFG.buf_len]
+    for sid in (0, 1):
+        svc.submit(sid, hist)
+    svc.fill_slots()
+    assert sorted(svc.slot_streams()) == [0, 1]
+    assert svc.submit(2, hist, priority=3).accepted
+    chunk = np.repeat(lorenz[CCFG.buf_len : CCFG.buf_len + CCFG.chunk][None], 2, axis=0)
+    svc.tick_once(chunk)
+    # one tick in, both residents are cold (8 < min_steps=16): victim policy
+    # picks the lowest (tier, slot) — slot 0 — and the tier-3 arrival lands
+    assert svc.slot_streams() == [2, 1]
+    for _ in range(12):
+        if svc.done:
+            break
+        svc.tick_once(chunk)
+    assert set(svc.results) == {0, 1, 2}
+    assert all(r.reason == "budget" for r in svc.results.values())
 
 
 def test_device_queue_ring_wraps(lorenz):
