@@ -79,9 +79,17 @@ def run_smoke() -> int:
     rows, m_stage = bench_stagemap.run_fused_ratio()
     for name, us, derived in rows:
         emit(name, us, derived)
+    rows, m_tuned = bench_stagemap.run_tuned_ratio()
+    for name, us, derived in rows:
+        emit(name, us, derived)
     info = m_stage.pop("info")
+    info["tuner"] = m_tuned.pop("info")
     write_bench_json(
-        REPO_ROOT / "BENCH_stagemap.json", "stagemap", gated=m_stage, info=info, smoke=True
+        REPO_ROOT / "BENCH_stagemap.json",
+        "stagemap",
+        gated={**m_stage, **m_tuned},
+        info=info,
+        smoke=True,
     )
 
     print("# suite: stream (smoke)", flush=True)

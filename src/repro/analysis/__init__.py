@@ -8,7 +8,21 @@
 - ``analysis.audit``: ``audit_plan`` (drives the rules over a compiled
   RecoveryPlan's programs) and the ``python -m repro.analysis.audit
   --matrix`` CLI.
+- ``analysis.tuner``: the measured-cost autotuner — candidate lowerings
+  scored from their own optimized HLO, cached decisions, and the
+  ``python -m repro.analysis.tuner --what-if`` CLI.
+
+``tuner`` is imported lazily (it pulls jax at tune time); the light parse
+surface stays importable without an accelerator runtime.
 """
 
 from repro.analysis.hlo import analyze_module, collective_stats, roofline_terms
 from repro.analysis.rules import RULES, Finding
+
+
+def __getattr__(name):
+    if name in ("tune", "TuneReport", "Candidate", "tune_cache_key", "spec_fingerprint"):
+        from repro.analysis import tuner
+
+        return getattr(tuner, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -356,10 +356,19 @@ def audit_plan(
     if plan.lowering.fused:
         text, T = _fused_step_text(plan)
         family = encoders.get_encoder(cfg.encoder).family
-        band = tiling.residency_tolerance(family)
-        predicted = plan.lowering.vmem_bytes or tiling.config_vmem_bytes(
-            cfg, _fused_batch(plan), block_b=plan.lowering.block_b
-        )
+        if plan.lowering.measured_bytes is not None:
+            # a measured-tuned plan carries the per-step traffic the tuner
+            # parsed from the chosen candidate's own compiled HLO; the audit
+            # re-measures against THAT figure (self-consistency of two parses
+            # of the same program) in the much tighter tuned band, not the
+            # static residency model
+            band = tiling.TUNED_RESIDENCY_BAND
+            predicted = plan.lowering.measured_bytes
+        else:
+            band = tiling.residency_tolerance(family)
+            predicted = plan.lowering.vmem_bytes or tiling.config_vmem_bytes(
+                cfg, _fused_batch(plan), block_b=plan.lowering.block_b
+            )
         run("R2", "fused_step", R.check_residency, text, predicted, T, band, family=family)
         run("R3", "fused_step", R.check_host_transfers, text, host_allowlist)
 

@@ -260,19 +260,49 @@ def _trip_count(op: _Op, comps: dict[str, _Computation]) -> int:
     return best
 
 
+def _dot_lhs_dims(op: _Op, name_type: dict[str, str]) -> list[int]:
+    """The lhs operand's dims, preferring the shape spelled on the dot's line.
+
+    Fusion-interior dots name region parameters whose types collide across
+    computations in the global ``name_type`` map (every fusion calls its
+    region arg ``param_0``); the optimized-HLO printer inlines each operand's
+    type right on the dot line (``dot(f32[4,8,32]{...} %param_0, ...)``), so
+    that spelling — positionally the first shape after the opening paren — is
+    authoritative when present.
+    """
+    paren = op.line.find("(")
+    if paren >= 0:
+        m = _SHAPE_RE.search(op.line, paren)
+        if m:
+            return [int(d) for d in m.group(2).split(",") if d]
+    if op.operands:
+        return _shape_info(name_type.get(op.operands[0], ""))[1]
+    return []
+
+
 def _dot_flops(op: _Op, name_type: dict[str, str]) -> float:
-    """2 * prod(result dims) * prod(contracting dims of lhs)."""
+    """2 * prod(result dims) * prod(lhs contracting dims).
+
+    The result shape already carries the batch dims once (a batched dot's
+    result is [batch..., lhs_free..., rhs_free...]), so only the CONTRACTING
+    dims of the lhs multiply in — any index listed in ``lhs_batch_dims`` is
+    excluded even if an HLO spelling repeats it in the contracting list,
+    which would double-count the batch extent on banked-tick programs.
+    """
     rbytes, rdims = _shape_info(op.result_type)
     n_res = 1
     for d in rdims:
         n_res *= d
+    batch_idx: set[int] = set()
+    mb = re.search(r"lhs_batch_dims=\{([\d,]*)\}", op.line)
+    if mb:
+        batch_idx = {int(i) for i in mb.group(1).split(",") if i}
     contract = 1
     m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
-    if m and op.operands:
-        lhs_t = name_type.get(op.operands[0], "")
-        _, ldims = _shape_info(lhs_t)
+    if m:
+        ldims = _dot_lhs_dims(op, name_type)
         for i in m.group(1).split(","):
-            if i and int(i) < len(ldims):
+            if i and int(i) < len(ldims) and int(i) not in batch_idx:
                 contract *= ldims[int(i)]
     return 2.0 * n_res * contract
 

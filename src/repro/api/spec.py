@@ -143,6 +143,11 @@ class RecoverySpec:
     # plan.lowering.vmem_budget_source records which source was used
     # ("explicit" | "memory_stats" | "platform:<key>" | "default")
     vmem_budget_bytes: int | None = None
+    # scan-unroll factor for the sequential loops of the reference/XLA step
+    # lowering (MRConfig.substep_unroll): 1 = no unrolling (the bitwise
+    # default). compile_plan(tune="static"|"measured") may resolve a larger
+    # factor; the resolved value lands in plan.lowering.substep_unroll.
+    substep_unroll: int = 1
 
     # -- execution ----------------------------------------------------------
     mode: str = "offline"  # "offline" | "batch" | "stream"
@@ -181,6 +186,8 @@ class RecoverySpec:
             raise ValueError(
                 'vmem_budget_bytes requires block_b="auto" (a fixed tile ignores the budget)'
             )
+        if self.substep_unroll < 1:
+            raise ValueError(f"substep_unroll must be >= 1, got {self.substep_unroll}")
         if self.mesh_slots < 1:
             raise ValueError(f"mesh_slots must be >= 1, got {self.mesh_slots}")
         if self.mode == "stream":
@@ -227,9 +234,13 @@ class RecoverySpec:
                 raise ValueError(f"tick= requires mode='stream', got mode={self.mode!r}")
 
     # -- bridges to the legacy config objects --------------------------------
-    def to_mr_config(self, block_b: int | None = None) -> MRConfig:
+    def to_mr_config(
+        self, block_b: int | None = None, substep_unroll: int | None = None
+    ) -> MRConfig:
         """The MRConfig this spec lowers to. ``block_b`` is the RESOLVED tile
-        (compile_plan turns "auto" into an int before building the config)."""
+        (compile_plan turns "auto" into an int before building the config);
+        ``substep_unroll`` likewise overrides the spec's factor when the
+        tuner resolved a different one."""
         if block_b is None and isinstance(self.block_b, int):
             block_b = self.block_b
         return MRConfig(
@@ -248,6 +259,7 @@ class RecoverySpec:
             quant=self.qat,
             fused=self.fused,
             block_b=block_b,
+            substep_unroll=self.substep_unroll if substep_unroll is None else substep_unroll,
         )
 
     def stream_config(self) -> StreamConfig:
@@ -286,5 +298,6 @@ class RecoverySpec:
             qat=cfg.quant,
             fused=cfg.fused,
             block_b=cfg.block_b,
+            substep_unroll=cfg.substep_unroll,
             **overrides,
         )

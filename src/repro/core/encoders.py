@@ -144,7 +144,9 @@ def _encode_gru_kernel(params: GRUParams, cfg, xs: jnp.ndarray, *, flow: bool) -
 
 def _encode_ltc(params, cfg, xs: jnp.ndarray) -> jnp.ndarray:
     h0 = jnp.zeros((xs.shape[0], cfg.hidden), xs.dtype)
-    h_T, _ = ltc_scan(params, xs, h0, dt=cfg.dt, n_substeps=cfg.ltc_substeps)
+    h_T, _ = ltc_scan(
+        params, xs, h0, dt=cfg.dt, n_substeps=cfg.ltc_substeps, unroll=cfg.substep_unroll
+    )
     return h_T
 
 

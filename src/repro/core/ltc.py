@@ -52,10 +52,13 @@ def ltc_cell(
     h: jnp.ndarray,
     dt: float | jnp.ndarray = 1.0,
     n_substeps: int = 6,
+    unroll: int = 1,
 ) -> jnp.ndarray:
     """One LTC time step = n_substeps fused-solver iterations (sequential).
 
-    x: [B, d_in], h: [B, hidden] -> new h [B, hidden].
+    x: [B, d_in], h: [B, hidden] -> new h [B, hidden]. ``unroll`` is the
+    substep-loop unroll factor handed to lax.scan — a pure lowering knob
+    (identical math at any value) the measured-cost autotuner searches over.
     """
     sub_dt = dt / n_substeps
     drive = x @ params.w_in + params.bias  # input part is loop-invariant
@@ -66,7 +69,7 @@ def ltc_cell(
         den = 1.0 + sub_dt * (params.inv_tau + f)  # fused Euler update (14.0%)
         return num / den, None
 
-    h, _ = jax.lax.scan(substep, h, None, length=n_substeps)
+    h, _ = jax.lax.scan(substep, h, None, length=n_substeps, unroll=unroll)
     return h
 
 
@@ -76,11 +79,12 @@ def ltc_scan(
     h0: jnp.ndarray,
     dt: float = 1.0,
     n_substeps: int = 6,
+    unroll: int = 1,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Run the LTC over a sequence. xs: [B, T, d_in] -> (h_T, hs [B, T, H])."""
 
     def body(h, x_t):
-        h = ltc_cell(params, x_t, h, dt=dt, n_substeps=n_substeps)
+        h = ltc_cell(params, x_t, h, dt=dt, n_substeps=n_substeps, unroll=unroll)
         return h, h
 
     h_final, hs = jax.lax.scan(body, h0, jnp.swapaxes(xs, 0, 1))

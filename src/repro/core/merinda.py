@@ -63,6 +63,12 @@ class MRConfig:
     quant: QuantConfig | None = None  # fixed-point QAT when set
     fused: bool = False  # stage-fused per-window step (kernels/mr_step)
     block_b: int | None = None  # fused-stage batch tile (None = full batch)
+    # scan-unroll factor for the sequential loops of the reference/XLA
+    # lowering (LTC/NODE substep scans; the GRU window scan). A pure lowering
+    # knob — identical math at any value — resolved by the measured-cost
+    # autotuner (analysis/tuner.py); the Pallas kernels already unroll their
+    # substep loops in-kernel and ignore it.
+    substep_unroll: int = 1
 
     @property
     def n_terms(self) -> int:

@@ -102,10 +102,14 @@ def gru_scan_ref(
     h0: jnp.ndarray,
     dts: jnp.ndarray | None = None,
     flow: bool = True,
+    unroll: int = 1,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Reference sequence scan (pure lax.scan). xs: [B, T, D] -> (h_T, hs [B,T,H]).
 
-    This is the oracle the Pallas kernel (kernels/gru_scan) is tested against.
+    This is the oracle the Pallas kernel (kernels/gru_scan) is tested
+    against. ``unroll`` is the window-scan unroll factor handed to lax.scan —
+    a pure lowering knob the measured-cost autotuner searches over (the GRU
+    families have no substep loop, so the window scan is their only one).
     """
     T = xs.shape[1]
     if dts is None:
@@ -116,7 +120,7 @@ def gru_scan_ref(
         h = gru_flow_cell(params, x_t, h, dt_t) if flow else gru_cell(params, x_t, h)
         return h, h
 
-    h_final, hs = jax.lax.scan(body, h0, (jnp.swapaxes(xs, 0, 1), dts))
+    h_final, hs = jax.lax.scan(body, h0, (jnp.swapaxes(xs, 0, 1), dts), unroll=unroll)
     return h_final, jnp.swapaxes(hs, 0, 1)
 
 

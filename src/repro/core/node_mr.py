@@ -46,6 +46,7 @@ def node_scan(
     h0: jnp.ndarray,
     dt: float | jnp.ndarray = 1.0,
     n_substeps: int = 6,
+    unroll: int = 1,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """ODE-RNN over a sequence. xs: [B, T, d_in] -> (h_T, hs [B, T, H]).
 
@@ -60,7 +61,13 @@ def node_scan(
 
     def step(h, x_t):
         h = multi_step_solver_cell(
-            field, h, x_t, jnp.asarray(dt, h.dtype), method="euler", n_substeps=n_substeps
+            field,
+            h,
+            x_t,
+            jnp.asarray(dt, h.dtype),
+            method="euler",
+            n_substeps=n_substeps,
+            unroll=unroll,
         )
         h = h + x_t @ params.w_in + params.b_in
         return h, h
@@ -73,5 +80,7 @@ def node_encode(params: NodeEncoderParams, xs: jnp.ndarray, cfg) -> jnp.ndarray:
     """xs: [B, T, d_in] -> h_T [B, hidden]. cfg provides dt and ltc_substeps."""
     B = xs.shape[0]
     h0 = jnp.zeros((B, params.w_f1.shape[0]), xs.dtype)
-    h_T, _ = node_scan(params, xs, h0, dt=cfg.dt, n_substeps=cfg.ltc_substeps)
+    h_T, _ = node_scan(
+        params, xs, h0, dt=cfg.dt, n_substeps=cfg.ltc_substeps, unroll=cfg.substep_unroll
+    )
     return h_T

@@ -84,7 +84,7 @@ def solve_ivp_fixed(
     return odeint(f, y0, ts, us=us, args=args, method=method)
 
 
-@partial(jax.jit, static_argnames=("f", "method", "n_substeps"))
+@partial(jax.jit, static_argnames=("f", "method", "n_substeps", "unroll"))
 def multi_step_solver_cell(
     f: Dynamics,
     y: jnp.ndarray,
@@ -93,12 +93,14 @@ def multi_step_solver_cell(
     args: Any = None,
     method: str = "euler",
     n_substeps: int = 6,
+    unroll: int = 1,
 ) -> jnp.ndarray:
     """One *NODE-style cell forward pass*: N sequential solver sub-steps.
 
     This is the primitive whose cost the paper profiles (Table 1: 87.7% of
     forward latency; 6 sub-steps) and then removes. Each sub-step depends on
-    the previous -> inherently sequential (lax.scan, cannot parallelize).
+    the previous -> inherently sequential (lax.scan, cannot parallelize;
+    ``unroll`` only changes the lowering of the substep loop, not the math).
     """
     step = _STEPPERS[method]
     sub_dt = dt / n_substeps
@@ -107,5 +109,5 @@ def multi_step_solver_cell(
         y = step(f, y, u, i.astype(y.dtype) * sub_dt, sub_dt, args)
         return y, None
 
-    y, _ = jax.lax.scan(body, y, jnp.arange(n_substeps))
+    y, _ = jax.lax.scan(body, y, jnp.arange(n_substeps), unroll=unroll)
     return y

@@ -236,7 +236,11 @@ def mr_step(
         args = (xs, h0, enc.w_in, enc.w_rec, enc.bias, enc.a, enc.inv_tau, w1, b1, w2, b2)
         if reference:
             out = _ref.mr_step_ltc_reference(
-                *args, dt=cfg.dt, n_substeps=cfg.ltc_substeps, act_bits=act_bits
+                *args,
+                dt=cfg.dt,
+                n_substeps=cfg.ltc_substeps,
+                act_bits=act_bits,
+                unroll=cfg.substep_unroll,
             )
         else:
             out = _mr_step_ltc_cvjp(*args, cfg.dt, cfg.ltc_substeps, act_bits, block_b)
@@ -260,7 +264,11 @@ def mr_step(
         )
         if reference:
             out = _ref.mr_step_node_reference(
-                *args, dt=cfg.dt, n_substeps=cfg.ltc_substeps, act_bits=act_bits
+                *args,
+                dt=cfg.dt,
+                n_substeps=cfg.ltc_substeps,
+                act_bits=act_bits,
+                unroll=cfg.substep_unroll,
             )
         else:
             out = _mr_step_node_cvjp(*args, cfg.dt, cfg.ltc_substeps, act_bits, block_b)
@@ -284,6 +292,7 @@ def mr_step(
             b2,
             flow=spec.flow,
             act_bits=act_bits,
+            unroll=cfg.substep_unroll,
         )
     else:
         out = _mr_step_cvjp(

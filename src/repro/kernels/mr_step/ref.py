@@ -39,10 +39,11 @@ def mr_step_reference(
     b2: jnp.ndarray,  # [K]
     flow: bool = True,
     act_bits: tuple[int, int] | None = None,
+    unroll: int = 1,
 ) -> jnp.ndarray:
     """Fused-stage oracle. Returns the raw head output [B, K]."""
     params = GRUParams(w=jnp.concatenate([wx, wh], axis=0), b=b, time_scale=time_scale)
-    h_T, _ = gru_scan_ref(params, xs, h0, dts=dts, flow=flow)
+    h_T, _ = gru_scan_ref(params, xs, h0, dts=dts, flow=flow, unroll=unroll)
     return head_math(h_T, w1, b1, w2, b2, act_bits=act_bits)
 
 
@@ -62,6 +63,7 @@ def mr_step_ltc_reference(
     dt: float = 1.0,
     n_substeps: int = 6,
     act_bits: tuple[int, int] | None = None,
+    unroll: int = 1,
 ) -> jnp.ndarray:
     """Fused multi-substep LTC oracle (semi-implicit fused-solver substeps).
 
@@ -70,7 +72,7 @@ def mr_step_ltc_reference(
     output [B, K].
     """
     params = LTCParams(w_in=w_in, w_rec=w_rec, bias=bias, a=a, inv_tau=inv_tau)
-    h_T, _ = ltc_scan(params, xs, h0, dt=dt, n_substeps=n_substeps)
+    h_T, _ = ltc_scan(params, xs, h0, dt=dt, n_substeps=n_substeps, unroll=unroll)
     return head_math(h_T, w1, b1, w2, b2, act_bits=act_bits)
 
 
@@ -91,6 +93,7 @@ def mr_step_node_reference(
     dt: float = 1.0,
     n_substeps: int = 6,
     act_bits: tuple[int, int] | None = None,
+    unroll: int = 1,
 ) -> jnp.ndarray:
     """Fused multi-substep NODE (ODE-RNN) oracle: fixed-step Euler substeps.
 
@@ -100,7 +103,7 @@ def mr_step_node_reference(
     params = NodeEncoderParams(
         w_f1=w_f1, b_f1=b_f1, w_f2=w_f2, b_f2=b_f2, w_in=w_in, b_in=b_in
     )
-    h_T, _ = node_scan(params, xs, h0, dt=dt, n_substeps=n_substeps)
+    h_T, _ = node_scan(params, xs, h0, dt=dt, n_substeps=n_substeps, unroll=unroll)
     return head_math(h_T, w1, b1, w2, b2, act_bits=act_bits)
 
 

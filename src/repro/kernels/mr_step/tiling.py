@@ -113,6 +113,16 @@ def residency_tolerance(family: str) -> tuple[float, float]:
     return RESIDENCY_BANDS.get(family, RESIDENCY_BANDS["gru"])
 
 
+# R2 band for a MEASURED-tuned plan: the tuner stamped the parsed per-step
+# traffic of the chosen candidate's own compiled HLO into
+# ``plan.lowering.measured_bytes``, so the audit re-measures against that
+# figure instead of the static residency model. Self-consistency of two
+# parses of the same program tolerates only lowering drift (batch geometry of
+# the audited program vs the tuned one), hence much tighter than the
+# per-family model bands above.
+TUNED_RESIDENCY_BAND: tuple[float, float] = (0.5, 2.0)
+
+
 def vmem_bytes(
     B: int,
     D: int,
@@ -273,6 +283,27 @@ def config_vmem_bytes(cfg, batch: int, *, block_b: int | None = None, n_seg: int
     )
 
 
+def block_b_candidates(batch: int | None, *, min_block: int = 8) -> list[int | None]:
+    """Every legal batch tile for ``batch``, largest residency first.
+
+    The SHARED candidate enumeration behind both lowering paths: the static
+    heuristic (:func:`auto_block_b`) and the measured-cost autotuner
+    (``analysis/tuner.py``) walk this exact list, so the two can never
+    disagree about which tiles exist. ``None`` (full batch, no tiling) leads;
+    the proper divisors >= ``min_block`` follow in descending order; divisors
+    BELOW ``min_block`` trail as a degraded tail — they are legal (kernel.py
+    only asserts divisibility) but waste lane occupancy, so they are only
+    reached when nothing larger exists (the non-power-of-two batches whose
+    divisor ladder skips the [min_block, batch) range entirely, e.g.
+    batch=12 with min_block=8).
+    """
+    if batch is None or batch < 1:
+        return [None]
+    preferred = [d for d in range(batch - 1, min_block - 1, -1) if batch % d == 0]
+    degraded = [d for d in range(min(min_block, batch) - 1, 0, -1) if batch % d == 0]
+    return [None, *preferred, *degraded]
+
+
 def auto_block_b(
     cfg,
     batch: int | None,
@@ -283,24 +314,32 @@ def auto_block_b(
 ) -> int | None:
     """Largest batch tile whose fused-stage residency fits the VMEM budget.
 
-    Walks the proper divisors of ``batch`` from largest to smallest (down to
-    ``min_block``) — the tile must divide the batch exactly (kernel.py
-    asserts ``B % block_b == 0``) — and returns the first one that fits.
-    ``None`` (= full batch, no tiling) when no budget is configured OR the
-    batch is unknown at compile time OR the full batch already fits; the
-    smallest legal divisor when nothing fits, so a too-tight budget degrades
-    to maximum tiling instead of failing.
+    Walks :func:`block_b_candidates` — full batch first, then the proper
+    divisors of ``batch`` from largest to smallest (the tile must divide the
+    batch exactly; kernel.py asserts ``B % block_b == 0``) — and returns the
+    FIRST (largest) candidate that fits, so the choice is order-independent
+    of how the divisors were generated. ``None`` (= full batch, no tiling)
+    when no budget is configured OR the batch is unknown at compile time OR
+    the full batch already fits. When nothing fits, the smallest enumerated
+    tile is returned — including the sub-``min_block`` divisors of
+    non-power-of-two batches (batch=12 has no divisor >= 8; the old walk
+    returned None = full batch there even with the budget blown) — so a
+    too-tight budget degrades to maximum tiling instead of failing.
     """
     if vmem_budget_bytes is None or batch is None:
         return None  # documented fallback: full batch
-    if config_vmem_bytes(cfg, batch, block_b=None, n_seg=n_seg) <= vmem_budget_bytes:
-        return None
-    divisors = [d for d in range(min_block, batch) if batch % d == 0]
-    for bb in reversed(divisors):
+    candidates = block_b_candidates(batch, min_block=min_block)
+    for bb in candidates:
         if config_vmem_bytes(cfg, batch, block_b=bb, n_seg=n_seg) <= vmem_budget_bytes:
-            return bb  # largest fitting divisor: first hit walking downward
-    # nothing fits: the smallest legal tile is the best we can do
-    return divisors[0] if divisors else None
+            return bb  # largest fitting tile: first hit walking downward
+    # nothing fits: maximum tiling — the smallest preferred divisor, or the
+    # LARGEST degraded one (smaller only shrinks occupancy, not residency
+    # headroom, once below min_block)
+    preferred = [bb for bb in candidates if bb is not None and bb >= min_block]
+    if preferred:
+        return preferred[-1]
+    degraded = [bb for bb in candidates if bb is not None]
+    return degraded[0] if degraded else None
 
 
 # ---------------------------------------------------------------------------
@@ -347,22 +386,35 @@ def tick_vmem_bytes(cfg, scfg, *, slots_per_bank: int = 1, int8: bool = False, n
     return vm
 
 
+def slots_per_bank_candidates(n_slots: int) -> list[int]:
+    """Every legal bank size for ``n_slots``, largest residency first.
+
+    The shared enumeration behind :func:`auto_slots_per_bank` and the
+    measured-cost autotuner's tick-stage search (``analysis/tuner.py``):
+    the divisors of ``n_slots`` from all-in-one-bank down to 1.
+    """
+    if n_slots < 1:
+        return []
+    return sorted((d for d in range(1, n_slots + 1) if n_slots % d == 0), reverse=True)
+
+
 def auto_slots_per_bank(
     cfg, scfg, n_slots: int, vmem_budget_bytes: int | None, *, int8: bool = False
 ) -> int:
     """Largest divisor of ``n_slots`` whose banked-tick residency fits.
 
-    Walks the divisor bank sizes from largest (all slots in one bank — no
-    grid streaming at all) down to 1; returns 0 when even a single slot's
-    working set exceeds the budget — the caller (``compile_plan`` resolving
-    ``tick_kernel="auto"``) falls back to the composite tick then. With no
-    budget configured the full slot set is one bank, mirroring auto_block_b.
+    Walks :func:`slots_per_bank_candidates` from largest (all slots in one
+    bank — no grid streaming at all) down to 1; returns 0 when even a single
+    slot's working set exceeds the budget — the caller (``compile_plan``
+    resolving ``tick_kernel="auto"``) falls back to the composite tick then.
+    With no budget configured the full slot set is one bank, mirroring
+    auto_block_b.
     """
     if n_slots < 1:
         return 0
     if vmem_budget_bytes is None:
         return n_slots
-    for bank in sorted((d for d in range(1, n_slots + 1) if n_slots % d == 0), reverse=True):
+    for bank in slots_per_bank_candidates(n_slots):
         if tick_vmem_bytes(cfg, scfg, slots_per_bank=bank, int8=int8) <= vmem_budget_bytes:
             return bank
     return 0

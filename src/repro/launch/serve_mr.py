@@ -253,6 +253,15 @@ def build_parser() -> argparse.ArgumentParser:
         "warn prints findings, error refuses to serve a violating plan",
     )
     ap.add_argument(
+        "--tune",
+        choices=("off", "static", "measured"),
+        default="off",
+        help="measured-cost autotuning of the plan's lowering (requires --plan; "
+        "analysis/tuner.py): 'static' records the candidate table through the "
+        "VMEM model, 'measured' lowers + scores every candidate and caches "
+        "the decision on disk (warm recompiles pay zero search cost)",
+    )
+    ap.add_argument(
         "--virtual-devices",
         type=int,
         default=0,
@@ -309,6 +318,8 @@ def main() -> int:
         raise SystemExit("--mesh requires --plan (the sharded service is plan-compiled)")
     if args.audit != "off" and not args.plan:
         raise SystemExit("--audit requires --plan (only compiled plans are auditable)")
+    if args.tune != "off" and not args.plan:
+        raise SystemExit("--tune requires --plan (only compiled plans are tunable)")
     if args.tick_kernel != "composite" and not args.plan:
         raise SystemExit(
             "--tick-kernel requires --plan (the tick program is plan-compiled; "
@@ -398,7 +409,7 @@ def main() -> int:
         service = supervisor.service
         print(f"[serve_mr] plan lowering: {supervisor.plan.lowering}")
     elif args.plan:
-        plan = api.compile_plan(spec, audit=args.audit)
+        plan = api.compile_plan(spec, audit=args.audit, tune=args.tune)
         service = plan.make_service()
         print(f"[serve_mr] plan lowering: {plan.lowering}")
     else:

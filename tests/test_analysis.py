@@ -34,6 +34,26 @@ def test_scan_equals_unroll_flops():
     assert got["scan"] == got["unroll"] == expect, got
 
 
+def test_dot_flops_counts_batch_dims_once():
+    """Batched dot: flops = 2 * prod(result dims) * prod(contracting dims).
+
+    The batch dims already appear in the result-shape product, so the lhs
+    contracting product must EXCLUDE lhs_batch_dims — re-multiplying them
+    overcounts by the batch size. Hand-computed einsum cases, one and two
+    batch dims."""
+    a = jnp.zeros((4, 3, 5), jnp.float32)
+    b = jnp.zeros((4, 5, 7), jnp.float32)
+    txt = jax.jit(lambda x, y: jnp.einsum("bij,bjk->bik", x, y)).lower(a, b).compile().as_text()
+    assert analyze_module(txt, 1).flops == 2 * (4 * 3 * 7) * 5
+
+    a = jnp.zeros((2, 3, 4, 5), jnp.float32)
+    b = jnp.zeros((2, 3, 5, 6), jnp.float32)
+    txt = (
+        jax.jit(lambda x, y: jnp.einsum("abij,abjk->abik", x, y)).lower(a, b).compile().as_text()
+    )
+    assert analyze_module(txt, 1).flops == 2 * (2 * 3 * 4 * 6) * 5
+
+
 def test_nested_scan_trip_product():
     def f(x, w):
         def outer(c, _):

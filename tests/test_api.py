@@ -305,6 +305,31 @@ def test_auto_block_b_walks_divisors_not_halvings():
     assert tiling.auto_block_b(cfg, 50, budget) == 10
 
 
+def test_auto_block_b_prefers_largest_fitting_divisor():
+    from repro.kernels.mr_step import tiling
+
+    cfg = small_spec(fused=True).to_mr_config()
+    # batch=48 ladder: None, 24, 16, 12, 8. Budget fits a 16-row tile but
+    # not 24 — the walk must stop at 16, never settle for a smaller divisor
+    budget = tiling.config_vmem_bytes(cfg, 48, block_b=16)
+    assert tiling.config_vmem_bytes(cfg, 48, block_b=24) > budget
+    assert tiling.auto_block_b(cfg, 48, budget) == 16
+
+
+def test_auto_block_b_non_power_of_two_batch_reaches_small_divisors():
+    from repro.kernels.mr_step import tiling
+
+    cfg = small_spec(fused=True).to_mr_config()
+    # batch=12 has NO divisor in [min_block=8, 12): the old walk enumerated
+    # an empty ladder and returned None (= full batch) even with the budget
+    # blown; the shared block_b_candidates ladder now carries the degraded
+    # sub-min_block tail, so a 6-row tile that fits is found
+    assert tiling.block_b_candidates(12) == [None, 6, 4, 3, 2, 1]
+    budget = tiling.config_vmem_bytes(cfg, 12, block_b=6)
+    assert tiling.config_vmem_bytes(cfg, 12) > budget
+    assert tiling.auto_block_b(cfg, 12, budget) == 6
+
+
 def test_vmem_model_matches_bench_stagemap():
     from benchmarks.bench_stagemap import _vmem_bytes
     from repro.kernels.mr_step import tiling
